@@ -1,0 +1,75 @@
+//! K-medoids clustering with trikmeds: the paper's §4 application.
+//!
+//! Clusters a Birch-like 2-d dataset with trikmeds-ε for ε ∈ {0, 0.01,
+//! 0.1}, reporting distance computations relative to the Θ(N²) KMEDS
+//! baseline and the loss cost of the relaxation (paper Table 2's φ
+//! columns), then verifies trikmeds-0 ≡ KMEDS on a subsample.
+//!
+//! Run: `cargo run --release --example clustering`
+
+use trimed::data::synthetic::birch_grid;
+use trimed::kmedoids::trikmeds::TrikmedsInit;
+use trimed::kmedoids::{kmeds, trikmeds, uniform_init, KmedsOpts, TrikmedsOpts};
+use trimed::metric::{Counted, MetricSpace, VectorMetric};
+
+fn main() {
+    let n = 20_000;
+    let k = 100; // one per Birch grid cell
+    let pts = birch_grid(n, 3);
+    println!("== trikmeds on Birch-like data: N={n}, K={k} ==\n");
+
+    let mut base_loss = 0.0;
+    let mut base_dists = 0;
+    for eps in [0.0, 0.01, 0.1] {
+        let m = Counted::new(VectorMetric::new(pts.clone()));
+        let t0 = std::time::Instant::now();
+        let r = trikmeds(
+            &m,
+            &TrikmedsOpts { k, init: TrikmedsInit::Uniform(1), eps, max_iters: 100 },
+        );
+        let c = m.counts().dists;
+        if eps == 0.0 {
+            base_loss = r.loss;
+            base_dists = c;
+        }
+        println!(
+            "trikmeds-{eps:<5}: loss={:.2} (φ_E={:.3})  dists={} (φ_c={:.2}, {:.4} of N²)  iters={} wall={:.1?}",
+            r.loss,
+            r.loss / base_loss,
+            c,
+            c as f64 / base_dists as f64,
+            c as f64 / (n as f64 * n as f64),
+            r.iterations,
+            t0.elapsed()
+        );
+    }
+    println!(
+        "\nKMEDS would need N² = {} distances up front (and Θ(N²) memory).",
+        (n as u64) * (n as u64)
+    );
+
+    // Exactness check on a subsample small enough for the N² baseline.
+    let n_small = 2_000;
+    let small = birch_grid(n_small, 5);
+    let init = uniform_init(n_small, 20, 9);
+    let m = VectorMetric::new(small);
+    let a = trikmeds(
+        &m,
+        &TrikmedsOpts { k: 20, init: TrikmedsInit::Given(init), eps: 0.0, max_iters: 100 },
+    );
+    let b = kmeds(&m, &KmedsOpts { k: 20, uniform_seed: Some(9), max_iters: 100 });
+    assert!(
+        (a.loss - b.loss).abs() < 1e-9,
+        "trikmeds-0 must equal KMEDS: {} vs {}",
+        a.loss,
+        b.loss
+    );
+    println!("\nverified: trikmeds-0 loss == KMEDS loss ({:.4}) on an N={n_small} subsample", a.loss);
+    let sizes = a.cluster_sizes(20);
+    println!(
+        "cluster sizes: min={} max={} (N/K = {})",
+        sizes.iter().min().unwrap(),
+        sizes.iter().max().unwrap(),
+        n_small / 20
+    );
+}

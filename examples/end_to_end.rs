@@ -1,0 +1,126 @@
+//! End-to-end driver: exercises every layer of the stack on a real small
+//! workload and reports the paper's headline metric (computed elements /
+//! distance calculations vs the baselines). Recorded in EXPERIMENTS.md.
+//!
+//! Pipeline proven here:
+//!   L1/L2 (build time): Pallas distance kernel + JAX model, AOT-lowered
+//!     to HLO text by `make artifacts`;
+//!   runtime: Rust loads + compiles the artifacts via PJRT and uses them
+//!     as trimed's one-to-all backend;
+//!   L3: the trimed coordinator, TOPRANK baselines, graph substrate with
+//!     Dijkstra, and the trikmeds clustering loop.
+//!
+//! Run: `make artifacts && cargo run --release --example end_to_end`
+
+use trimed::algo::{scan_medoid, toprank, trimed_medoid, trimed_with_opts, TopRankOpts, TrimedOpts};
+use trimed::data::synthetic::{border_map, uniform_cube};
+use trimed::graph::generators::sensor_net;
+use trimed::graph::GraphMetric;
+use trimed::kmedoids::trikmeds::TrikmedsInit;
+use trimed::kmedoids::{trikmeds, TrikmedsOpts};
+use trimed::metric::{Counted, MetricSpace, VectorMetric, XlaVectorMetric};
+use trimed::runtime::{artifacts_available, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    println!("================ trimed end-to-end driver ================\n");
+    let t_all = std::time::Instant::now();
+
+    // ---- stage 1: vector medoid, native vs XLA backends ----------------
+    let n = 30_000;
+    let pts = uniform_cube(n, 2, 2024);
+    println!("[1/4] exact medoid, N={n} uniform 2-d");
+    let native = Counted::new(VectorMetric::new(pts.clone()));
+    let t0 = std::time::Instant::now();
+    let r_nat = trimed_medoid(&native, 0);
+    println!(
+        "  native  : medoid={} E={:.6} computed={} ({:.1?})",
+        r_nat.medoid,
+        r_nat.energy,
+        native.counts().one_to_all,
+        t0.elapsed()
+    );
+
+    anyhow::ensure!(
+        artifacts_available(),
+        "artifacts/ missing — run `make artifacts` first"
+    );
+    let rt = Runtime::open_default()?;
+    let xla = Counted::new(XlaVectorMetric::new(&rt, pts.clone())?);
+    let t0 = std::time::Instant::now();
+    let r_xla = trimed_with_opts(
+        &xla,
+        &TrimedOpts { slack: 1e-4 * n as f64, ..Default::default() },
+    );
+    println!(
+        "  xla/pjrt: medoid={} E={:.6} computed={} ({:.1?})  [AOT JAX+Pallas kernel]",
+        r_xla.medoid,
+        r_xla.energy,
+        xla.counts().one_to_all,
+        t0.elapsed()
+    );
+    anyhow::ensure!(
+        (r_xla.energy - r_nat.energy).abs() < 1e-3,
+        "backends disagree beyond f32 tolerance"
+    );
+
+    // ---- stage 2: headline metric vs baselines (Table 1 shape) ---------
+    println!("\n[2/4] computed-elements comparison (paper's headline metric)");
+    let border = border_map(20_000, 8, 7);
+    let m = Counted::new(VectorMetric::new(border));
+    let r = trimed_medoid(&m, 1);
+    let tri = m.counts().one_to_all;
+    m.reset();
+    let tr = toprank(&m, &TopRankOpts::default());
+    let top = m.counts().one_to_all;
+    anyhow::ensure!(tr.medoid == r.medoid, "TOPRANK found a different medoid");
+    println!("  Europe-like border map, N=20000:");
+    println!("    trimed  computed {tri:>6} elements");
+    println!("    TOPRANK computed {top:>6} elements  ({:.1}x more)", top as f64 / tri as f64);
+
+    // ---- stage 3: graph substrate (Dijkstra one-to-all) -----------------
+    println!("\n[3/4] spatial network medoid (Dijkstra metric)");
+    let sg = sensor_net(15_000, 1.5, false, 5);
+    let gm = Counted::new(GraphMetric::new(sg.graph));
+    let t0 = std::time::Instant::now();
+    let rg = trimed_medoid(&gm, 3);
+    println!(
+        "  sensor net N={}: central node {} (E={:.4}), {} Dijkstras ({:.1?})",
+        gm.len(),
+        rg.medoid,
+        rg.energy,
+        gm.counts().one_to_all,
+        t0.elapsed()
+    );
+    anyhow::ensure!((gm.counts().one_to_all as usize) < gm.len() / 4, "elimination ineffective");
+
+    // ---- stage 4: trikmeds clustering (Table 2 shape) -------------------
+    println!("\n[4/4] trikmeds clustering, K=⌈√N⌉");
+    let n2 = 10_000;
+    let pts2 = uniform_cube(n2, 2, 77);
+    let k = (n2 as f64).sqrt().ceil() as usize;
+    let mc = Counted::new(VectorMetric::new(pts2));
+    let t0 = std::time::Instant::now();
+    let rc = trikmeds(
+        &mc,
+        &TrikmedsOpts { k, init: TrikmedsInit::Uniform(0), eps: 0.01, max_iters: 100 },
+    );
+    let frac = mc.counts().dists as f64 / (n2 as f64 * n2 as f64);
+    println!(
+        "  N={n2} K={k}: loss={:.2}, {} dists = {:.3} of KMEDS's N² ({:.1?}, {} iters)",
+        rc.loss,
+        mc.counts().dists,
+        frac,
+        t0.elapsed(),
+        rc.iterations
+    );
+    anyhow::ensure!(frac < 0.5, "trikmeds must beat N²");
+
+    // ---- verification against ground truth ------------------------------
+    let scan = scan_medoid(&native);
+    anyhow::ensure!(scan.medoid == r_nat.medoid, "exactness violated");
+    println!(
+        "\nall stages verified — total wall time {:.1?}",
+        t_all.elapsed()
+    );
+    Ok(())
+}

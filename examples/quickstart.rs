@@ -1,0 +1,79 @@
+//! Quickstart: find the exact medoid of a 2-d point cloud with trimed,
+//! compare against the O(N²) scan, and (if `make artifacts` has run) do
+//! the same over the XLA/PJRT runtime executing the AOT-compiled
+//! JAX+Pallas distance kernel.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use trimed::algo::{scan_medoid, trimed_medoid, trimed_with_opts, TrimedOpts};
+use trimed::data::synthetic::uniform_cube;
+use trimed::metric::{Counted, MetricSpace, VectorMetric, XlaVectorMetric};
+use trimed::runtime::{artifacts_available, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let n = 20_000;
+    let pts = uniform_cube(n, 2, 42);
+    println!("== trimed quickstart: N={n}, d=2, uniform cube ==\n");
+
+    // --- native backend -------------------------------------------------
+    let metric = Counted::new(VectorMetric::new(pts.clone()));
+    let t0 = std::time::Instant::now();
+    let tri = trimed_medoid(&metric, 0);
+    let tri_time = t0.elapsed();
+    let tri_counts = metric.counts();
+
+    metric.reset();
+    let t0 = std::time::Instant::now();
+    let scan = scan_medoid(&metric);
+    let scan_time = t0.elapsed();
+    let scan_counts = metric.counts();
+
+    println!("scan   : medoid={:<6} E={:.6}  computed={:<6} ({:.1?})", scan.medoid, scan.energy, scan_counts.one_to_all, scan_time);
+    println!("trimed : medoid={:<6} E={:.6}  computed={:<6} ({:.1?})", tri.medoid, tri.energy, tri_counts.one_to_all, tri_time);
+    assert_eq!(tri.medoid, scan.medoid, "trimed is exact (Thm 3.1)");
+    println!(
+        "trimed computed {:.1}x fewer elements ({} vs {}; sqrt(N) = {:.0})\n",
+        scan_counts.one_to_all as f64 / tri_counts.one_to_all as f64,
+        tri_counts.one_to_all,
+        scan_counts.one_to_all,
+        (n as f64).sqrt()
+    );
+
+    // --- ε-relaxation ----------------------------------------------------
+    for eps in [0.01, 0.1] {
+        let m = Counted::new(VectorMetric::new(pts.clone()));
+        let r = trimed_with_opts(&m, &TrimedOpts { eps, ..Default::default() });
+        println!(
+            "trimed-ε (ε={eps:<4}): E={:.6} (≤ {:.6} guaranteed)  computed={}",
+            r.energy,
+            scan.energy * (1.0 + eps),
+            m.counts().one_to_all
+        );
+    }
+
+    // --- XLA backend ------------------------------------------------------
+    if artifacts_available() {
+        println!("\n== same search over the XLA/PJRT runtime (AOT JAX+Pallas kernel) ==");
+        let rt = Runtime::open_default()?;
+        let xm = Counted::new(XlaVectorMetric::new(&rt, pts)?);
+        let t0 = std::time::Instant::now();
+        let r = trimed_with_opts(
+            &xm,
+            &TrimedOpts { slack: 1e-4 * xm.len() as f64, ..Default::default() },
+        );
+        println!(
+            "xla    : medoid={:<6} E={:.6}  computed={:<6} ({:.1?})",
+            r.medoid,
+            r.energy,
+            xm.counts().one_to_all,
+            t0.elapsed()
+        );
+        assert!(
+            (scan.energies[r.medoid] - scan.energy).abs() < 1e-3,
+            "XLA medoid within f32 tolerance of the optimum"
+        );
+    } else {
+        println!("\n(artifacts/ missing — run `make artifacts` to try the XLA backend)");
+    }
+    Ok(())
+}

@@ -1,0 +1,117 @@
+"""AOT pipeline: lower the Layer-2 model to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); Python never runs again after
+this. The interchange format is HLO text, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits, per (op, N_pad, d) variant:
+    artifacts/<op>_n<N>_d<D>.hlo.txt
+plus `artifacts/manifest.tsv` describing every artifact for the Rust
+runtime registry (`rust/src/runtime/registry.rs`).
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Variant grid. N_pad values are multiples of TILE; the runtime picks the
+# smallest variant that fits and tail-pads. d covers the paper's vector
+# experiments (2..6 for Fig. 3/4, 9/50 for Table 2's Colormo/MNIST50).
+N_PADS = (4096, 16384, 65536)
+DIMS = (2, 3, 4, 5, 6, 9, 50)
+# A tiny variant so tests exercise the full path quickly.
+SMOKE = (512, 2)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def cpu_tile(n_pad: int) -> int:
+    """Grid tile for the CPU-PJRT target: a single grid step.
+
+    This XLA CPU copies every loop-carried input on each grid step (≈0.5 ms
+    + bytes/step measured; EXPERIMENTS.md §Perf), so the fastest CPU
+    schedule is grid=1. For a real TPU target this function would return a
+    VMEM-sized tile (8192 rows ⇒ 1.6 MB at d=50 f32) instead — the kernel
+    itself is tile-parametric.
+    """
+    return n_pad
+
+
+def lower_one_to_all(n_pad: int, d: int) -> str:
+    spec_pts = jax.ShapeDtypeStruct((n_pad, d), jnp.float32)
+    spec_q = jax.ShapeDtypeStruct((d,), jnp.float32)
+    spec_1 = jax.ShapeDtypeStruct((1,), jnp.float32)
+    fn = functools.partial(model.one_to_all, tile=cpu_tile(n_pad))
+    lowered = jax.jit(fn).lower(spec_q, spec_pts, spec_1)
+    return to_hlo_text(lowered)
+
+
+def lower_trimed_step(n_pad: int, d: int) -> str:
+    spec_pts = jax.ShapeDtypeStruct((n_pad, d), jnp.float32)
+    spec_q = jax.ShapeDtypeStruct((d,), jnp.float32)
+    spec_n = jax.ShapeDtypeStruct((n_pad,), jnp.float32)
+    spec_1 = jax.ShapeDtypeStruct((1,), jnp.float32)
+    fn = functools.partial(model.trimed_step, tile=cpu_tile(n_pad))
+    lowered = jax.jit(fn).lower(spec_q, spec_pts, spec_n, spec_1, spec_1)
+    return to_hlo_text(lowered)
+
+
+OPS = {
+    "one_to_all": lower_one_to_all,
+    "trimed_step": lower_trimed_step,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--smoke-only",
+        action="store_true",
+        help="emit only the tiny smoke variant (fast CI path)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    variants = [SMOKE] if args.smoke_only else [SMOKE] + [
+        (n, d) for n in N_PADS for d in DIMS
+    ]
+
+    rows = []
+    for op, lower in OPS.items():
+        for n_pad, d in variants:
+            name = f"{op}_n{n_pad}_d{d}"
+            path = os.path.join(args.out, f"{name}.hlo.txt")
+            text = lower(n_pad, d)
+            with open(path, "w") as f:
+                f.write(text)
+            rows.append((name, op, n_pad, d, cpu_tile(n_pad), f"{name}.hlo.txt"))
+            print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# name\top\tn_pad\td\ttile\tfile\n")
+        for r in rows:
+            f.write("\t".join(str(x) for x in r) + "\n")
+    print(f"wrote {manifest} ({len(rows)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Layer-1 Pallas kernel: trimed lower-bound update (paper Alg. 1 line 13).
+
+Element-wise over the N lower bounds:
+
+    l_new(j) = max(l(j), |S_i - N_true * d(j)|)
+
+where S_i is the computed element's distance sum and d(j) its distance to
+element j. Pure VPU work, tiled like the distance kernel so the two fuse
+into one artifact in the L2 model.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .distance import TILE
+
+
+def _bound_kernel(l_ref, d_ref, s_ref, n_ref, o_ref):
+    l = l_ref[...]                        # (TILE, 1)
+    d = d_ref[...]                        # (TILE, 1)
+    s = s_ref[0, 0]                       # scalar: computed element's sum
+    n = n_ref[0, 0]                       # scalar: true (unpadded) N
+    o_ref[...] = jnp.maximum(l, jnp.abs(s - n * d))
+
+
+def bound_update(lb, dists, s, n_true, *, tile=TILE, interpret=True):
+    """Tightened bounds, shape (N,) float32.
+
+    `lb`, `dists`: (N,); `s`, `n_true`: (1,) scalars-as-arrays (kept as
+    arrays so the AOT artifact has a stable input signature for the Rust
+    runtime).
+    """
+    n = lb.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"N={n} not a multiple of tile={tile}")
+    out = pl.pallas_call(
+        _bound_kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(
+        lb.reshape(n, 1).astype(jnp.float32),
+        dists.reshape(n, 1).astype(jnp.float32),
+        s.reshape(1, 1).astype(jnp.float32),
+        n_true.reshape(1, 1).astype(jnp.float32),
+    )
+    return out[:, 0]

@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel: tiled one-to-all Euclidean distance.
+
+The trimed hot-spot — "compute element i" — is a one-query-to-all-points
+distance scan. On TPU the natural formulation is the MXU decomposition
+
+    ||p - q||^2 = ||p||^2 - 2 p.q + ||q||^2
+
+where the `p.q` term is a (TILE, d) x (d, 1) matmul feeding the systolic
+array, and the point matrix streams HBM -> VMEM one (TILE, d) block per
+grid step via BlockSpec. This is the hardware adaptation of the paper's
+CPU inner loop (DESIGN.md "Hardware adaptation note").
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of the point matrix processed per grid step. 512 x d f32 keeps the
+# working set tiny relative to VMEM (512*784*4 B = 1.6 MB even at d=784).
+TILE = 512
+
+
+def _dist_kernel(q_ref, p_ref, o_ref):
+    """One (TILE, d) block: distances from the block's points to q."""
+    p = p_ref[...]                       # (TILE, d)   VMEM block
+    q = q_ref[...]                       # (1, d)      broadcast to all blocks
+    pq = p @ q.T                         # (TILE, 1)   MXU matmul
+    d2 = (
+        jnp.sum(p * p, axis=1, keepdims=True)
+        - 2.0 * pq
+        + jnp.sum(q * q)
+    )
+    # Cancellation in f32 can push tiny true distances slightly negative.
+    o_ref[...] = jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def one_to_all_dists(query, points, *, tile=TILE, interpret=True):
+    """Distances from `query` (d,) to every row of `points` (N, d).
+
+    N must be a multiple of `tile` (the AOT pipeline pads datasets).
+    Returns shape (N,) float32.
+    """
+    n, d = points.shape
+    if n % tile != 0:
+        raise ValueError(f"N={n} not a multiple of tile={tile}")
+    out = pl.pallas_call(
+        _dist_kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(query.reshape(1, d).astype(jnp.float32), points.astype(jnp.float32))
+    return out[:, 0]

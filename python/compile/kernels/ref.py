@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Deliberately written with the numerically *different* direct formulation
+(difference-then-square rather than the MXU norm decomposition), so the
+pytest comparison exercises real numerics, not a copy of the kernel.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_one_to_all(query, points):
+    """sqrt(sum((p - q)^2)) per row; (N,) float32."""
+    diff = points.astype(jnp.float32) - query.astype(jnp.float32)[None, :]
+    return jnp.sqrt(jnp.sum(diff * diff, axis=1))
+
+
+def ref_bound_update(lb, dists, s, n_true):
+    """max(l, |S - N*d|) element-wise; (N,) float32."""
+    return jnp.maximum(
+        lb.astype(jnp.float32),
+        jnp.abs(s.astype(jnp.float32)[0] - n_true.astype(jnp.float32)[0] * dists.astype(jnp.float32)),
+    )
+
+
+def ref_energy_sum(query, points, pad_count):
+    """Distance sum corrected for `pad_count` trailing pad rows (all pads
+    are copies of the final row, as the AOT pipeline guarantees)."""
+    d = ref_one_to_all(query, points)
+    return jnp.sum(d) - pad_count.astype(jnp.float32)[0] * d[-1]

@@ -1,0 +1,56 @@
+"""Layer-2 JAX model: the computations the Rust coordinator executes.
+
+Each function here composes the Layer-1 Pallas kernels into the exact unit
+of work trimed dispatches per "computed element", and is AOT-lowered by
+`aot.py` into one HLO-text artifact per (N_pad, d) variant.
+
+Padding contract with the Rust runtime (`rust/src/metric/xla_vector.rs`):
+datasets are padded to the artifact's N_pad with copies of the *last real
+row*; `pad_count` rows at the tail are pads. The distance sum is corrected
+inside the graph (`S = sum(d) - pad_count * d[-1]`, exact because every pad
+is identical to the last row), so the Rust side gets the true sum without a
+second pass. `n_true` (the unpadded N) scales the bound update.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.bound import bound_update
+from .kernels.distance import one_to_all_dists
+
+
+def one_to_all(query, points, pad_count, *, tile=None):
+    """Distances from `query` to all rows plus the corrected sum.
+
+    Args:
+      query: (d,) f32.
+      points: (N_pad, d) f32, tail-padded.
+      pad_count: (1,) f32.
+      tile: Pallas grid tile (static). The kernel is tile-parametric; the
+        AOT pipeline picks the tile per backend — `N_pad` (one grid step)
+        for CPU-PJRT, where this XLA version copies loop-carried inputs on
+        every grid step (~0.5 ms + bytes/step, see EXPERIMENTS.md §Perf),
+        vs. a VMEM-sized 8192 for a real TPU schedule.
+
+    Returns `(dists (N_pad,), sum (1,))`.
+
+    Note: an unused `n_true` argument would be DCE'd out of the lowered
+    HLO signature, so this op takes exactly the three inputs it uses.
+    """
+    kw = {} if tile is None else {"tile": tile}
+    dists = one_to_all_dists(query, points, **kw)
+    s = jnp.sum(dists) - pad_count[0] * dists[-1]
+    return dists, s.reshape(1)
+
+
+def trimed_step(query, points, lb, n_true, pad_count, *, tile=None):
+    """The full trimed inner step (Alg. 1 lines 5-13) as one graph.
+
+    Computes the element (distances + sum) and tightens all lower bounds,
+    so the Rust hot loop is a single PJRT execute per computed element.
+
+    Returns `(dists (N_pad,), sum (1,), lb_new (N_pad,))`.
+    """
+    kw = {} if tile is None else {"tile": tile}
+    dists, s = one_to_all(query, points, pad_count, **kw)
+    lb_new = bound_update(lb, dists, s, n_true, **kw)
+    return dists, s, lb_new

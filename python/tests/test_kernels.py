@@ -1,0 +1,103 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dimensions and value scales; every case asserts
+allclose against `ref.py`, which uses the numerically different direct
+formulation.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bound import bound_update
+from compile.kernels.distance import one_to_all_dists
+from compile.kernels.ref import ref_bound_update, ref_energy_sum, ref_one_to_all
+
+# Small tile so hypothesis cases stay fast; the kernel is tile-agnostic.
+T = 8
+
+
+def _rand_points(rng, n, d, scale):
+    return (rng.standard_normal((n, d)) * scale).astype(np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    tiles=st.integers(1, 6),
+    d=st.integers(1, 64),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_distance_kernel_matches_ref(tiles, d, scale, seed):
+    rng = np.random.default_rng(seed)
+    pts = _rand_points(rng, tiles * T, d, scale)
+    q = _rand_points(rng, 1, d, scale)[0]
+    got = one_to_all_dists(jnp.array(q), jnp.array(pts), tile=T)
+    want = ref_one_to_all(jnp.array(q), jnp.array(pts))
+    # atol floor: MXU norm-decomposition cancellation near zero distances
+    # scales with sqrt(eps_f32) * ||p|| (documented in distance.py).
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2 * scale * np.sqrt(d))
+
+
+def test_distance_to_self_is_zero():
+    rng = np.random.default_rng(0)
+    pts = _rand_points(rng, 4 * T, 3, 1.0)
+    q = pts[7]
+    got = np.asarray(one_to_all_dists(jnp.array(q), jnp.array(pts), tile=T))
+    assert got[7] == pytest.approx(0.0, abs=1e-3)
+
+
+def test_distance_rejects_unaligned_n():
+    pts = jnp.zeros((T + 1, 2), jnp.float32)
+    with pytest.raises(ValueError):
+        one_to_all_dists(jnp.zeros(2, jnp.float32), pts, tile=T)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    tiles=st.integers(1, 6),
+    s=st.floats(0.0, 1e4),
+    n_true=st.integers(1, 100_000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bound_kernel_matches_ref(tiles, s, n_true, seed):
+    rng = np.random.default_rng(seed)
+    n = tiles * T
+    lb = (rng.random(n) * 10).astype(np.float32)
+    d = (rng.random(n) * 3).astype(np.float32)
+    s_arr = np.array([s], np.float32)
+    n_arr = np.array([n_true], np.float32)
+    got = bound_update(jnp.array(lb), jnp.array(d), jnp.array(s_arr), jnp.array(n_arr), tile=T)
+    want = ref_bound_update(jnp.array(lb), jnp.array(d), jnp.array(s_arr), jnp.array(n_arr))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_bound_kernel_monotone():
+    """Updated bounds never decrease."""
+    rng = np.random.default_rng(3)
+    n = 4 * T
+    lb = (rng.random(n) * 5).astype(np.float32)
+    d = (rng.random(n)).astype(np.float32)
+    got = np.asarray(
+        bound_update(
+            jnp.array(lb),
+            jnp.array(d),
+            jnp.array([2.0], dtype=jnp.float32),
+            jnp.array([10.0], dtype=jnp.float32),
+            tile=T,
+        )
+    )
+    assert (got >= lb - 1e-6).all()
+
+
+def test_pad_correction_oracle():
+    """ref_energy_sum removes pad contributions exactly."""
+    rng = np.random.default_rng(5)
+    real = _rand_points(rng, 3 * T - 4, 4, 1.0)
+    pad = np.repeat(real[-1:], 4, axis=0)
+    padded = np.concatenate([real, pad], axis=0)
+    q = _rand_points(rng, 1, 4, 1.0)[0]
+    s_padded = ref_energy_sum(jnp.array(q), jnp.array(padded), jnp.array([4.0], jnp.float32))
+    s_true = float(ref_one_to_all(jnp.array(q), jnp.array(real)).sum())
+    assert float(s_padded) == pytest.approx(s_true, rel=1e-4)

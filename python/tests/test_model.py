@@ -1,0 +1,75 @@
+"""Layer-2 correctness: the composed model functions the artifacts freeze."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.distance import TILE
+from compile.kernels.ref import ref_bound_update, ref_energy_sum, ref_one_to_all
+
+
+def _padded_set(rng, n_real, n_pad, d, scale=1.0):
+    real = (rng.standard_normal((n_real, d)) * scale).astype(np.float32)
+    pad = np.repeat(real[-1:], n_pad - n_real, axis=0)
+    return real, np.concatenate([real, pad], axis=0)
+
+
+def test_one_to_all_shapes_and_sum():
+    rng = np.random.default_rng(1)
+    n_real, n_pad, d = 700, 2 * TILE, 3
+    real, padded = _padded_set(rng, n_real, n_pad, d)
+    q = real[13]
+    dists, s = model.one_to_all(
+        jnp.array(q),
+        jnp.array(padded),
+        jnp.array([float(n_pad - n_real)], jnp.float32),
+    )
+    assert dists.shape == (n_pad,)
+    assert s.shape == (1,)
+    want = float(ref_one_to_all(jnp.array(q), jnp.array(real)).sum())
+    assert float(s[0]) == pytest.approx(want, rel=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 16))
+def test_trimed_step_consistent_with_refs(seed, d):
+    rng = np.random.default_rng(seed)
+    n_real = int(rng.integers(TILE // 2, 2 * TILE - 1))
+    n_pad = 2 * TILE
+    real, padded = _padded_set(rng, n_real, n_pad, d)
+    q = real[int(rng.integers(0, n_real))]
+    lb = (rng.random(n_pad) * 2).astype(np.float32)
+    n_arr = jnp.array([float(n_real)], jnp.float32)
+    p_arr = jnp.array([float(n_pad - n_real)], jnp.float32)
+    dists, s, lb_new = model.trimed_step(
+        jnp.array(q), jnp.array(padded), jnp.array(lb), n_arr, p_arr
+    )
+    s_ref = ref_energy_sum(jnp.array(q), jnp.array(padded), p_arr)
+    np.testing.assert_allclose(float(s[0]), float(s_ref), rtol=1e-3, atol=1e-2)
+    # atol floor: the MXU norm-decomposition loses ~sqrt(eps_f32 * ||p||^2)
+    # of absolute accuracy near zero distances (documented in distance.py).
+    d_ref = ref_one_to_all(jnp.array(q), jnp.array(padded))
+    np.testing.assert_allclose(dists, d_ref, rtol=1e-3, atol=1e-2 * np.sqrt(d))
+    lb_ref = ref_bound_update(jnp.array(lb), d_ref, s.reshape(1), n_arr)
+    np.testing.assert_allclose(lb_new, lb_ref, rtol=1e-3, atol=1e-2)
+
+
+def test_trimed_step_bound_soundness_on_real_rows():
+    """Updated bounds stay below true sums for the unpadded elements."""
+    rng = np.random.default_rng(7)
+    n_real, n_pad, d = TILE, 2 * TILE, 2
+    real, padded = _padded_set(rng, n_real, n_pad, d)
+    lb = np.zeros(n_pad, np.float32)
+    n_arr = jnp.array([float(n_real)], jnp.float32)
+    p_arr = jnp.array([float(n_pad - n_real)], jnp.float32)
+    # True sums over the real rows.
+    true_s = np.array(
+        [float(ref_one_to_all(jnp.array(real[j]), jnp.array(real)).sum()) for j in range(n_real)]
+    )
+    cur = jnp.array(lb)
+    for qi in [0, 5, 11]:
+        _, _, cur = model.trimed_step(jnp.array(real[qi]), jnp.array(padded), cur, n_arr, p_arr)
+    got = np.asarray(cur)[:n_real]
+    assert (got <= true_s + 1e-1).all(), (got - true_s).max()

@@ -1,0 +1,24 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! * §5.1.3 — RAND's ε-budget vs trimed's exact cost;
+//! * SM-C   — TOPRANK's α′ threshold constant;
+//! * §3     — trimed's visiting-order shuffle.
+//!
+//! Run: cargo bench --bench bench_ablations
+
+use trimed::harness::{experiments, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    for (id, f) in [
+        ("rand-quality", experiments::ablation_rand_quality as fn(Scale, u64) -> _),
+        ("alpha-prime", experiments::ablation_alpha_prime),
+        ("order", experiments::ablation_order),
+    ] {
+        let t0 = std::time::Instant::now();
+        let table = f(scale, 0);
+        println!("{}", table.to_markdown());
+        println!("[ablation {id} @ {scale:?} completed in {:.1?}]\n", t0.elapsed());
+        let _ = std::fs::create_dir_all("results");
+        let _ = table.save_tsv(std::path::Path::new("results").join(format!("ablation_{id}.tsv")).as_path());
+    }
+}

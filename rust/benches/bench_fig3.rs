@@ -1,0 +1,21 @@
+//! Regenerates the paper's fig3 (see harness::experiments::fig3).
+//! Scale via TRIMED_SCALE=small|medium|full (default medium).
+//!
+//! Run: cargo bench --bench bench_fig3
+
+use trimed::harness::{experiments, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t0 = std::time::Instant::now();
+    let table = experiments::fig3(scale, 0);
+    println!("{}", table.to_markdown());
+    println!("[bench_fig3 @ {scale:?} completed in {:.1?}]", t0.elapsed());
+    let _ = std::fs::create_dir_all("results");
+    let path = std::path::Path::new("results").join("fig3.tsv");
+    if let Err(e) = table.save_tsv(&path) {
+        eprintln!("warning: could not save {path:?}: {e}");
+    } else {
+        println!("[saved results/fig3.tsv]");
+    }
+}

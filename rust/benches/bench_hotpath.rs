@@ -1,0 +1,87 @@
+//! Hot-path microbenchmarks (ours, not a paper artifact): the per-layer
+//! numbers behind EXPERIMENTS.md §Perf.
+//!
+//! * native one-to-all distance scan throughput (L3 hot loop) across d;
+//! * XLA/PJRT one-to-all dispatch (the AOT JAX+Pallas kernel) across d;
+//! * Dijkstra one-to-all on a road network (graph hot loop);
+//! * end-to-end trimed wall time, native vs XLA backends.
+//!
+//! Run: cargo bench --bench bench_hotpath
+
+use trimed::algo::{trimed_medoid, trimed_with_opts, TrimedOpts};
+use trimed::data::synthetic::uniform_cube;
+use trimed::graph::dijkstra::dijkstra_all;
+use trimed::graph::generators::road_network;
+use trimed::harness::bench::{fmt_ns, time_block};
+use trimed::metric::{MetricSpace, VectorMetric, XlaVectorMetric};
+use trimed::runtime::{artifacts_available, Runtime};
+
+fn main() {
+    let n = 50_000;
+    println!("== hot path microbenchmarks (N={n}) ==\n");
+
+    // L3 native one-to-all scan.
+    for d in [2usize, 6, 50] {
+        let pts = uniform_cube(n, d, 1);
+        let m = VectorMetric::new(pts);
+        let mut out = vec![0.0; n];
+        let stats = time_block(3, 20, || m.one_to_all(12345, &mut out));
+        let bytes = (n * d * 8) as f64;
+        println!(
+            "native one_to_all d={d:<3}: {}  ({:.2} GB/s effective, {:.1} Mdist/s)",
+            stats.summary(),
+            bytes / stats.median_ns,
+            n as f64 / stats.median_ns * 1e3
+        );
+    }
+
+    // XLA dispatch (if artifacts built).
+    if artifacts_available() {
+        let rt = Runtime::open_default().expect("runtime");
+        for d in [2usize, 6, 50] {
+            let nx = 50_000usize; // fits the 65536 artifact
+            let pts = uniform_cube(nx, d, 2);
+            let xm = XlaVectorMetric::new(&rt, pts).expect("xla metric");
+            let mut out = vec![0.0; nx];
+            let stats = time_block(2, 10, || xm.one_to_all(7, &mut out));
+            println!(
+                "xla    one_to_all d={d:<3}: {}  ({:.1} Mdist/s incl. dispatch)",
+                stats.summary(),
+                nx as f64 / stats.median_ns * 1e3
+            );
+        }
+    } else {
+        println!("xla    one_to_all: skipped (run `make artifacts`)");
+    }
+
+    // Graph hot loop.
+    {
+        let sg = road_network(160, 160, 0.9, 3);
+        let g = sg.graph;
+        let nn = g.num_nodes();
+        let mut out = vec![0.0; nn];
+        let stats = time_block(2, 10, || dijkstra_all(&g, 0, &mut out));
+        println!(
+            "dijkstra one_to_all N={nn}: {}  ({:.2} Mnode/s)",
+            stats.summary(),
+            nn as f64 / stats.median_ns * 1e3
+        );
+    }
+
+    // End-to-end trimed.
+    println!();
+    {
+        let pts = uniform_cube(n, 2, 5);
+        let m = VectorMetric::new(pts.clone());
+        let stats = time_block(1, 5, || trimed_medoid(&m, 9));
+        println!("trimed native N={n} d=2  : {} per full medoid search", fmt_ns(stats.median_ns));
+        if artifacts_available() {
+            let rt = Runtime::open_default().expect("runtime");
+            let xm = XlaVectorMetric::new(&rt, pts).expect("xla metric");
+            let stats = time_block(1, 3, || {
+                trimed_with_opts(&xm, &TrimedOpts { seed: 9, slack: 1e-4 * n as f64, ..Default::default() })
+            });
+            println!("trimed xla    N={n} d=2  : {} per full medoid search", fmt_ns(stats.median_ns));
+        }
+    }
+}

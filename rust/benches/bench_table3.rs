@@ -1,0 +1,21 @@
+//! Regenerates the paper's table3 (see harness::experiments::table3).
+//! Scale via TRIMED_SCALE=small|medium|full (default medium).
+//!
+//! Run: cargo bench --bench bench_table3
+
+use trimed::harness::{experiments, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t0 = std::time::Instant::now();
+    let table = experiments::table3(scale, 0);
+    println!("{}", table.to_markdown());
+    println!("[bench_table3 @ {scale:?} completed in {:.1?}]", t0.elapsed());
+    let _ = std::fs::create_dir_all("results");
+    let path = std::path::Path::new("results").join("table3.tsv");
+    if let Err(e) = table.save_tsv(&path) {
+        eprintln!("warning: could not save {path:?}: {e}");
+    } else {
+        println!("[saved results/table3.tsv]");
+    }
+}

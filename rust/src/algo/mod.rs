@@ -1,0 +1,39 @@
+//! Medoid algorithms: the paper's `trimed` plus every baseline it is
+//! evaluated against, and the 1-d / tree special-case oracles.
+
+pub mod quickselect;
+pub mod rand_est;
+pub mod scan;
+pub mod toprank;
+pub mod tree;
+pub mod trimed;
+
+pub use quickselect::medoid_1d;
+pub use rand_est::{rand_energies, RandResult};
+pub use scan::{scan_medoid, ScanResult};
+pub use toprank::{toprank, toprank2, TopRankOpts, TopRankResult};
+pub use tree::tree_medoid;
+pub use trimed::{trimed_medoid, trimed_topk, trimed_with_opts, TrimedOpts, TrimedResult};
+
+/// Result common to all medoid algorithms.
+#[derive(Clone, Debug)]
+pub struct MedoidResult {
+    /// Index of the returned medoid (exact for scan/trimed; w.h.p. for
+    /// TOPRANK/TOPRANK2).
+    pub medoid: usize,
+    /// Its energy, the paper's E = Σ_{j≠i} dist(i,j) / (N−1).
+    pub energy: f64,
+    /// One-to-all passes performed ("computed elements", the paper's n̂).
+    pub computed: u64,
+}
+
+/// Convert a distance-sum over all N elements into the paper's energy
+/// (mean over the other N−1 elements).
+#[inline]
+pub(crate) fn sum_to_energy(sum: f64, n: usize) -> f64 {
+    if n <= 1 {
+        0.0
+    } else {
+        sum / (n - 1) as f64
+    }
+}

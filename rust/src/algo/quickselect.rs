@@ -1,0 +1,123 @@
+//! Θ(N) exact medoid for 1-d data via Quickselect (Hoare 1961) — the
+//! special case the paper cites in §1.1 where sub-quadratic (indeed
+//! linear) medoid computation is classical.
+//!
+//! In 1-d the element minimising the summed absolute deviations is a
+//! median element; for even N both middle elements minimise it, and we
+//! compare their exact sums (two O(N) passes) to break the tie.
+
+use crate::rng::Rng;
+
+/// In-place quickselect: returns the value of the `k`-th smallest element
+/// (0-based) of `xs`, partially reordering `xs`.
+pub fn quickselect(xs: &mut [f64], k: usize, rng: &mut Rng) -> f64 {
+    assert!(k < xs.len());
+    let (mut lo, mut hi) = (0usize, xs.len());
+    loop {
+        if hi - lo == 1 {
+            return xs[lo];
+        }
+        // Random pivot (expected linear time).
+        let p = xs[lo + rng.below(hi - lo)];
+        // Three-way partition around p.
+        let (mut lt, mut i, mut gt) = (lo, lo, hi);
+        while i < gt {
+            if xs[i] < p {
+                xs.swap(lt, i);
+                lt += 1;
+                i += 1;
+            } else if xs[i] > p {
+                gt -= 1;
+                xs.swap(i, gt);
+            } else {
+                i += 1;
+            }
+        }
+        if k < lt {
+            hi = lt;
+        } else if k < gt {
+            return p;
+        } else {
+            lo = gt;
+        }
+    }
+}
+
+/// Exact 1-d medoid: index of the element minimising Σ_j |x_i − x_j|.
+/// Runs in expected Θ(N). Ties broken toward the lower index.
+pub fn medoid_1d(xs: &[f64], seed: u64) -> usize {
+    assert!(!xs.is_empty());
+    let n = xs.len();
+    let mut rng = Rng::new(seed);
+    let mut buf = xs.to_vec();
+    if n % 2 == 1 {
+        let med = quickselect(&mut buf, n / 2, &mut rng);
+        return index_of(xs, med);
+    }
+    // Even N: both middle order statistics minimise the sum; compare.
+    let lo_med = quickselect(&mut buf, n / 2 - 1, &mut rng);
+    let mut buf2 = xs.to_vec();
+    let hi_med = quickselect(&mut buf2, n / 2, &mut rng);
+    let sum_at = |v: f64| xs.iter().map(|x| (x - v).abs()).sum::<f64>();
+    let (slo, shi) = (sum_at(lo_med), sum_at(hi_med));
+    let (i_lo, i_hi) = (index_of(xs, lo_med), index_of(xs, hi_med));
+    if slo < shi || (slo == shi && i_lo < i_hi) {
+        i_lo
+    } else {
+        i_hi
+    }
+}
+
+fn index_of(xs: &[f64], v: f64) -> usize {
+    xs.iter().position(|&x| x == v).expect("value came from xs")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::scan_medoid;
+    use crate::data::Points;
+    use crate::metric::VectorMetric;
+    use crate::rng::Rng;
+
+    #[test]
+    fn quickselect_matches_sort() {
+        let mut rng = Rng::new(1);
+        for trial in 0..50 {
+            let n = 1 + rng.below(40);
+            let xs: Vec<f64> = (0..n).map(|_| rng.range(-5.0, 5.0)).collect();
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for k in [0, n / 3, n / 2, n - 1] {
+                let mut buf = xs.clone();
+                assert_eq!(quickselect(&mut buf, k, &mut rng), sorted[k], "trial {trial} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn medoid_1d_matches_scan() {
+        let mut rng = Rng::new(2);
+        for trial in 0..30 {
+            let n = 2 + rng.below(60);
+            let xs: Vec<f64> = (0..n).map(|_| rng.range(-3.0, 3.0)).collect();
+            let m = VectorMetric::new(Points::new(1, xs.clone()));
+            let s = scan_medoid(&m);
+            let q = medoid_1d(&xs, trial);
+            // Energies must agree (tie-sets allowed).
+            let e = |i: usize| xs.iter().map(|x| (x - xs[i]).abs()).sum::<f64>();
+            assert!(
+                (e(q) - e(s.medoid)).abs() < 1e-9,
+                "trial {trial}: quickselect medoid {q} vs scan {}",
+                s.medoid
+            );
+        }
+    }
+
+    #[test]
+    fn handles_duplicates() {
+        let xs = vec![1.0, 1.0, 1.0, 5.0];
+        let i = medoid_1d(&xs, 0);
+        assert!(xs[i] == 1.0);
+    }
+}

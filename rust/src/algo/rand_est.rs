@@ -1,0 +1,115 @@
+//! RAND (Eppstein & Wang 2004, paper Alg. 3): estimate every element's
+//! energy from a uniform sample of anchor elements.
+
+use crate::metric::MetricSpace;
+use crate::rng::Rng;
+
+/// Output of a RAND estimation pass.
+#[derive(Clone, Debug)]
+pub struct RandResult {
+    /// Estimated energies Ê(j) = N/(|I|(N−1)) Σ_{i∈I} dist(x(j), x(i)).
+    pub est_energies: Vec<f64>,
+    /// Anchor indices used.
+    pub anchors: Vec<usize>,
+    /// Diameter upper bound Δ̂ = 2·min_{i∈I} max_j dist(x(j), x(i)).
+    pub delta_hat: f64,
+    /// One-to-all passes performed (== anchors.len()).
+    pub computed: u64,
+}
+
+/// Run RAND with `l` anchors sampled uniformly without replacement.
+///
+/// Each anchor costs one one-to-all pass (a reverse Dijkstra on directed
+/// graphs, since Ê needs dist(x(j), x(i)) for all j).
+pub fn rand_energies<M: MetricSpace>(metric: &M, l: usize, seed: u64) -> RandResult {
+    let n = metric.len();
+    assert!(n > 0);
+    let l = l.clamp(1, n);
+    let mut rng = Rng::new(seed);
+    let anchors = rng.sample_without_replacement(n, l);
+
+    let mut sums = vec![0.0f64; n];
+    let mut row = vec![0.0f64; n];
+    let mut delta_hat = f64::INFINITY;
+    for &a in &anchors {
+        metric.all_to_one(a, &mut row);
+        let mut maxd = 0.0f64;
+        for (s, &d) in sums.iter_mut().zip(row.iter()) {
+            *s += d;
+            if d > maxd {
+                maxd = d;
+            }
+        }
+        delta_hat = delta_hat.min(2.0 * maxd);
+    }
+    let scale = n as f64 / (l as f64 * (n.max(2) - 1) as f64);
+    let est_energies: Vec<f64> = sums.iter().map(|s| s * scale).collect();
+    RandResult { est_energies, anchors, delta_hat, computed: l as u64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::scan_medoid;
+    use crate::data::synthetic::uniform_cube;
+    use crate::metric::{Counted, VectorMetric};
+
+    #[test]
+    fn all_anchors_gives_exact_energies() {
+        let m = VectorMetric::new(uniform_cube(100, 2, 1));
+        let r = rand_energies(&m, 100, 0);
+        let s = scan_medoid(&m);
+        for (a, b) in r.est_energies.iter().zip(&s.energies) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn estimates_close_with_many_anchors() {
+        let m = VectorMetric::new(uniform_cube(500, 2, 2));
+        let r = rand_energies(&m, 250, 3);
+        let s = scan_medoid(&m);
+        let max_err = r
+            .est_energies
+            .iter()
+            .zip(&s.energies)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        // Hoeffding: with half the set as anchors the error is small
+        // relative to the diameter (~sqrt(2)).
+        assert!(max_err < 0.15, "max_err {max_err}");
+    }
+
+    #[test]
+    fn delta_hat_upper_bounds_diameter() {
+        let m = VectorMetric::new(uniform_cube(200, 3, 4));
+        let r = rand_energies(&m, 20, 5);
+        let mut true_diam = 0.0f64;
+        for i in 0..200 {
+            for j in 0..200 {
+                true_diam = true_diam.max(m.inner_dist(i, j));
+            }
+        }
+        assert!(r.delta_hat >= true_diam - 1e-12);
+        assert!(r.delta_hat <= 2.0 * true_diam + 1e-12);
+    }
+
+    #[test]
+    fn computed_counter_matches() {
+        let m = Counted::new(VectorMetric::new(uniform_cube(300, 2, 6)));
+        let r = rand_energies(&m, 17, 7);
+        assert_eq!(r.computed, 17);
+        assert_eq!(m.counts().one_to_all, 17);
+    }
+
+    // Helper to reach VectorMetric::dist through the test above.
+    trait InnerDist {
+        fn inner_dist(&self, i: usize, j: usize) -> f64;
+    }
+    impl InnerDist for VectorMetric {
+        fn inner_dist(&self, i: usize, j: usize) -> f64 {
+            use crate::metric::MetricSpace;
+            self.dist(i, j)
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Exhaustive Θ(N²) medoid scan — the exactness oracle for everything else.
+
+use super::sum_to_energy;
+use crate::metric::MetricSpace;
+
+/// Result of the exhaustive scan.
+#[derive(Clone, Debug)]
+pub struct ScanResult {
+    /// Index of the medoid (ties broken toward the lower index).
+    pub medoid: usize,
+    /// Medoid energy, E = Σ dist / (N−1).
+    pub energy: f64,
+    /// Energy of every element, same normalisation.
+    pub energies: Vec<f64>,
+}
+
+/// Compute every element's energy and return the exact medoid.
+pub fn scan_medoid<M: MetricSpace>(metric: &M) -> ScanResult {
+    let n = metric.len();
+    assert!(n > 0, "empty set has no medoid");
+    let mut out = vec![0.0; n];
+    let mut energies = Vec::with_capacity(n);
+    let mut best = (0usize, f64::INFINITY);
+    for i in 0..n {
+        metric.one_to_all(i, &mut out);
+        let sum: f64 = out.iter().sum();
+        let e = sum_to_energy(sum, n);
+        energies.push(e);
+        if e < best.1 {
+            best = (i, e);
+        }
+    }
+    ScanResult { medoid: best.0, energy: best.1, energies }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::uniform_cube;
+    use crate::data::Points;
+    use crate::metric::{Counted, VectorMetric};
+
+    #[test]
+    fn singleton() {
+        let m = VectorMetric::new(Points::new(1, vec![7.0]));
+        let r = scan_medoid(&m);
+        assert_eq!(r.medoid, 0);
+        assert_eq!(r.energy, 0.0);
+    }
+
+    #[test]
+    fn line_medoid_is_median() {
+        let m = VectorMetric::new(Points::new(1, vec![0.0, 10.0, 4.0, 5.0, 6.0]));
+        let r = scan_medoid(&m);
+        assert_eq!(r.medoid, 3); // 5.0 is the median
+    }
+
+    #[test]
+    fn computes_exactly_n_elements() {
+        let m = Counted::new(VectorMetric::new(uniform_cube(64, 2, 3)));
+        let _ = scan_medoid(&m);
+        assert_eq!(m.counts().one_to_all, 64);
+        assert_eq!(m.counts().dists, 64 * 64);
+    }
+}

@@ -1,0 +1,251 @@
+//! TOPRANK and TOPRANK2 (Okamoto et al. 2008; paper Algs. 4–5): the
+//! state-of-the-art *approximate* medoid baselines trimed is compared to.
+//!
+//! Both run RAND to estimate energies, keep every element whose estimate
+//! lies below a Hoeffding threshold, and compute exact energies of the
+//! survivors. TOPRANK uses a fixed anchor count `Θ(N^{2/3} log^{1/3} N)`;
+//! TOPRANK2 grows the anchor set until the survivor set stops shrinking.
+
+use super::rand_est::rand_energies;
+use super::sum_to_energy;
+use crate::metric::MetricSpace;
+use crate::rng::Rng;
+
+/// Options shared by TOPRANK and TOPRANK2.
+#[derive(Clone, Debug)]
+pub struct TopRankOpts {
+    /// The paper's α′ threshold constant. Theory wants α′ > 1 (see SM-C/D);
+    /// the paper's experiments use α′ = 1.0, which we default to.
+    pub alpha_prime: f64,
+    /// Scale factor `q` on the anchor-count (SM-C.1); paper uses 1.
+    pub q_scale: f64,
+    /// Rank depth: k = 1 is the medoid problem.
+    pub k: usize,
+    /// RNG seed for anchor sampling.
+    pub seed: u64,
+}
+
+impl Default for TopRankOpts {
+    fn default() -> Self {
+        TopRankOpts { alpha_prime: 1.0, q_scale: 1.0, k: 1, seed: 0 }
+    }
+}
+
+/// Result of TOPRANK / TOPRANK2.
+#[derive(Clone, Debug)]
+pub struct TopRankResult {
+    /// Element with lowest exact energy among survivors (w.h.p. the true
+    /// medoid; for k > 1 see `topk`).
+    pub medoid: usize,
+    /// Its exact energy.
+    pub energy: f64,
+    /// The k best survivors, ascending by exact energy.
+    pub topk: Vec<usize>,
+    /// Total one-to-all passes: anchors + exact pass (the paper's n̂).
+    pub computed: u64,
+    /// Anchor passes only.
+    pub anchors: u64,
+    /// Survivor-set size (exact passes).
+    pub survivors: u64,
+}
+
+/// Exact energies for a candidate set; returns (best index, best energy,
+/// ranked list, energies by candidate position).
+fn exact_pass<M: MetricSpace>(metric: &M, candidates: &[usize], k: usize) -> (Vec<usize>, Vec<f64>) {
+    let n = metric.len();
+    let mut row = vec![0.0f64; n];
+    let mut ranked: Vec<(f64, usize)> = Vec::with_capacity(candidates.len());
+    for &c in candidates {
+        metric.one_to_all(c, &mut row);
+        let e = sum_to_energy(row.iter().sum(), n);
+        ranked.push((e, c));
+    }
+    ranked.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let kk = k.min(ranked.len());
+    (
+        ranked[..kk].iter().map(|&(_, c)| c).collect(),
+        ranked[..kk].iter().map(|&(e, _)| e).collect(),
+    )
+}
+
+/// TOPRANK (paper Alg. 4).
+pub fn toprank<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult {
+    let n = metric.len();
+    assert!(n > 0 && opts.k >= 1);
+    let nf = n as f64;
+    let ln_n = nf.ln().max(1.0);
+    // l = q · N^{2/3} (log N)^{1/3}, clamped to N.
+    let l = ((opts.q_scale * nf.powf(2.0 / 3.0) * ln_n.powf(1.0 / 3.0)).ceil() as usize).clamp(1, n);
+
+    let rand = rand_energies(metric, l, opts.seed);
+    let mut est_sorted = rand.est_energies.clone();
+    est_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let e_k = est_sorted[opts.k - 1];
+    let threshold = e_k + 2.0 * opts.alpha_prime * rand.delta_hat * (ln_n / l as f64).sqrt();
+
+    let survivors: Vec<usize> =
+        (0..n).filter(|&i| rand.est_energies[i] <= threshold).collect();
+    let (topk, energies) = exact_pass(metric, &survivors, opts.k);
+    TopRankResult {
+        medoid: topk[0],
+        energy: energies[0],
+        topk,
+        computed: rand.computed + survivors.len() as u64,
+        anchors: rand.computed,
+        survivors: survivors.len() as u64,
+    }
+}
+
+/// TOPRANK2 (paper Alg. 5): grow the anchor set by `q = ln N` at a time
+/// until one round eliminates fewer than `ln N` additional candidates,
+/// then do the exact pass on the survivors.
+///
+/// Following SM-C.3 we start from `l₀ = √N` anchors (the paper found
+/// `l₀ = k` far too small) and increment by `q = ln N`.
+pub fn toprank2<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult {
+    let n = metric.len();
+    assert!(n > 0 && opts.k >= 1);
+    let nf = n as f64;
+    let ln_n = nf.ln().max(1.0);
+    let l0 = (nf.sqrt().ceil() as usize).clamp(1, n);
+    let q = (ln_n.ceil() as usize).max(1);
+
+    let mut rng = Rng::new(opts.seed);
+    // Anchor order: a global permutation consumed incrementally, so anchors
+    // are distinct across rounds.
+    let perm = rng.permutation(n);
+    let mut n_anchors = 0usize;
+    let mut sums = vec![0.0f64; n];
+    let mut row = vec![0.0f64; n];
+    let mut delta_hat = f64::INFINITY;
+
+    let add_anchors = |count: usize,
+                           n_anchors: &mut usize,
+                           sums: &mut [f64],
+                           delta_hat: &mut f64,
+                           row: &mut [f64]| {
+        let take = count.min(n - *n_anchors);
+        for t in 0..take {
+            let a = perm[*n_anchors + t];
+            metric.all_to_one(a, row);
+            let mut maxd = 0.0f64;
+            for (s, &d) in sums.iter_mut().zip(row.iter()) {
+                *s += d;
+                if d > maxd {
+                    maxd = d;
+                }
+            }
+            *delta_hat = delta_hat.min(2.0 * maxd);
+        }
+        *n_anchors += take;
+    };
+
+    let survivor_count = |sums: &[f64], l: usize, delta_hat: f64| -> usize {
+        let scale = nf / (l as f64 * (n.max(2) - 1) as f64);
+        let mut est: Vec<f64> = sums.iter().map(|s| s * scale).collect();
+        let mut sorted = est.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let thr =
+            sorted[opts.k - 1] + 2.0 * opts.alpha_prime * delta_hat * (ln_n / l as f64).sqrt();
+        est.retain(|&e| e <= thr);
+        est.len()
+    };
+
+    add_anchors(l0, &mut n_anchors, &mut sums, &mut delta_hat, &mut row);
+    let mut p_prev = survivor_count(&sums, n_anchors, delta_hat);
+    while n_anchors < n {
+        add_anchors(q, &mut n_anchors, &mut sums, &mut delta_hat, &mut row);
+        let p = survivor_count(&sums, n_anchors, delta_hat);
+        let shrink = p_prev.saturating_sub(p);
+        p_prev = p;
+        if (shrink as f64) < ln_n {
+            break;
+        }
+    }
+
+    // Final survivor set and exact pass.
+    let scale = nf / (n_anchors as f64 * (n.max(2) - 1) as f64);
+    let est: Vec<f64> = sums.iter().map(|s| s * scale).collect();
+    let mut sorted = est.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let thr = sorted[opts.k - 1] + 2.0 * opts.alpha_prime * delta_hat * (ln_n / n_anchors as f64).sqrt();
+    let survivors: Vec<usize> = (0..n).filter(|&i| est[i] <= thr).collect();
+    let (topk, energies) = exact_pass(metric, &survivors, opts.k);
+    TopRankResult {
+        medoid: topk[0],
+        energy: energies[0],
+        topk,
+        computed: n_anchors as u64 + survivors.len() as u64,
+        anchors: n_anchors as u64,
+        survivors: survivors.len() as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::scan_medoid;
+    use crate::data::synthetic::{uniform_cube, gauss_mix};
+    use crate::graph::generators::sensor_net;
+    use crate::graph::GraphMetric;
+    use crate::metric::{Counted, VectorMetric};
+
+    #[test]
+    fn toprank_returns_true_medoid_whp() {
+        // Across several seeds on moderate data the w.h.p. guarantee should
+        // hold every time with alpha'=1 (as the paper observed).
+        let m = VectorMetric::new(uniform_cube(1500, 2, 8));
+        let s = scan_medoid(&m);
+        for seed in 0..5 {
+            let r = toprank(&m, &TopRankOpts { seed, ..Default::default() });
+            assert_eq!(r.medoid, s.medoid, "seed {seed}");
+            assert!((r.energy - s.energy).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn toprank_computed_accounting() {
+        let m = Counted::new(VectorMetric::new(uniform_cube(800, 2, 9)));
+        let r = toprank(&m, &TopRankOpts::default());
+        assert_eq!(r.computed, m.counts().one_to_all);
+        assert_eq!(r.computed, r.anchors + r.survivors);
+    }
+
+    #[test]
+    fn toprank2_returns_true_medoid() {
+        let m = VectorMetric::new(gauss_mix(1200, 2, 10, 0.05, 10));
+        let s = scan_medoid(&m);
+        for seed in 0..3 {
+            let r = toprank2(&m, &TopRankOpts { seed, ..Default::default() });
+            assert_eq!(r.medoid, s.medoid, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn toprank_on_graph() {
+        let sg = sensor_net(700, 1.7, false, 12);
+        let gm = GraphMetric::new(sg.graph);
+        let s = scan_medoid(&gm);
+        let r = toprank(&gm, &TopRankOpts::default());
+        assert_eq!(r.medoid, s.medoid);
+    }
+
+    #[test]
+    fn topk_ordering() {
+        let m = VectorMetric::new(uniform_cube(600, 2, 14));
+        let s = scan_medoid(&m);
+        let mut ranked: Vec<usize> = (0..m.len()).collect();
+        ranked.sort_by(|&a, &b| s.energies[a].partial_cmp(&s.energies[b]).unwrap());
+        let r = toprank(&m, &TopRankOpts { k: 5, ..Default::default() });
+        assert_eq!(r.topk, ranked[..5].to_vec());
+    }
+
+    #[test]
+    fn small_n_falls_back_to_near_scan() {
+        let m = VectorMetric::new(uniform_cube(20, 2, 15));
+        let s = scan_medoid(&m);
+        let r = toprank(&m, &TopRankOpts::default());
+        assert_eq!(r.medoid, s.medoid);
+        assert!(r.computed <= 2 * 20);
+    }
+}

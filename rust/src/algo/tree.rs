@@ -1,0 +1,119 @@
+//! Θ(N) exact medoid on weighted trees — the other classical linear-time
+//! special case cited in §1.1 ("and more generally on trees").
+//!
+//! Two-pass rerooting DP: a post-order pass computes subtree sizes and
+//! distance sums into each subtree; a pre-order pass reroots, giving each
+//! node's total distance sum `S(v)` in O(N).
+
+use crate::graph::CsrGraph;
+
+/// Exact medoid (argmin of distance sums) of a weighted tree given as an
+/// undirected [`CsrGraph`]. Panics if the graph is not a tree.
+/// Returns `(medoid index, energy = S/(N−1))`.
+pub fn tree_medoid(tree: &CsrGraph) -> (usize, f64) {
+    let n = tree.num_nodes();
+    assert!(n > 0);
+    assert_eq!(tree.num_arcs(), 2 * (n - 1), "graph is not a tree (arc count)");
+    if n == 1 {
+        return (0, 0.0);
+    }
+
+    // Iterative DFS from root 0: order[] is a pre-order, parent[] links.
+    let root = 0usize;
+    let mut parent = vec![usize::MAX; n];
+    let mut parent_w = vec![0.0f64; n];
+    let mut order = Vec::with_capacity(n);
+    let mut stack = vec![root];
+    let mut seen = vec![false; n];
+    seen[root] = true;
+    while let Some(v) = stack.pop() {
+        order.push(v);
+        for (u, w) in tree.neighbors(v) {
+            if !seen[u] {
+                seen[u] = true;
+                parent[u] = v;
+                parent_w[u] = w;
+                stack.push(u);
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "graph is not connected");
+
+    // Post-order: subtree sizes and down-sums.
+    let mut size = vec![1u64; n];
+    let mut down = vec![0.0f64; n]; // sum of dists from v to nodes in its subtree
+    for &v in order.iter().rev() {
+        if v != root {
+            let p = parent[v];
+            size[p] += size[v];
+            down[p] += down[v] + parent_w[v] * size[v] as f64;
+        }
+    }
+
+    // Pre-order rerooting: total[v] = sum of dists from v to ALL nodes.
+    let mut total = vec![0.0f64; n];
+    total[root] = down[root];
+    for &v in order.iter().skip(1) {
+        let p = parent[v];
+        let w = parent_w[v];
+        // Moving the root from p to v: nodes in v's subtree get closer by
+        // w, the other (n - size[v]) get farther by w.
+        total[v] = total[p] + w * (n as f64 - 2.0 * size[v] as f64);
+    }
+
+    let (mut best, mut best_s) = (0usize, f64::INFINITY);
+    for v in 0..n {
+        if total[v] < best_s {
+            best_s = total[v];
+            best = v;
+        }
+    }
+    (best, best_s / (n - 1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::scan_medoid;
+    use crate::graph::generators::random_tree;
+    use crate::graph::GraphMetric;
+
+    #[test]
+    fn path_tree_medoid_is_middle() {
+        let edges: Vec<(usize, usize, f64)> = (0..6).map(|i| (i, i + 1, 1.0)).collect();
+        let g = CsrGraph::from_edges(7, &edges, true);
+        let (m, e) = tree_medoid(&g);
+        assert_eq!(m, 3);
+        // S(3) = 1+2+3+1+2+3 = 12; E = 12/6 = 2.
+        assert!((e - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn star_medoid_is_center() {
+        let edges: Vec<(usize, usize, f64)> = (1..10).map(|i| (0, i, 1.0)).collect();
+        let g = CsrGraph::from_edges(10, &edges, true);
+        assert_eq!(tree_medoid(&g).0, 0);
+    }
+
+    #[test]
+    fn matches_scan_on_random_trees() {
+        for seed in 0..20u64 {
+            let g = random_tree(40 + (seed as usize) * 7, seed);
+            let (m, e) = tree_medoid(&g);
+            let gm = GraphMetric::new(g);
+            let s = scan_medoid(&gm);
+            assert!(
+                (e - s.energy).abs() < 1e-9,
+                "seed {seed}: tree medoid {m} (E={e}) vs scan {} (E={})",
+                s.medoid,
+                s.energy
+            );
+        }
+    }
+
+    #[test]
+    fn singleton_tree() {
+        let g = CsrGraph::from_edges(1, &[], true);
+        assert_eq!(tree_medoid(&g), (0, 0.0));
+    }
+}

@@ -1,0 +1,420 @@
+//! `trimed` (paper Alg. 1): exact medoid via triangle-inequality
+//! elimination, the paper's primary contribution.
+//!
+//! The algorithm visits elements in random order, maintaining for each a
+//! lower bound on its distance *sum* `S(j) = Σ_l dist(l, j)`. When an
+//! element survives the bound test it is "computed" (a one-to-all pass),
+//! its exact sum becomes known, and every other element's bound is
+//! tightened with `S(j) ≥ |S(i) − N·dist(i,j)|` — the triangle inequality
+//! summed over the set (Thm 3.1). Under the regularity assumptions of
+//! Thm 3.2 only `O(√N)` elements are computed.
+//!
+//! Internally we work with sums over all `N` elements (self-distance 0),
+//! for which the bound is exact; reported energies use the paper's
+//! `E = S/(N−1)` normalisation.
+//!
+//! Directed (quasi-metric) spaces are supported with one-sided bounds: a
+//! computed element does both a forward and a reverse Dijkstra, giving
+//! `S_out(j) ≥ S_out(i) − N·d(i,j)` and `S_out(j) ≥ N·d(j,i) − S_in(i)`.
+
+use super::sum_to_energy;
+use crate::metric::MetricSpace;
+use crate::rng::Rng;
+
+/// Options for [`trimed_with_opts`].
+#[derive(Clone, Debug)]
+pub struct TrimedOpts {
+    /// Seed for the visiting-order shuffle (paper line 3).
+    pub seed: u64,
+    /// Relaxation (§4): element `i` is computed only if
+    /// `l(i)·(1+eps) < E^cl`; `eps = 0` is exact trimed, `eps > 0`
+    /// guarantees an element within a factor `1+eps` of `E*`.
+    pub eps: f64,
+    /// Fixed visiting order overriding the shuffle (tests/ablations; e.g.
+    /// descending-energy order exhibits the pathological O(N) computes the
+    /// paper's shuffle guards against).
+    pub order: Option<Vec<usize>>,
+    /// Record the loop iteration at which each compute happened (Fig. 7).
+    pub record_trace: bool,
+    /// Absolute elimination slack on distance *sums*: an element is only
+    /// eliminated when `l(i) ≥ E^cl + slack`. Zero for exact metrics;
+    /// set to ~`1e-3·scale·N` for f32 backends (e.g. the XLA metric) whose
+    /// rounding can marginally violate the triangle inequality.
+    pub slack: f64,
+}
+
+impl Default for TrimedOpts {
+    fn default() -> Self {
+        TrimedOpts { seed: 0, eps: 0.0, order: None, record_trace: false, slack: 0.0 }
+    }
+}
+
+/// Result of a trimed run.
+#[derive(Clone, Debug)]
+pub struct TrimedResult {
+    /// The medoid (exact when `eps == 0`).
+    pub medoid: usize,
+    /// Its energy E = S/(N−1).
+    pub energy: f64,
+    /// Number of computed elements (one-to-all passes; the paper's n̂).
+    pub computed: u64,
+    /// Final lower bounds on each element's distance *sum* S(j).
+    pub lower_bounds: Vec<f64>,
+    /// If requested: (loop iteration, element) for each compute, in order.
+    pub trace: Option<Vec<(usize, usize)>>,
+}
+
+/// Run trimed with default options (shuffle seeded by `seed`, exact).
+pub fn trimed_medoid<M: MetricSpace>(metric: &M, seed: u64) -> TrimedResult {
+    trimed_with_opts(metric, &TrimedOpts { seed, ..Default::default() })
+}
+
+/// Run trimed with explicit options. Exact (Thm 3.1) when `opts.eps == 0`.
+pub fn trimed_with_opts<M: MetricSpace>(metric: &M, opts: &TrimedOpts) -> TrimedResult {
+    let n = metric.len();
+    assert!(n > 0, "empty set has no medoid");
+    let symmetric = metric.symmetric();
+    let nf = n as f64;
+
+    // Visiting order: Fisher-Yates shuffle unless overridden.
+    let order: Vec<usize> = match &opts.order {
+        Some(o) => {
+            assert_eq!(o.len(), n, "order must be a permutation of 0..N");
+            o.clone()
+        }
+        None => Rng::new(opts.seed).permutation(n),
+    };
+
+    // Lower bounds on distance sums S(j); 0 is trivially valid.
+    let mut lb = vec![0.0f64; n];
+    let mut best_idx = usize::MAX;
+    let mut best_sum = f64::INFINITY;
+    let mut computed: u64 = 0;
+    let mut trace = opts.record_trace.then(Vec::new);
+
+    let mut d_out = vec![0.0f64; n];
+    let mut d_in = if symmetric { Vec::new() } else { vec![0.0f64; n] };
+
+    for (it, &i) in order.iter().enumerate() {
+        // Bound test (paper line 4), with the §4 relaxation and the
+        // f32-backend slack.
+        if lb[i] * (1.0 + opts.eps) >= best_sum + opts.slack {
+            continue;
+        }
+        // Compute element i (lines 5-8).
+        metric.one_to_all(i, &mut d_out);
+        computed += 1;
+        if let Some(t) = trace.as_mut() {
+            t.push((it, i));
+        }
+        let s_out: f64 = d_out.iter().sum();
+        lb[i] = s_out; // tight
+        if s_out < best_sum {
+            best_sum = s_out;
+            best_idx = i;
+        }
+        // Bound propagation (line 13).
+        if symmetric {
+            for (l, &d) in lb.iter_mut().zip(d_out.iter()) {
+                let b = (s_out - nf * d).abs();
+                if b > *l {
+                    *l = b;
+                }
+            }
+        } else {
+            metric.all_to_one(i, &mut d_in);
+            let s_in: f64 = d_in.iter().sum();
+            for ((l, &dout), &din) in lb.iter_mut().zip(d_out.iter()).zip(d_in.iter()) {
+                // S_out(j) >= S_out(i) - N*d(i,j)  and  >= N*d(j,i) - S_in(i)
+                let b = (s_out - nf * dout).max(nf * din - s_in);
+                if b > *l {
+                    *l = b;
+                }
+            }
+        }
+    }
+
+    TrimedResult {
+        medoid: best_idx,
+        energy: sum_to_energy(best_sum, n),
+        computed,
+        lower_bounds: lb,
+        trace,
+    }
+}
+
+/// Result of the top-k ranking generalisation of trimed (paper §6).
+#[derive(Clone, Debug)]
+pub struct TopKResult {
+    /// The k elements with lowest energy, ascending by energy.
+    pub elements: Vec<usize>,
+    /// Their energies, ascending.
+    pub energies: Vec<f64>,
+    /// Number of computed elements.
+    pub computed: u64,
+}
+
+/// Exact k lowest-energy elements ("closeness-centrality top-k"), using the
+/// same elimination but thresholding against the k-th best sum found so
+/// far. `k = 1` reduces to [`trimed_medoid`].
+pub fn trimed_topk<M: MetricSpace>(metric: &M, k: usize, seed: u64) -> TopKResult {
+    let n = metric.len();
+    assert!(k >= 1 && k <= n, "k={k} out of range for N={n}");
+    let symmetric = metric.symmetric();
+    let nf = n as f64;
+    let order = Rng::new(seed).permutation(n);
+
+    let mut lb = vec![0.0f64; n];
+    // Max-heap of (sum, idx): the k best sums found so far.
+    let mut best: std::collections::BinaryHeap<(OrdF64, usize)> = std::collections::BinaryHeap::new();
+    let mut computed: u64 = 0;
+    let mut d_out = vec![0.0f64; n];
+    let mut d_in = if symmetric { Vec::new() } else { vec![0.0f64; n] };
+
+    for &i in &order {
+        let threshold = if best.len() == k { best.peek().unwrap().0 .0 } else { f64::INFINITY };
+        if lb[i] >= threshold {
+            continue;
+        }
+        metric.one_to_all(i, &mut d_out);
+        computed += 1;
+        let s_out: f64 = d_out.iter().sum();
+        lb[i] = s_out;
+        if best.len() < k {
+            best.push((OrdF64(s_out), i));
+        } else if s_out < best.peek().unwrap().0 .0 {
+            best.pop();
+            best.push((OrdF64(s_out), i));
+        }
+        if symmetric {
+            for (l, &d) in lb.iter_mut().zip(d_out.iter()) {
+                let b = (s_out - nf * d).abs();
+                if b > *l {
+                    *l = b;
+                }
+            }
+        } else {
+            metric.all_to_one(i, &mut d_in);
+            let s_in: f64 = d_in.iter().sum();
+            for ((l, &dout), &din) in lb.iter_mut().zip(d_out.iter()).zip(d_in.iter()) {
+                let b = (s_out - nf * dout).max(nf * din - s_in);
+                if b > *l {
+                    *l = b;
+                }
+            }
+        }
+    }
+
+    let mut ranked: Vec<(f64, usize)> = best.into_iter().map(|(s, i)| (s.0, i)).collect();
+    ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    TopKResult {
+        elements: ranked.iter().map(|&(_, i)| i).collect(),
+        energies: ranked.iter().map(|&(s, _)| sum_to_energy(s, n)).collect(),
+        computed,
+    }
+}
+
+/// f64 wrapper with total order (finite, non-NaN values only).
+#[derive(Copy, Clone, PartialEq)]
+struct OrdF64(f64);
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN in OrdF64")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::scan_medoid;
+    use crate::data::synthetic::{ball_uniform, uniform_cube};
+    use crate::data::Points;
+    use crate::graph::generators::{preferential_attachment, sensor_net};
+    use crate::graph::GraphMetric;
+    use crate::metric::{Counted, MetricSpace, VectorMetric};
+
+    #[test]
+    fn matches_scan_on_vectors() {
+        for seed in 0..5u64 {
+            for d in [1, 2, 3, 6] {
+                let pts = uniform_cube(300, d, seed * 31 + d as u64);
+                let m = VectorMetric::new(pts);
+                let t = trimed_medoid(&m, seed);
+                let s = scan_medoid(&m);
+                // Compare energies (the medoid may be tied; the paper
+                // assumes uniqueness, we accept any minimiser).
+                assert!(
+                    (t.energy - s.energy).abs() < 1e-9
+                        && (s.energies[t.medoid] - s.energy).abs() < 1e-9,
+                    "seed={seed} d={d}: trimed {} E={} vs scan {} E={}",
+                    t.medoid,
+                    t.energy,
+                    s.medoid,
+                    s.energy
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_scan_on_ball() {
+        let pts = ball_uniform(400, 2, 9);
+        let m = VectorMetric::new(pts);
+        assert_eq!(trimed_medoid(&m, 1).medoid, scan_medoid(&m).medoid);
+    }
+
+    #[test]
+    fn computes_far_fewer_than_n() {
+        let n = 4000;
+        let m = Counted::new(VectorMetric::new(uniform_cube(n, 2, 5)));
+        let t = trimed_medoid(&m, 0);
+        assert_eq!(t.computed, m.counts().one_to_all);
+        // Thm 3.2: O(sqrt(N)); allow a wide constant.
+        assert!(
+            t.computed < (20.0 * (n as f64).sqrt()) as u64,
+            "computed {} of {n}",
+            t.computed
+        );
+    }
+
+    #[test]
+    fn lower_bounds_are_sound() {
+        let pts = uniform_cube(200, 3, 11);
+        let m = VectorMetric::new(pts);
+        let t = trimed_medoid(&m, 2);
+        let n = m.len();
+        let mut out = vec![0.0; n];
+        for j in 0..n {
+            m.one_to_all(j, &mut out);
+            let s: f64 = out.iter().sum();
+            assert!(
+                t.lower_bounds[j] <= s + 1e-9,
+                "bound {} exceeds true sum {} at {j}",
+                t.lower_bounds[j],
+                s
+            );
+        }
+    }
+
+    #[test]
+    fn eps_relaxation_quality() {
+        let pts = uniform_cube(2000, 2, 13);
+        let m = VectorMetric::new(pts);
+        let exact = trimed_medoid(&m, 3);
+        for eps in [0.01, 0.1, 0.5] {
+            let r = trimed_with_opts(
+                &m,
+                &TrimedOpts { seed: 3, eps, ..Default::default() },
+            );
+            assert!(
+                r.energy <= exact.energy * (1.0 + eps) + 1e-12,
+                "eps={eps}: {} vs {}",
+                r.energy,
+                exact.energy
+            );
+        }
+    }
+
+    #[test]
+    fn eps_reduces_computes() {
+        let pts = uniform_cube(4000, 3, 17);
+        let m = VectorMetric::new(pts);
+        let exact = trimed_medoid(&m, 1);
+        let relaxed = trimed_with_opts(&m, &TrimedOpts { seed: 1, eps: 0.1, ..Default::default() });
+        assert!(relaxed.computed <= exact.computed);
+    }
+
+    #[test]
+    fn pathological_order_computes_everything() {
+        // Descending-energy visiting order defeats elimination (§3 remark
+        // on why the shuffle exists).
+        let pts = uniform_cube(150, 2, 19);
+        let m = VectorMetric::new(pts);
+        let s = scan_medoid(&m);
+        let mut order: Vec<usize> = (0..m.len()).collect();
+        order.sort_by(|&a, &b| s.energies[b].partial_cmp(&s.energies[a]).unwrap());
+        let r = trimed_with_opts(
+            &m,
+            &TrimedOpts { order: Some(order), ..Default::default() },
+        );
+        assert_eq!(r.medoid, s.medoid);
+        // Every element (or nearly) gets computed in this adversarial order.
+        assert!(r.computed as usize >= m.len() - 1, "computed {}", r.computed);
+    }
+
+    #[test]
+    fn works_on_undirected_graph() {
+        let sg = sensor_net(600, 1.6, false, 23);
+        let gm = GraphMetric::new(sg.graph);
+        let t = trimed_medoid(&gm, 0);
+        let s = scan_medoid(&gm);
+        assert_eq!(t.medoid, s.medoid);
+        assert!(t.computed < gm.len() as u64 / 2);
+    }
+
+    #[test]
+    fn works_on_directed_graph() {
+        let g = preferential_attachment(250, 3, 0.6, 29);
+        let gm = GraphMetric::new_directed(g);
+        let t = trimed_medoid(&gm, 4);
+        let s = scan_medoid(&gm);
+        assert_eq!(t.medoid, s.medoid);
+        assert!((t.energy - s.energy).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_records_computes() {
+        let pts = uniform_cube(300, 2, 31);
+        let m = VectorMetric::new(pts);
+        let r = trimed_with_opts(
+            &m,
+            &TrimedOpts { seed: 7, record_trace: true, ..Default::default() },
+        );
+        let trace = r.trace.unwrap();
+        assert_eq!(trace.len() as u64, r.computed);
+        // Iterations strictly increasing.
+        assert!(trace.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+
+    #[test]
+    fn topk_matches_scan_ranking() {
+        let pts = uniform_cube(400, 2, 37);
+        let m = VectorMetric::new(pts);
+        let s = scan_medoid(&m);
+        let mut ranked: Vec<usize> = (0..m.len()).collect();
+        ranked.sort_by(|&a, &b| s.energies[a].partial_cmp(&s.energies[b]).unwrap());
+        for k in [1, 3, 10] {
+            let r = trimed_topk(&m, k, 41);
+            assert_eq!(r.elements, ranked[..k].to_vec(), "k={k}");
+            assert!(r.computed <= m.len() as u64);
+        }
+    }
+
+    #[test]
+    fn duplicate_points_handled() {
+        // Duplicates create zero distances and tied sums.
+        let mut data = Vec::new();
+        for _ in 0..10 {
+            data.extend_from_slice(&[1.0, 1.0]);
+        }
+        data.extend_from_slice(&[5.0, 5.0]);
+        let m = VectorMetric::new(Points::new(2, data));
+        let t = trimed_medoid(&m, 0);
+        let s = scan_medoid(&m);
+        assert!((t.energy - s.energy).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_elements() {
+        let m = VectorMetric::new(Points::new(1, vec![0.0, 1.0]));
+        let t = trimed_medoid(&m, 0);
+        assert!(t.medoid < 2);
+        assert!((t.energy - 1.0).abs() < 1e-12);
+    }
+}

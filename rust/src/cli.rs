@@ -1,0 +1,107 @@
+//! Tiny command-line parser (clap is not in the offline vendor set).
+//!
+//! Grammar: `trimed <subcommand> [--key value]... [--flag]...`.
+//! Unknown keys are rejected; every key must be declared by the caller.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Parsed arguments: a subcommand plus `--key value` pairs.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First positional token (the subcommand), if any.
+    pub command: Option<String>,
+    kv: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    ///
+    /// `known_keys` are options that take a value; `known_flags` are
+    /// boolean switches.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        tokens: I,
+        known_keys: &[&str],
+        known_flags: &[&str],
+    ) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if known_flags.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else if known_keys.contains(&name) {
+                    match it.next() {
+                        Some(v) => {
+                            args.kv.insert(name.to_string(), v);
+                        }
+                        None => bail!("--{name} expects a value"),
+                    }
+                } else {
+                    bail!("unknown option --{name}");
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                bail!("unexpected positional argument {tok:?}");
+            }
+        }
+        Ok(args)
+    }
+
+    /// String value of `--key`, if given.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed value of `--key` with a default.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.kv.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    /// Whether `--flag` was given.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_kv_flags() {
+        let a = Args::parse(toks("medoid --n 100 --xla"), &["n"], &["xla"]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("medoid"));
+        assert_eq!(a.get("n"), Some("100"));
+        assert!(a.flag("xla"));
+        assert!(!a.flag("other"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse(toks("x --k 5"), &["k"], &[]).unwrap();
+        assert_eq!(a.get_parsed("k", 1usize).unwrap(), 5);
+        assert_eq!(a.get_parsed("m", 9usize).unwrap(), 9);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Args::parse(toks("x --bogus 1"), &["k"], &[]).is_err());
+        assert!(Args::parse(toks("x --k"), &["k"], &[]).is_err());
+        assert!(Args::parse(toks("x y"), &[], &[]).is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! Minimal TSV persistence for point sets and result tables.
+//!
+//! No serde in the offline vendor set, so the on-disk format is plain TSV:
+//! a `# d=<dim>` header line followed by one tab-separated row per point.
+
+use super::Points;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Write a point set to a TSV file.
+pub fn save_points(path: &Path, pts: &Points) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# d={}", pts.dim())?;
+    for i in 0..pts.len() {
+        let row = pts.row(i);
+        let mut line = String::with_capacity(row.len() * 12);
+        for (k, v) in row.iter().enumerate() {
+            if k > 0 {
+                line.push('\t');
+            }
+            line.push_str(&format!("{v:.17e}"));
+        }
+        writeln!(w, "{line}")?;
+    }
+    Ok(())
+}
+
+/// Read a point set written by [`save_points`].
+pub fn load_points(path: &Path) -> Result<Points> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let reader = std::io::BufReader::new(f);
+    let mut d: Option<usize> = None;
+    let mut data = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            if let Some(dv) = rest.trim().strip_prefix("d=") {
+                d = Some(dv.trim().parse().context("parse dim header")?);
+            }
+            continue;
+        }
+        let row: Vec<f64> = line
+            .split('\t')
+            .map(|t| t.parse::<f64>().with_context(|| format!("line {} token {t:?}", lineno + 1)))
+            .collect::<Result<_>>()?;
+        match d {
+            None => d = Some(row.len()),
+            Some(dv) if dv != row.len() => {
+                bail!("line {}: expected {} columns, got {}", lineno + 1, dv, row.len())
+            }
+            _ => {}
+        }
+        data.extend(row);
+    }
+    let d = d.context("empty points file")?;
+    Ok(Points::new(d, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::uniform_cube;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("trimed_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pts.tsv");
+        let p = uniform_cube(37, 4, 123);
+        save_points(&path, &p).unwrap();
+        let q = load_points(&path).unwrap();
+        assert_eq!(p.len(), q.len());
+        assert_eq!(p.dim(), q.dim());
+        for (a, b) in p.flat().iter().zip(q.flat()) {
+            assert!((a - b).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load_points(Path::new("/nonexistent/nope.tsv")).is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Vector datasets: storage, synthetic generators, TSV persistence.
+
+pub mod io;
+pub mod synthetic;
+
+/// A dense row-major set of `n` points in R^d.
+///
+/// This is the single vector-data container used across the library: the
+/// native metric, the XLA metric, generators and loaders all speak
+/// `Points`. Stored as `f64` for exact paper-metric accounting; the XLA
+/// path down-converts to `f32` at the artifact boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Points {
+    d: usize,
+    data: Vec<f64>,
+}
+
+impl Points {
+    /// Create from row-major data; `data.len()` must be a multiple of `d`.
+    pub fn new(d: usize, data: Vec<f64>) -> Self {
+        assert!(d > 0, "dimension must be positive");
+        assert_eq!(data.len() % d, 0, "data length {} not a multiple of d={}", data.len(), d);
+        Points { d, data }
+    }
+
+    /// Empty set with capacity for `n` points.
+    pub fn with_capacity(d: usize, n: usize) -> Self {
+        assert!(d > 0);
+        Points { d, data: Vec::with_capacity(d * n) }
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.data.len() / self.d
+    }
+
+    /// True when there are no points.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Dimensionality.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Append one point (must have length `d`).
+    pub fn push(&mut self, p: &[f64]) {
+        assert_eq!(p.len(), self.d);
+        self.data.extend_from_slice(p);
+    }
+
+    /// Flat row-major storage.
+    pub fn flat(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Euclidean distance between rows i and j.
+    #[inline]
+    pub fn dist(&self, i: usize, j: usize) -> f64 {
+        euclidean(self.row(i), self.row(j))
+    }
+
+    /// Keep only the rows listed in `idx` (in that order).
+    pub fn select(&self, idx: &[usize]) -> Points {
+        let mut out = Points::with_capacity(self.d, idx.len());
+        for &i in idx {
+            out.push(self.row(i));
+        }
+        out
+    }
+
+    /// Project every point through a `d_out × d` row-major matrix.
+    pub fn project(&self, matrix: &[f64], d_out: usize) -> Points {
+        assert_eq!(matrix.len(), d_out * self.d);
+        let mut out = Points::with_capacity(d_out, self.len());
+        let mut row_out = vec![0.0; d_out];
+        for i in 0..self.len() {
+            let x = self.row(i);
+            for (r, ro) in row_out.iter_mut().enumerate() {
+                let mrow = &matrix[r * self.d..(r + 1) * self.d];
+                *ro = mrow.iter().zip(x).map(|(m, v)| m * v).sum();
+            }
+            out.push(&row_out);
+        }
+        out
+    }
+}
+
+/// Euclidean distance between two equal-length slices.
+#[inline]
+pub fn euclidean(a: &[f64], b: &[f64]) -> f64 {
+    squared_euclidean(a, b).sqrt()
+}
+
+/// Squared Euclidean distance (the hot-loop primitive; see §Perf).
+#[inline]
+pub fn squared_euclidean(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // Chunked accumulation: lets LLVM vectorise without bounds checks.
+    let mut acc = 0.0;
+    let mut ai = a.chunks_exact(4);
+    let mut bi = b.chunks_exact(4);
+    for (ca, cb) in (&mut ai).zip(&mut bi) {
+        let d0 = ca[0] - cb[0];
+        let d1 = ca[1] - cb[1];
+        let d2 = ca[2] - cb[2];
+        let d3 = ca[3] - cb[3];
+        acc += d0 * d0 + d1 * d1 + d2 * d2 + d3 * d3;
+    }
+    for (x, y) in ai.remainder().iter().zip(bi.remainder()) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn points_roundtrip() {
+        let p = Points::new(2, vec![0.0, 0.0, 3.0, 4.0]);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.dim(), 2);
+        assert_eq!(p.row(1), &[3.0, 4.0]);
+        assert!((p.dist(0, 1) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn squared_euclidean_matches_naive() {
+        for d in [1, 3, 4, 5, 8, 17] {
+            let a: Vec<f64> = (0..d).map(|i| i as f64 * 0.5).collect();
+            let b: Vec<f64> = (0..d).map(|i| (d - i) as f64 * 0.25).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            assert!((squared_euclidean(&a, &b) - naive).abs() < 1e-10, "d={d}");
+        }
+    }
+
+    #[test]
+    fn select_picks_rows() {
+        let p = Points::new(1, vec![10.0, 20.0, 30.0]);
+        let q = p.select(&[2, 0]);
+        assert_eq!(q.flat(), &[30.0, 10.0]);
+    }
+
+    #[test]
+    fn project_identity() {
+        let p = Points::new(2, vec![1.0, 2.0, 3.0, 4.0]);
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(p.project(&eye, 2).flat(), p.flat());
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_wrong_dim_panics() {
+        let mut p = Points::with_capacity(3, 1);
+        p.push(&[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,344 @@
+//! Synthetic vector-data generators.
+//!
+//! These reproduce both the paper's explicitly synthetic distributions
+//! (uniform cube, unit-ball samplers of SM-F) and stand-ins for the public
+//! datasets that are not downloadable in this offline environment — see
+//! DESIGN.md "Dataset substitutions" for the mapping and rationale.
+
+use super::Points;
+use crate::rng::Rng;
+
+/// `n` points uniform on `[0,1]^d` (Figure 3, left panels).
+pub fn uniform_cube(n: usize, d: usize, seed: u64) -> Points {
+    let mut rng = Rng::new(seed);
+    let mut pts = Points::with_capacity(d, n);
+    let mut row = vec![0.0; d];
+    for _ in 0..n {
+        for r in row.iter_mut() {
+            *r = rng.f64();
+        }
+        pts.push(&row);
+    }
+    pts
+}
+
+/// `n` points uniform on `[lo,hi]^d`.
+pub fn uniform_box(n: usize, d: usize, lo: f64, hi: f64, seed: u64) -> Points {
+    let mut rng = Rng::new(seed);
+    let mut pts = Points::with_capacity(d, n);
+    let mut row = vec![0.0; d];
+    for _ in 0..n {
+        for r in row.iter_mut() {
+            *r = rng.range(lo, hi);
+        }
+        pts.push(&row);
+    }
+    pts
+}
+
+/// Draw one point uniformly from the unit ball B_d(0,1), eq. (13) of SM-F:
+/// `X₃ = X₁/‖X₁‖ · X₂^{1/d}` with X₁ ~ N(0,I), X₂ ~ U(0,1).
+fn ball_point(d: usize, rng: &mut Rng) -> Vec<f64> {
+    let dir = rng.unit_sphere(d);
+    let radius = rng.f64().powf(1.0 / d as f64);
+    dir.into_iter().map(|x| x * radius).collect()
+}
+
+/// `n` points uniform on the unit ball (Figure 4, left).
+pub fn ball_uniform(n: usize, d: usize, seed: u64) -> Points {
+    let mut rng = Rng::new(seed);
+    let mut pts = Points::with_capacity(d, n);
+    for _ in 0..n {
+        pts.push(&ball_point(d, &mut rng));
+    }
+    pts
+}
+
+/// Shell-biased unit-ball sampler (Figure 3 right / Figure 4 right, SM-F).
+///
+/// Uniform-ball draws landing inside radius `(1/2)^{1/d}` (the half-volume
+/// radius) are re-sampled uniformly into the outer shell with probability
+/// `1 − inner_keep`. Under uniform sampling half the mass is inside, so the
+/// final inner mass is `inner_keep / 2`:
+/// * paper Fig. 3 (right): inner mass 1/200 → `inner_keep = 0.01`;
+/// * paper Fig. 4 (right): inner density 19× lower → inner mass 1/20
+///   → `inner_keep = 0.1`.
+pub fn ball_shell_biased(n: usize, d: usize, inner_keep: f64, seed: u64) -> Points {
+    assert!((0.0..=1.0).contains(&inner_keep));
+    let mut rng = Rng::new(seed);
+    let r_half = 0.5f64.powf(1.0 / d as f64);
+    let mut pts = Points::with_capacity(d, n);
+    for _ in 0..n {
+        let mut p = ball_point(d, &mut rng);
+        let norm2: f64 = p.iter().map(|x| x * x).sum();
+        if norm2.sqrt() < r_half && !rng.bernoulli(inner_keep) {
+            // Re-sample uniformly from the shell A(r_half, 1): radius CDF
+            // r^d on [1/2, 1] → r = (1/2 + U/2)^{1/d}.
+            let dir = rng.unit_sphere(d);
+            let radius = (0.5 + 0.5 * rng.f64()).powf(1.0 / d as f64);
+            p = dir.into_iter().map(|x| x * radius).collect();
+        }
+        pts.push(&p);
+    }
+    pts
+}
+
+/// Gaussian mixture: `k` centres uniform in `[0,1]^d`, isotropic stddev
+/// `sigma`. The workhorse stand-in for the small clustering datasets of
+/// Table 3 (S-sets, A-sets, thyroid, yeast, wine, breast, spiral, …).
+pub fn gauss_mix(n: usize, d: usize, k: usize, sigma: f64, seed: u64) -> Points {
+    let mut rng = Rng::new(seed);
+    let centers = uniform_cube(k, d, rng.next_u64());
+    let mut pts = Points::with_capacity(d, n);
+    let mut row = vec![0.0; d];
+    for _ in 0..n {
+        let c = centers.row(rng.below(k));
+        for (r, &cv) in row.iter_mut().zip(c) {
+            *r = cv + sigma * rng.gauss();
+        }
+        pts.push(&row);
+    }
+    pts
+}
+
+/// Birch1-like: 2-d, 10×10 grid of Gaussian clusters.
+pub fn birch_grid(n: usize, seed: u64) -> Points {
+    let mut rng = Rng::new(seed);
+    let mut pts = Points::with_capacity(2, n);
+    for _ in 0..n {
+        let cx = rng.below(10) as f64 / 10.0 + 0.05;
+        let cy = rng.below(10) as f64 / 10.0 + 0.05;
+        pts.push(&[cx + 0.02 * rng.gauss(), cy + 0.02 * rng.gauss()]);
+    }
+    pts
+}
+
+/// Birch2-like: 2-d, 100 Gaussian clusters along a sine curve.
+pub fn birch_line(n: usize, seed: u64) -> Points {
+    let mut rng = Rng::new(seed);
+    let mut pts = Points::with_capacity(2, n);
+    for _ in 0..n {
+        let t = rng.below(100) as f64 / 100.0;
+        let cx = t;
+        let cy = 0.5 + 0.35 * (t * 12.0).sin();
+        pts.push(&[cx + 0.01 * rng.gauss(), cy + 0.01 * rng.gauss()]);
+    }
+    pts
+}
+
+/// Europe-border-map-like: 2-d points concentrated on noisy nested closed
+/// curves ("country borders"), a curve-supported distribution like the
+/// paper's Europe dataset.
+pub fn border_map(n: usize, loops: usize, seed: u64) -> Points {
+    let mut rng = Rng::new(seed);
+    let mut pts = Points::with_capacity(2, n);
+    // Pre-draw loop parameters: centre, base radius, harmonic wobbles.
+    let mut loop_params = Vec::with_capacity(loops);
+    for _ in 0..loops {
+        let cx = rng.range(0.25, 0.75);
+        let cy = rng.range(0.25, 0.75);
+        let r0 = rng.range(0.08, 0.35);
+        let h: Vec<(f64, f64, f64)> = (2..6)
+            .map(|k| (k as f64, rng.range(0.0, 0.25 * r0), rng.range(0.0, std::f64::consts::TAU)))
+            .collect();
+        loop_params.push((cx, cy, r0, h));
+    }
+    for _ in 0..n {
+        let (cx, cy, r0, h) = &loop_params[rng.below(loops)];
+        let t = rng.range(0.0, std::f64::consts::TAU);
+        let mut r = *r0;
+        for &(k, amp, phase) in h {
+            r += amp * (k * t + phase).sin();
+        }
+        let noise = 0.002;
+        pts.push(&[
+            cx + r * t.cos() + noise * rng.gauss(),
+            cy + r * t.sin() + noise * rng.gauss(),
+        ]);
+    }
+    pts
+}
+
+/// MNIST-like: 28×28 images (784-d) of 2–4 soft Gaussian blobs at random
+/// positions — a low-intrinsic-dimension manifold embedded in very high
+/// dimension, matching what the paper's MNIST(0) experiment exercises
+/// (trimed's exponential-in-d constant).
+pub fn mnist_like(n: usize, seed: u64) -> Points {
+    let mut rng = Rng::new(seed);
+    let side = 28usize;
+    let d = side * side;
+    let mut pts = Points::with_capacity(d, n);
+    let mut img = vec![0.0f64; d];
+    for _ in 0..n {
+        img.iter_mut().for_each(|v| *v = 0.0);
+        let blobs = 2 + rng.below(3);
+        for _ in 0..blobs {
+            let bx = rng.range(6.0, 22.0);
+            let by = rng.range(6.0, 22.0);
+            let s = rng.range(1.5, 3.5);
+            let amp = rng.range(0.6, 1.0);
+            for y in 0..side {
+                for x in 0..side {
+                    let dx = x as f64 - bx;
+                    let dy = y as f64 - by;
+                    img[y * side + x] += amp * (-(dx * dx + dy * dy) / (2.0 * s * s)).exp();
+                }
+            }
+        }
+        // Clamp to [0,1] like pixel intensities, with mild sensor noise.
+        for v in img.iter_mut() {
+            *v = (*v + 0.02 * rng.gauss()).clamp(0.0, 1.0);
+        }
+        pts.push(&img);
+    }
+    pts
+}
+
+/// Random projection to `d_out` dims with i.i.d. N(0,1) entries scaled by
+/// `1/√d_out` (the paper's MNIST50 construction).
+pub fn random_projection(pts: &Points, d_out: usize, seed: u64) -> Points {
+    let mut rng = Rng::new(seed);
+    let d_in = pts.dim();
+    let scale = 1.0 / (d_out as f64).sqrt();
+    let matrix: Vec<f64> = (0..d_out * d_in).map(|_| scale * rng.gauss()).collect();
+    pts.project(&matrix, d_out)
+}
+
+/// Conflong-like 3-d trajectory data: bursts of smooth random walks.
+pub fn trajectory3d(n: usize, seed: u64) -> Points {
+    let mut rng = Rng::new(seed);
+    let mut pts = Points::with_capacity(3, n);
+    let mut pos = [0.5f64, 0.5, 0.5];
+    let mut vel = [0.0f64; 3];
+    for i in 0..n {
+        if i % 200 == 0 {
+            // New burst: jump somewhere, reset velocity.
+            pos = [rng.f64(), rng.f64(), rng.f64()];
+            vel = [0.0; 3];
+        }
+        for a in 0..3 {
+            vel[a] = 0.9 * vel[a] + 0.004 * rng.gauss();
+            pos[a] = (pos[a] + vel[a]).clamp(0.0, 1.0);
+        }
+        pts.push(&pos);
+    }
+    pts
+}
+
+/// The adversarial two-cluster configuration of SM-K (geometric median far
+/// from medoid): 9 points at (0,1), 9 at (0,-1), one at (±1/2, 0).
+pub fn sm_k_example() -> Points {
+    let mut pts = Points::with_capacity(2, 20);
+    for _ in 0..9 {
+        pts.push(&[0.0, 1.0]);
+    }
+    for _ in 0..9 {
+        pts.push(&[0.0, -1.0]);
+    }
+    pts.push(&[0.5, 0.0]);
+    pts.push(&[-0.5, 0.0]);
+    pts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_cube_in_bounds() {
+        let p = uniform_cube(200, 3, 1);
+        assert_eq!(p.len(), 200);
+        assert_eq!(p.dim(), 3);
+        assert!(p.flat().iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn ball_uniform_inside_ball_and_fills_volume() {
+        let p = ball_uniform(5000, 3, 2);
+        let mut inside_half = 0;
+        for i in 0..p.len() {
+            let r2: f64 = p.row(i).iter().map(|x| x * x).sum();
+            assert!(r2 <= 1.0 + 1e-9);
+            if r2.sqrt() < 0.5f64.powf(1.0 / 3.0) {
+                inside_half += 1;
+            }
+        }
+        // Half the mass should be inside the half-volume radius.
+        let frac = inside_half as f64 / p.len() as f64;
+        assert!((frac - 0.5).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn shell_biased_depletes_interior() {
+        let d = 2;
+        let p = ball_shell_biased(5000, d, 0.01, 3);
+        let r_half = 0.5f64.powf(1.0 / d as f64);
+        let inner = (0..p.len())
+            .filter(|&i| p.row(i).iter().map(|x| x * x).sum::<f64>().sqrt() < r_half)
+            .count();
+        let frac = inner as f64 / p.len() as f64;
+        assert!(frac < 0.02, "inner fraction {frac} should be ~1/200");
+    }
+
+    #[test]
+    fn gauss_mix_has_k_modes() {
+        let p = gauss_mix(1000, 2, 4, 0.01, 4);
+        assert_eq!(p.len(), 1000);
+    }
+
+    #[test]
+    fn mnist_like_shape_and_range() {
+        let p = mnist_like(5, 5);
+        assert_eq!(p.dim(), 784);
+        assert!(p.flat().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // Images are not all black.
+        assert!(p.flat().iter().sum::<f64>() > 1.0);
+    }
+
+    #[test]
+    fn random_projection_dims() {
+        let p = mnist_like(10, 6);
+        let q = random_projection(&p, 50, 7);
+        assert_eq!(q.dim(), 50);
+        assert_eq!(q.len(), 10);
+    }
+
+    #[test]
+    fn sm_k_medoid_vs_geometric_median() {
+        use crate::metric::{energy, VectorMetric};
+        let m = VectorMetric::new(sm_k_example());
+        let mut scratch = Vec::new();
+        // Paper SM-K: the points nearest the geometric median (indices 18,
+        // 19) have the *highest* energy.
+        let energies: Vec<f64> = (0..20).map(|i| energy(&m, i, &mut scratch)).collect();
+        let max_i = energies
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(max_i == 18 || max_i == 19);
+        // And the clustered points are the medoids.
+        let min_i = energies
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(min_i < 18);
+    }
+
+    #[test]
+    fn trajectory_is_smooth_within_burst() {
+        let p = trajectory3d(400, 9);
+        // consecutive points inside a burst are close
+        let djump = p.dist(10, 11);
+        assert!(djump < 0.1, "step too large: {djump}");
+    }
+
+    #[test]
+    fn border_map_points_in_unit_square_ish() {
+        let p = border_map(1000, 6, 10);
+        assert!(p.flat().iter().all(|&x| (-0.3..1.3).contains(&x)));
+    }
+}

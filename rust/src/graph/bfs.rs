@@ -1,0 +1,74 @@
+//! BFS one-to-all for unit-weight graphs — the hop-count metric of the
+//! paper's P2P experiment (Gnutella). Equivalent to Dijkstra on such
+//! graphs but O(V + E) with no heap.
+
+use super::CsrGraph;
+use std::collections::VecDeque;
+
+/// Hop distances from `src` to every node; `INFINITY` if unreachable.
+/// Only meaningful when every arc has weight 1 (callers check).
+pub fn bfs_all(g: &CsrGraph, src: usize, out: &mut [f64]) {
+    let n = g.num_nodes();
+    assert_eq!(out.len(), n);
+    for o in out.iter_mut() {
+        *o = f64::INFINITY;
+    }
+    let mut queue = VecDeque::with_capacity(64);
+    out[src] = 0.0;
+    queue.push_back(src as u32);
+    while let Some(v) = queue.pop_front() {
+        let v = v as usize;
+        let dv = out[v];
+        for (u, _) in g.neighbors(v) {
+            if out[u].is_infinite() {
+                out[u] = dv + 1.0;
+                queue.push_back(u as u32);
+            }
+        }
+    }
+}
+
+/// True if every arc weight equals 1.0 (enables the BFS fast path).
+pub fn has_unit_weights(g: &CsrGraph) -> bool {
+    (0..g.num_nodes()).all(|v| g.neighbors(v).all(|(_, w)| w == 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dijkstra::dijkstra_all;
+    use crate::graph::generators::preferential_attachment;
+
+    #[test]
+    fn bfs_matches_dijkstra_on_unit_graphs() {
+        for seed in 0..5u64 {
+            let g = preferential_attachment(200, 3, 0.5, seed);
+            assert!(has_unit_weights(&g));
+            let n = g.num_nodes();
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            for src in [0, n / 2, n - 1] {
+                bfs_all(&g, src, &mut a);
+                dijkstra_all(&g, src, &mut b);
+                assert_eq!(a, b, "seed {seed} src {src}");
+            }
+        }
+    }
+
+    #[test]
+    fn unit_weight_detection() {
+        let g = CsrGraph::from_edges(3, &[(0, 1, 1.0), (1, 2, 1.0)], true);
+        assert!(has_unit_weights(&g));
+        let g2 = CsrGraph::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0)], true);
+        assert!(!has_unit_weights(&g2));
+    }
+
+    #[test]
+    fn bfs_unreachable_infinite() {
+        let g = CsrGraph::from_edges(3, &[(0, 1, 1.0)], false);
+        let mut out = vec![0.0; 3];
+        bfs_all(&g, 0, &mut out);
+        assert_eq!(out[1], 1.0);
+        assert!(out[2].is_infinite());
+    }
+}

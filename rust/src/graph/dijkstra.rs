@@ -1,0 +1,154 @@
+//! Single-source shortest paths (Dijkstra) over [`CsrGraph`].
+//!
+//! One Dijkstra run is the graph analogue of "computing an element" in the
+//! paper: RAND/TOPRANK run it from anchor nodes only, trimed from the
+//! non-eliminated candidates.
+
+use super::CsrGraph;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Min-heap entry ordered by distance. f64 weights are non-negative and
+/// never NaN here, so a total order by bits-after-flip is safe; we use
+/// `partial_cmp` with a NaN debug check.
+#[derive(Copy, Clone)]
+struct HeapEntry {
+    dist: f64,
+    node: u32,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.dist == other.dist && self.node == other.node
+    }
+}
+impl Eq for HeapEntry {}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse: BinaryHeap is a max-heap, we want smallest dist first.
+        debug_assert!(!self.dist.is_nan() && !other.dist.is_nan());
+        other
+            .dist
+            .partial_cmp(&self.dist)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.node.cmp(&self.node))
+    }
+}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Distances from `src` to every node, `INFINITY` if unreachable.
+pub fn dijkstra_all(g: &CsrGraph, src: usize, out: &mut [f64]) {
+    let n = g.num_nodes();
+    assert_eq!(out.len(), n);
+    for o in out.iter_mut() {
+        *o = f64::INFINITY;
+    }
+    let mut heap = BinaryHeap::with_capacity(64);
+    out[src] = 0.0;
+    heap.push(HeapEntry { dist: 0.0, node: src as u32 });
+    while let Some(HeapEntry { dist, node }) = heap.pop() {
+        let v = node as usize;
+        if dist > out[v] {
+            continue; // stale entry
+        }
+        for (u, w) in g.neighbors(v) {
+            let alt = dist + w;
+            if alt < out[u] {
+                out[u] = alt;
+                heap.push(HeapEntry { dist: alt, node: u as u32 });
+            }
+        }
+    }
+}
+
+/// Distance from `src` to `dst` with early exit once `dst` is settled.
+pub fn dijkstra_pair(g: &CsrGraph, src: usize, dst: usize) -> f64 {
+    if src == dst {
+        return 0.0;
+    }
+    let n = g.num_nodes();
+    let mut dist = vec![f64::INFINITY; n];
+    let mut heap = BinaryHeap::with_capacity(64);
+    dist[src] = 0.0;
+    heap.push(HeapEntry { dist: 0.0, node: src as u32 });
+    while let Some(HeapEntry { dist: d, node }) = heap.pop() {
+        let v = node as usize;
+        if v == dst {
+            return d;
+        }
+        if d > dist[v] {
+            continue;
+        }
+        for (u, w) in g.neighbors(v) {
+            let alt = d + w;
+            if alt < dist[u] {
+                dist[u] = alt;
+                heap.push(HeapEntry { dist: alt, node: u as u32 });
+            }
+        }
+    }
+    f64::INFINITY
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn simple_weighted() {
+        // 0 -1- 1 -1- 2, plus a heavy shortcut 0 -5- 2.
+        let g = CsrGraph::from_edges(3, &[(0, 1, 1.0), (1, 2, 1.0), (0, 2, 5.0)], true);
+        let mut out = vec![0.0; 3];
+        dijkstra_all(&g, 0, &mut out);
+        assert_eq!(out, vec![0.0, 1.0, 2.0]);
+        assert_eq!(dijkstra_pair(&g, 0, 2), 2.0);
+    }
+
+    #[test]
+    fn unreachable_is_infinite() {
+        let g = CsrGraph::from_edges(3, &[(0, 1, 1.0)], false);
+        let mut out = vec![0.0; 3];
+        dijkstra_all(&g, 0, &mut out);
+        assert!(out[2].is_infinite());
+        assert!(dijkstra_pair(&g, 1, 0).is_infinite()); // directed
+    }
+
+    #[test]
+    fn matches_floyd_warshall_random() {
+        let mut rng = Rng::new(77);
+        for trial in 0..20 {
+            let n = 3 + rng.below(15);
+            let mut edges = Vec::new();
+            for u in 0..n {
+                for v in 0..n {
+                    if u != v && rng.bernoulli(0.3) {
+                        edges.push((u, v, rng.range(0.1, 5.0)));
+                    }
+                }
+            }
+            let g = CsrGraph::from_edges(n, &edges, false);
+            let fw = g.floyd_warshall();
+            let mut out = vec![0.0; n];
+            for s in 0..n {
+                dijkstra_all(&g, s, &mut out);
+                for t in 0..n {
+                    let (a, b) = (out[t], fw[s][t]);
+                    assert!(
+                        (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-9,
+                        "trial {trial} s={s} t={t}: dijkstra={a} fw={b}"
+                    );
+                    if a.is_finite() {
+                        let p = dijkstra_pair(&g, s, t);
+                        assert!((p - a).abs() < 1e-9);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,332 @@
+//! Synthetic graph generators standing in for the paper's network datasets.
+//!
+//! The paper evaluates on sensor nets (random geometric graphs), road and
+//! rail networks (sparse planar), and Gnutella (small-world P2P). None of
+//! those files are available offline, so each is replaced by a generator
+//! reproducing the topology class — see DESIGN.md "Dataset substitutions".
+//!
+//! All generators return the graph restricted to its largest (strongly)
+//! connected component, so every pairwise shortest-path distance is finite,
+//! as the medoid problem requires.
+
+use super::CsrGraph;
+use crate::data::Points;
+use crate::rng::Rng;
+
+/// A graph together with the planar positions of its nodes (post component
+/// extraction, positions align with node ids).
+pub struct SpatialGraph {
+    pub graph: CsrGraph,
+    pub positions: Points,
+}
+
+/// Grid-bucket index for radius queries in the unit square: O(N) geometric
+/// graph construction instead of O(N²).
+struct GridIndex {
+    cell: f64,
+    side: usize,
+    buckets: Vec<Vec<u32>>,
+}
+
+impl GridIndex {
+    fn build(pts: &Points, cell: f64) -> Self {
+        let side = (1.0 / cell).ceil().max(1.0) as usize;
+        let mut buckets = vec![Vec::new(); side * side];
+        for i in 0..pts.len() {
+            let p = pts.row(i);
+            let bx = ((p[0] / cell) as usize).min(side - 1);
+            let by = ((p[1] / cell) as usize).min(side - 1);
+            buckets[by * side + bx].push(i as u32);
+        }
+        GridIndex { cell, side, buckets }
+    }
+
+    /// All indices within `r` of point `i` (excluding `i`), assuming
+    /// `r <= cell`.
+    fn neighbors_within(&self, pts: &Points, i: usize, r: f64, out: &mut Vec<usize>) {
+        out.clear();
+        let p = pts.row(i);
+        let bx = ((p[0] / self.cell) as isize).clamp(0, self.side as isize - 1);
+        let by = ((p[1] / self.cell) as isize).clamp(0, self.side as isize - 1);
+        let r2 = r * r;
+        for dy in -1..=1isize {
+            for dx in -1..=1isize {
+                let (x, y) = (bx + dx, by + dy);
+                if x < 0 || y < 0 || x >= self.side as isize || y >= self.side as isize {
+                    continue;
+                }
+                for &j in &self.buckets[y as usize * self.side + x as usize] {
+                    let j = j as usize;
+                    if j == i {
+                        continue;
+                    }
+                    let q = pts.row(j);
+                    let dxv = p[0] - q[0];
+                    let dyv = p[1] - q[1];
+                    if dxv * dxv + dyv * dyv <= r2 {
+                        out.push(j);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn uniform_square(n: usize, rng: &mut Rng) -> Points {
+    let mut pts = Points::with_capacity(2, n);
+    for _ in 0..n {
+        pts.push(&[rng.f64(), rng.f64()]);
+    }
+    pts
+}
+
+fn extract_component(
+    graph: CsrGraph,
+    positions: Points,
+    strongly: bool,
+) -> SpatialGraph {
+    let (sub, orig) = graph.largest_component(strongly);
+    let positions = positions.select(&orig);
+    SpatialGraph { graph: sub, positions }
+}
+
+/// Random geometric "sensor net": `n` points uniform in the unit square,
+/// edges between pairs closer than `c/√n`, weighted by Euclidean length.
+/// `c ≈ 1.25` (undirected) reproduces the paper's U-Sensor Net; for the
+/// directed variant (`c ≈ 1.45`) each edge keeps one random direction.
+pub fn sensor_net(n: usize, c: f64, directed: bool, seed: u64) -> SpatialGraph {
+    let mut rng = Rng::new(seed);
+    let pts = uniform_square(n, &mut rng);
+    let r = c / (n as f64).sqrt();
+    let index = GridIndex::build(&pts, r.max(1e-6));
+    let mut edges = Vec::new();
+    let mut near = Vec::new();
+    for i in 0..n {
+        index.neighbors_within(&pts, i, r, &mut near);
+        for &j in &near {
+            if j > i {
+                let w = pts.dist(i, j);
+                if directed {
+                    // Random orientation per edge.
+                    if rng.bernoulli(0.5) {
+                        edges.push((i, j, w));
+                    } else {
+                        edges.push((j, i, w));
+                    }
+                } else {
+                    edges.push((i, j, w));
+                }
+            }
+        }
+    }
+    let g = CsrGraph::from_edges(n, &edges, !directed);
+    extract_component(g, pts, directed)
+}
+
+/// Road-network stand-in (Pennsylvania-like): a jittered w×h grid where each
+/// lattice edge survives with probability `keep`, plus a few long-range
+/// "highways". Produces a sparse planar graph with grid-like detours.
+pub fn road_network(w: usize, h: usize, keep: f64, seed: u64) -> SpatialGraph {
+    let mut rng = Rng::new(seed);
+    let n = w * h;
+    let mut pts = Points::with_capacity(2, n);
+    for y in 0..h {
+        for x in 0..w {
+            let jx = (x as f64 + rng.range(-0.25, 0.25)) / w as f64;
+            let jy = (y as f64 + rng.range(-0.25, 0.25)) / h as f64;
+            pts.push(&[jx, jy]);
+        }
+    }
+    let id = |x: usize, y: usize| y * w + x;
+    let mut edges = Vec::new();
+    for y in 0..h {
+        for x in 0..w {
+            if x + 1 < w && rng.bernoulli(keep) {
+                let (a, b) = (id(x, y), id(x + 1, y));
+                edges.push((a, b, pts.dist(a, b)));
+            }
+            if y + 1 < h && rng.bernoulli(keep) {
+                let (a, b) = (id(x, y), id(x, y + 1));
+                edges.push((a, b, pts.dist(a, b)));
+            }
+        }
+    }
+    // Highways: sparse fast long edges (weight discounted 2x, as highways
+    // shorten effective travel), about n/200 of them.
+    for _ in 0..(n / 200).max(1) {
+        let a = rng.below(n);
+        let b = rng.below(n);
+        if a != b {
+            edges.push((a, b, pts.dist(a, b) * 0.5));
+        }
+    }
+    let g = CsrGraph::from_edges(n, &edges, true);
+    extract_component(g, pts, false)
+}
+
+/// Rail-network stand-in (Europe-rail-like): `hubs` cluster centres joined
+/// by a proximity backbone; each hub fans out chains of local stations.
+pub fn rail_network(hubs: usize, stations_per_hub: usize, seed: u64) -> SpatialGraph {
+    let mut rng = Rng::new(seed);
+    let mut pts = Points::with_capacity(2, hubs * (1 + stations_per_hub));
+    // Hub positions.
+    for _ in 0..hubs {
+        pts.push(&[rng.f64(), rng.f64()]);
+    }
+    let mut edges: Vec<(usize, usize, f64)> = Vec::new();
+    // Backbone: connect each hub to its 3 nearest hubs (O(H²), H is small).
+    for i in 0..hubs {
+        let mut by_dist: Vec<(f64, usize)> = (0..hubs)
+            .filter(|&j| j != i)
+            .map(|j| (pts.dist(i, j), j))
+            .collect();
+        by_dist.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for &(w, j) in by_dist.iter().take(3) {
+            if i < j {
+                edges.push((i, j, w));
+            }
+        }
+    }
+    // Station chains: short branches hanging off each hub.
+    let mut next = hubs;
+    for hub in 0..hubs {
+        let mut chains = 3.max(stations_per_hub / 8);
+        let mut remaining = stations_per_hub;
+        while remaining > 0 && chains > 0 {
+            let len = (remaining / chains).max(1);
+            let mut prev = hub;
+            let dir = rng.unit_sphere(2);
+            for s in 0..len.min(remaining) {
+                let hp = pts.row(hub);
+                let step = 0.01 * (s + 1) as f64;
+                let p = [
+                    (hp[0] + dir[0] * step + rng.range(-0.003, 0.003)).clamp(0.0, 1.0),
+                    (hp[1] + dir[1] * step + rng.range(-0.003, 0.003)).clamp(0.0, 1.0),
+                ];
+                pts.push(&p);
+                let w = pts.dist(prev, next);
+                edges.push((prev, next, w));
+                prev = next;
+                next += 1;
+            }
+            remaining = remaining.saturating_sub(len);
+            chains -= 1;
+        }
+    }
+    let n = pts.len();
+    let g = CsrGraph::from_edges(n, &edges, true);
+    extract_component(g, pts, false)
+}
+
+/// Preferential-attachment digraph (Gnutella-like small world): node i joins
+/// with `m` out-arcs whose endpoints are sampled proportionally to degree+1,
+/// plus a back-arc with probability `p_back` (keeps one big SCC).
+/// Arc weights are 1 (hop-count metric, as for the paper's P2P graph).
+pub fn preferential_attachment(n: usize, m: usize, p_back: f64, seed: u64) -> CsrGraph {
+    assert!(n > m && m >= 1);
+    let mut rng = Rng::new(seed);
+    let mut edges: Vec<(usize, usize, f64)> = Vec::new();
+    // Endpoint pool: node k appears degree(k)+1 times.
+    let mut pool: Vec<usize> = (0..=m).collect();
+    // Seed clique among the first m+1 nodes.
+    for i in 0..=m {
+        for j in 0..i {
+            edges.push((i, j, 1.0));
+            edges.push((j, i, 1.0));
+            pool.push(i);
+            pool.push(j);
+        }
+    }
+    for i in (m + 1)..n {
+        let mut chosen = Vec::with_capacity(m);
+        let mut guard = 0;
+        while chosen.len() < m && guard < 50 * m {
+            let t = pool[rng.below(pool.len())];
+            if t != i && !chosen.contains(&t) {
+                chosen.push(t);
+            }
+            guard += 1;
+        }
+        for &t in &chosen {
+            edges.push((i, t, 1.0));
+            pool.push(t);
+            if rng.bernoulli(p_back) {
+                edges.push((t, i, 1.0));
+                pool.push(i);
+            }
+        }
+        pool.push(i);
+    }
+    let g = CsrGraph::from_edges(n, &edges, false);
+    g.largest_component(true).0
+}
+
+/// Uniform random tree on `n` nodes (random attachment), unit weights.
+/// Used to exercise the linear-time tree-medoid oracle against trimed.
+pub fn random_tree(n: usize, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(n.saturating_sub(1));
+    for v in 1..n {
+        let parent = rng.below(v);
+        edges.push((parent, v, rng.range(0.5, 2.0)));
+    }
+    CsrGraph::from_edges(n, &edges, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sensor_net_connected_and_spatial() {
+        let sg = sensor_net(500, 1.6, false, 1);
+        assert!(sg.graph.num_nodes() > 300, "kept {}", sg.graph.num_nodes());
+        assert_eq!(sg.positions.len(), sg.graph.num_nodes());
+        let (_, ncomp) = sg.graph.weak_components();
+        assert_eq!(ncomp, 1);
+    }
+
+    #[test]
+    fn directed_sensor_net_strongly_connected() {
+        let sg = sensor_net(400, 2.0, true, 2);
+        let (_, ncomp) = sg.graph.strong_components();
+        assert_eq!(ncomp, 1);
+        assert!(sg.graph.num_nodes() > 100);
+    }
+
+    #[test]
+    fn road_network_sparse_connected() {
+        let sg = road_network(30, 30, 0.85, 3);
+        let n = sg.graph.num_nodes();
+        assert!(n > 500);
+        let (_, ncomp) = sg.graph.weak_components();
+        assert_eq!(ncomp, 1);
+        // Sparse: average degree < 6.
+        assert!(sg.graph.num_arcs() < 6 * n);
+    }
+
+    #[test]
+    fn rail_network_connected() {
+        let sg = rail_network(20, 40, 4);
+        let (_, ncomp) = sg.graph.weak_components();
+        assert_eq!(ncomp, 1);
+        assert!(sg.graph.num_nodes() > 100);
+    }
+
+    #[test]
+    fn preferential_attachment_sc() {
+        let g = preferential_attachment(300, 3, 0.5, 5);
+        let (_, ncomp) = g.strong_components();
+        assert_eq!(ncomp, 1);
+        assert!(g.num_nodes() > 100);
+    }
+
+    #[test]
+    fn random_tree_is_tree() {
+        let g = random_tree(50, 6);
+        assert_eq!(g.num_nodes(), 50);
+        assert_eq!(g.num_arcs(), 2 * 49); // undirected storage
+        let (_, ncomp) = g.weak_components();
+        assert_eq!(ncomp, 1);
+    }
+}

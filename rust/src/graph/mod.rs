@@ -1,0 +1,391 @@
+//! Graph substrate: CSR storage, shortest paths, components, generators.
+//!
+//! The paper evaluates medoid algorithms on spatial networks (sensor nets,
+//! road and rail networks) and a P2P graph, where the metric is shortest
+//! path length and "computing an element" is one Dijkstra run. This module
+//! provides everything those experiments need, built from scratch.
+
+pub mod bfs;
+pub mod dijkstra;
+pub mod generators;
+
+use crate::metric::MetricSpace;
+
+/// A weighted directed graph in compressed-sparse-row form.
+///
+/// Undirected graphs are stored with both arc directions. Weights must be
+/// non-negative (shortest-path metric).
+#[derive(Clone, Debug)]
+pub struct CsrGraph {
+    /// offsets[v]..offsets[v+1] indexes targets/weights of v's out-arcs.
+    offsets: Vec<usize>,
+    targets: Vec<u32>,
+    weights: Vec<f64>,
+}
+
+impl CsrGraph {
+    /// Build from an arc list `(from, to, weight)`. If `undirected`, each
+    /// edge is inserted in both directions.
+    pub fn from_edges(n: usize, edges: &[(usize, usize, f64)], undirected: bool) -> Self {
+        let mut degree = vec![0usize; n];
+        for &(u, v, w) in edges {
+            assert!(u < n && v < n, "edge ({u},{v}) out of range n={n}");
+            assert!(w >= 0.0, "negative weight {w}");
+            degree[u] += 1;
+            if undirected {
+                degree[v] += 1;
+            }
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + degree[v];
+        }
+        let m = offsets[n];
+        let mut targets = vec![0u32; m];
+        let mut weights = vec![0f64; m];
+        let mut cursor = offsets.clone();
+        for &(u, v, w) in edges {
+            targets[cursor[u]] = v as u32;
+            weights[cursor[u]] = w;
+            cursor[u] += 1;
+            if undirected {
+                targets[cursor[v]] = u as u32;
+                weights[cursor[v]] = w;
+                cursor[v] += 1;
+            }
+        }
+        CsrGraph { offsets, targets, weights }
+    }
+
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of stored arcs (an undirected edge counts twice).
+    pub fn num_arcs(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Out-neighbours of `v` with weights.
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let range = self.offsets[v]..self.offsets[v + 1];
+        self.targets[range.clone()]
+            .iter()
+            .zip(&self.weights[range])
+            .map(|(&t, &w)| (t as usize, w))
+    }
+
+    /// Graph with all arcs reversed.
+    pub fn reversed(&self) -> CsrGraph {
+        let n = self.num_nodes();
+        let mut edges = Vec::with_capacity(self.num_arcs());
+        for v in 0..n {
+            for (u, w) in self.neighbors(v) {
+                edges.push((u, v, w));
+            }
+        }
+        CsrGraph::from_edges(n, &edges, false)
+    }
+
+    /// Connected components, treating arcs as undirected.
+    /// Returns (component id per node, number of components).
+    pub fn weak_components(&self) -> (Vec<usize>, usize) {
+        let n = self.num_nodes();
+        let rev = self.reversed();
+        let mut comp = vec![usize::MAX; n];
+        let mut ncomp = 0;
+        let mut stack = Vec::new();
+        for start in 0..n {
+            if comp[start] != usize::MAX {
+                continue;
+            }
+            comp[start] = ncomp;
+            stack.push(start);
+            while let Some(v) = stack.pop() {
+                for (u, _) in self.neighbors(v).chain(rev.neighbors(v)) {
+                    if comp[u] == usize::MAX {
+                        comp[u] = ncomp;
+                        stack.push(u);
+                    }
+                }
+            }
+            ncomp += 1;
+        }
+        (comp, ncomp)
+    }
+
+    /// Strongly connected components (iterative Tarjan).
+    /// Returns (component id per node, number of components).
+    pub fn strong_components(&self) -> (Vec<usize>, usize) {
+        let n = self.num_nodes();
+        let mut index = vec![usize::MAX; n];
+        let mut lowlink = vec![0usize; n];
+        let mut on_stack = vec![false; n];
+        let mut comp = vec![usize::MAX; n];
+        let mut stack: Vec<usize> = Vec::new();
+        let mut next_index = 0usize;
+        let mut ncomp = 0usize;
+        // Explicit DFS frames: (node, neighbor cursor).
+        let mut frames: Vec<(usize, usize)> = Vec::new();
+
+        for root in 0..n {
+            if index[root] != usize::MAX {
+                continue;
+            }
+            frames.push((root, 0));
+            index[root] = next_index;
+            lowlink[root] = next_index;
+            next_index += 1;
+            stack.push(root);
+            on_stack[root] = true;
+
+            while let Some(&mut (v, ref mut cursor)) = frames.last_mut() {
+                let deg = self.offsets[v + 1] - self.offsets[v];
+                if *cursor < deg {
+                    let arc = self.offsets[v] + *cursor;
+                    *cursor += 1;
+                    let w = self.targets[arc] as usize;
+                    if index[w] == usize::MAX {
+                        index[w] = next_index;
+                        lowlink[w] = next_index;
+                        next_index += 1;
+                        stack.push(w);
+                        on_stack[w] = true;
+                        frames.push((w, 0));
+                    } else if on_stack[w] {
+                        lowlink[v] = lowlink[v].min(index[w]);
+                    }
+                } else {
+                    frames.pop();
+                    if let Some(&mut (parent, _)) = frames.last_mut() {
+                        lowlink[parent] = lowlink[parent].min(lowlink[v]);
+                    }
+                    if lowlink[v] == index[v] {
+                        loop {
+                            let w = stack.pop().unwrap();
+                            on_stack[w] = false;
+                            comp[w] = ncomp;
+                            if w == v {
+                                break;
+                            }
+                        }
+                        ncomp += 1;
+                    }
+                }
+            }
+        }
+        (comp, ncomp)
+    }
+
+    /// Subgraph induced by the largest component.
+    ///
+    /// For undirected use, pass `strongly = false` (weak components); for
+    /// directed graphs pass `strongly = true` so all pairwise distances are
+    /// finite. Returns the subgraph and the original node index of each
+    /// retained node.
+    pub fn largest_component(&self, strongly: bool) -> (CsrGraph, Vec<usize>) {
+        let (comp, ncomp) = if strongly { self.strong_components() } else { self.weak_components() };
+        let mut sizes = vec![0usize; ncomp];
+        for &c in &comp {
+            sizes[c] += 1;
+        }
+        let best = sizes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &s)| s)
+            .map(|(c, _)| c)
+            .unwrap_or(0);
+        let keep: Vec<usize> = (0..self.num_nodes()).filter(|&v| comp[v] == best).collect();
+        let mut remap = vec![usize::MAX; self.num_nodes()];
+        for (new, &old) in keep.iter().enumerate() {
+            remap[old] = new;
+        }
+        let mut edges = Vec::new();
+        for &old in &keep {
+            for (t, w) in self.neighbors(old) {
+                if remap[t] != usize::MAX {
+                    edges.push((remap[old], remap[t], w));
+                }
+            }
+        }
+        (CsrGraph::from_edges(keep.len(), &edges, false), keep)
+    }
+
+    /// All-pairs shortest paths by Floyd-Warshall — O(n³), test oracle only.
+    pub fn floyd_warshall(&self) -> Vec<Vec<f64>> {
+        let n = self.num_nodes();
+        let mut d = vec![vec![f64::INFINITY; n]; n];
+        for v in 0..n {
+            d[v][v] = 0.0;
+            for (u, w) in self.neighbors(v) {
+                if w < d[v][u] {
+                    d[v][u] = w;
+                }
+            }
+        }
+        for k in 0..n {
+            for i in 0..n {
+                let dik = d[i][k];
+                if !dik.is_finite() {
+                    continue;
+                }
+                for j in 0..n {
+                    let alt = dik + d[k][j];
+                    if alt < d[i][j] {
+                        d[i][j] = alt;
+                    }
+                }
+            }
+        }
+        d
+    }
+}
+
+/// Shortest-path metric over a graph (must be connected / strongly
+/// connected so that all distances are finite).
+///
+/// For undirected graphs the metric is symmetric; for directed graphs the
+/// reverse graph is precomputed so that [`MetricSpace::all_to_one`]
+/// (in-distances, needed by trimed's directed bounds and by RAND's anchor
+/// estimates) is a single reverse Dijkstra.
+pub struct GraphMetric {
+    graph: CsrGraph,
+    /// `Some` for directed graphs: arcs reversed.
+    reverse: Option<CsrGraph>,
+    /// All arcs have weight 1 → one-to-all uses BFS instead of Dijkstra.
+    unit_weights: bool,
+}
+
+impl GraphMetric {
+    /// Wrap an undirected (symmetric) graph.
+    pub fn new(graph: CsrGraph) -> Self {
+        let unit_weights = bfs::has_unit_weights(&graph);
+        GraphMetric { graph, reverse: None, unit_weights }
+    }
+
+    /// Wrap a directed graph; builds the reverse graph for in-distance
+    /// queries.
+    pub fn new_directed(graph: CsrGraph) -> Self {
+        let unit_weights = bfs::has_unit_weights(&graph);
+        let reverse = Some(graph.reversed());
+        GraphMetric { graph, reverse, unit_weights }
+    }
+
+    /// The underlying graph.
+    pub fn graph(&self) -> &CsrGraph {
+        &self.graph
+    }
+
+    fn sssp(&self, g: &CsrGraph, i: usize, out: &mut [f64]) {
+        if self.unit_weights {
+            bfs::bfs_all(g, i, out);
+        } else {
+            dijkstra::dijkstra_all(g, i, out);
+        }
+    }
+}
+
+impl MetricSpace for GraphMetric {
+    fn len(&self) -> usize {
+        self.graph.num_nodes()
+    }
+
+    fn symmetric(&self) -> bool {
+        self.reverse.is_none()
+    }
+
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        dijkstra::dijkstra_pair(&self.graph, i, j)
+    }
+
+    fn one_to_all(&self, i: usize, out: &mut [f64]) {
+        self.sssp(&self.graph, i, out);
+    }
+
+    fn all_to_one(&self, i: usize, out: &mut [f64]) {
+        match &self.reverse {
+            None => self.sssp(&self.graph, i, out),
+            Some(rev) => self.sssp(rev, i, out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> CsrGraph {
+        let edges: Vec<(usize, usize, f64)> = (0..n - 1).map(|i| (i, i + 1, 1.0)).collect();
+        CsrGraph::from_edges(n, &edges, true)
+    }
+
+    #[test]
+    fn csr_neighbors() {
+        let g = CsrGraph::from_edges(3, &[(0, 1, 2.0), (1, 2, 3.0)], true);
+        let n1: Vec<_> = g.neighbors(1).collect();
+        assert_eq!(n1.len(), 2);
+        assert!(n1.contains(&(0, 2.0)));
+        assert!(n1.contains(&(2, 3.0)));
+    }
+
+    #[test]
+    fn weak_components_counts() {
+        // Two components: {0,1}, {2}.
+        let g = CsrGraph::from_edges(3, &[(0, 1, 1.0)], true);
+        let (comp, ncomp) = g.weak_components();
+        assert_eq!(ncomp, 2);
+        assert_eq!(comp[0], comp[1]);
+        assert_ne!(comp[0], comp[2]);
+    }
+
+    #[test]
+    fn strong_components_cycle_vs_chain() {
+        // 0 -> 1 -> 2 -> 0 is one SCC; 3 alone (0 -> 3).
+        let g = CsrGraph::from_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 0, 1.0), (0, 3, 1.0)], false);
+        let (comp, ncomp) = g.strong_components();
+        assert_eq!(ncomp, 2);
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[1], comp[2]);
+        assert_ne!(comp[0], comp[3]);
+    }
+
+    #[test]
+    fn largest_component_extraction() {
+        // Components {0,1,2} and {3,4}.
+        let g = CsrGraph::from_edges(
+            5,
+            &[(0, 1, 1.0), (1, 2, 1.0), (3, 4, 1.0)],
+            true,
+        );
+        let (sub, orig) = g.largest_component(false);
+        assert_eq!(sub.num_nodes(), 3);
+        assert_eq!(orig, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn graph_metric_path_distances() {
+        let m = GraphMetric::new(path_graph(5));
+        assert_eq!(m.dist(0, 4), 4.0);
+        let mut out = vec![0.0; 5];
+        m.one_to_all(2, &mut out);
+        assert_eq!(out, vec![2.0, 1.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn floyd_matches_path() {
+        let g = path_graph(4);
+        let d = g.floyd_warshall();
+        assert_eq!(d[0][3], 3.0);
+        assert_eq!(d[3][1], 2.0);
+    }
+
+    #[test]
+    fn reversed_digraph() {
+        let g = CsrGraph::from_edges(2, &[(0, 1, 5.0)], false);
+        let r = g.reversed();
+        assert_eq!(r.neighbors(1).collect::<Vec<_>>(), vec![(0, 5.0)]);
+        assert_eq!(r.neighbors(0).count(), 0);
+    }
+}

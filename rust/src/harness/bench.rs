@@ -1,0 +1,93 @@
+//! Timing utility for the `harness = false` benches (criterion is not in
+//! the offline vendor set): warmup + repeated measurement, median/MAD.
+
+use std::time::Instant;
+
+/// Summary statistics over repeated timings (nanoseconds).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    /// Median wall time per iteration, ns.
+    pub median_ns: f64,
+    /// Mean wall time per iteration, ns.
+    pub mean_ns: f64,
+    /// Median absolute deviation, ns.
+    pub mad_ns: f64,
+    /// Fastest iteration, ns.
+    pub min_ns: f64,
+    /// Number of measured iterations.
+    pub iters: usize,
+}
+
+impl BenchStats {
+    /// Human-readable `median ± mad`.
+    pub fn summary(&self) -> String {
+        format!("{} ± {} (min {}, n={})", fmt_ns(self.median_ns), fmt_ns(self.mad_ns), fmt_ns(self.min_ns), self.iters)
+    }
+}
+
+/// Format nanoseconds with a sensible unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+/// The closure's return value is black-boxed to keep the work alive.
+pub fn time_block<T, F: FnMut() -> T>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchStats {
+        median_ns: median,
+        mean_ns: mean,
+        mad_ns: devs[devs.len() / 2],
+        min_ns: samples[0],
+        iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive_and_ordered() {
+        let s = time_block(1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.min_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20s");
+    }
+}

@@ -1,0 +1,202 @@
+//! Scale-aware dataset registry mapping every dataset in the paper's
+//! evaluation to its synthetic stand-in (DESIGN.md "Dataset
+//! substitutions").
+
+use crate::data::synthetic as syn;
+use crate::data::Points;
+use crate::graph::generators as gen;
+use crate::graph::GraphMetric;
+use crate::harness::Scale;
+use crate::metric::{MetricSpace, VectorMetric};
+
+/// A metric over either vector or graph data — what Table 1 mixes.
+pub enum AnyMetric {
+    /// Euclidean over dense vectors.
+    Vector(VectorMetric),
+    /// Shortest paths over a graph.
+    Graph(GraphMetric),
+}
+
+impl MetricSpace for AnyMetric {
+    fn len(&self) -> usize {
+        match self {
+            AnyMetric::Vector(m) => m.len(),
+            AnyMetric::Graph(m) => m.len(),
+        }
+    }
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        match self {
+            AnyMetric::Vector(m) => m.dist(i, j),
+            AnyMetric::Graph(m) => m.dist(i, j),
+        }
+    }
+    fn one_to_all(&self, i: usize, out: &mut [f64]) {
+        match self {
+            AnyMetric::Vector(m) => m.one_to_all(i, out),
+            AnyMetric::Graph(m) => m.one_to_all(i, out),
+        }
+    }
+    fn symmetric(&self) -> bool {
+        match self {
+            AnyMetric::Vector(m) => m.symmetric(),
+            AnyMetric::Graph(m) => m.symmetric(),
+        }
+    }
+    fn all_to_one(&self, i: usize, out: &mut [f64]) {
+        match self {
+            AnyMetric::Vector(m) => m.all_to_one(i, out),
+            AnyMetric::Graph(m) => m.all_to_one(i, out),
+        }
+    }
+}
+
+/// A named Table-1 workload.
+pub struct NamedDataset {
+    /// Paper dataset this stands in for.
+    pub name: &'static str,
+    /// Paper's type column ("2-d", "u-graph", ...).
+    pub kind: &'static str,
+    /// The metric.
+    pub metric: AnyMetric,
+}
+
+/// The nine Table-1 datasets (synthetic stand-ins), scaled.
+pub fn table1_datasets(scale: Scale, seed: u64) -> Vec<NamedDataset> {
+    let mut out = Vec::new();
+    let vec = |name, kind, pts: Points| NamedDataset {
+        name,
+        kind,
+        metric: AnyMetric::Vector(VectorMetric::new(pts)),
+    };
+    let ugraph = |name, g| NamedDataset { name, kind: "u-graph", metric: AnyMetric::Graph(GraphMetric::new(g)) };
+    let dgraph = |name, g| NamedDataset { name, kind: "d-graph", metric: AnyMetric::Graph(GraphMetric::new_directed(g)) };
+
+    // Paper N values in comments; scaled to (small, medium, full) tiers.
+    // Graph datasets get a smaller Medium tier than vector ones: the
+    // TOPRANK baselines sit left of their crossover at these N and
+    // compute ~N Dijkstras per rep, which dominates the whole suite.
+    out.push(vec("Birch1-like", "2-d", syn::birch_grid(scale.n(100_000, 3_000, 20_000), seed))); // 1.0e5
+    out.push(vec("Birch2-like", "2-d", syn::birch_line(scale.n(100_000, 3_000, 20_000), seed + 1))); // 1.0e5
+    out.push(vec("Europe-like", "2-d", syn::border_map(scale.n(160_000, 3_000, 20_000), 8, seed + 2))); // 1.6e5
+    out.push(ugraph(
+        "U-SensorNet-like",
+        gen::sensor_net(scale.n(360_000, 3_000, 7_000), 1.5, false, seed + 3).graph,
+    )); // 3.6e5
+    out.push(dgraph(
+        "D-SensorNet-like",
+        gen::sensor_net(scale.n(360_000, 3_000, 6_000), 1.8, true, seed + 4).graph,
+    )); // 3.6e5
+    {
+        let side = match scale {
+            Scale::Small => 55,
+            Scale::Medium => 85,
+            Scale::Full => 1_000, // 1e6 nodes ~ paper's 1.1e6
+        };
+        out.push(ugraph(
+            "PennRoad-like",
+            gen::road_network(side, side, 0.9, seed + 5).graph,
+        ));
+    }
+    {
+        let (hubs, spokes) = match scale {
+            Scale::Small => (30, 90),
+            Scale::Medium => (50, 120),
+            Scale::Full => (120, 380), // ~4.6e4 like Europe rail
+        };
+        out.push(ugraph("EuroRail-like", gen::rail_network(hubs, spokes, seed + 6).graph));
+    }
+    out.push(dgraph(
+        "Gnutella-like",
+        gen::preferential_attachment(scale.n(6_300, 2_000, 6_300), 4, 0.35, seed + 7),
+    )); // 6.3e3
+    out.push(vec(
+        "MNIST0-like",
+        "784-d",
+        syn::mnist_like(scale.n(6_700, 800, 3_000), seed + 8),
+    )); // 6.7e3
+    out
+}
+
+/// The four Table-2 datasets (vector only), scaled: (name, N, d, points).
+pub fn table2_datasets(scale: Scale, seed: u64) -> Vec<(&'static str, Points)> {
+    vec![
+        ("Europe-like", syn::border_map(scale.n(160_000, 2_000, 12_000), 8, seed)), // 1.6e5, d=2
+        ("Conflong-like", syn::trajectory3d(scale.n(160_000, 2_000, 12_000), seed + 1)), // 1.6e5, d=3
+        ("Colormo-like", syn::gauss_mix(scale.n(68_000, 1_500, 8_000), 9, 16, 0.08, seed + 2)), // 6.8e4, d=9
+        (
+            "MNIST50-like",
+            syn::random_projection(&syn::mnist_like(scale.n(60_000, 800, 4_000), seed + 3), 50, seed + 4),
+        ), // 6.0e4, d=50
+    ]
+}
+
+/// The fourteen Table-3 (SM-E) small datasets: (name, N, d, cluster count
+/// for the generator; paper's N/d are matched exactly at Full scale).
+pub fn table3_datasets(scale: Scale, seed: u64) -> Vec<(&'static str, Points)> {
+    // (name, paper N, d, modes, sigma)
+    let specs: &[(&'static str, usize, usize, usize, f64)] = &[
+        ("gassensor", 256, 128, 6, 0.15),
+        ("house16H", 1927, 17, 8, 0.12),
+        ("S1", 5000, 2, 15, 0.02),
+        ("S2", 5000, 2, 15, 0.035),
+        ("S3", 5000, 2, 15, 0.05),
+        ("S4", 5000, 2, 15, 0.065),
+        ("A1", 3000, 2, 20, 0.02),
+        ("A2", 5250, 2, 35, 0.02),
+        ("A3", 7500, 2, 50, 0.02),
+        ("thyroid", 215, 5, 3, 0.1),
+        ("yeast", 1484, 8, 10, 0.12),
+        ("wine", 178, 14, 3, 0.12),
+        ("breast", 699, 9, 2, 0.15),
+        ("spiral", 312, 3, 3, 0.08),
+    ];
+    specs
+        .iter()
+        .enumerate()
+        .map(|(i, &(name, n, d, modes, sigma))| {
+            let n = match scale {
+                Scale::Small => (n / 4).max(60),
+                _ => n,
+            };
+            (name, syn::gauss_mix(n, d, modes, sigma, seed + i as u64))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_small_has_nine_rows() {
+        let ds = table1_datasets(Scale::Small, 1);
+        assert_eq!(ds.len(), 9);
+        for d in &ds {
+            assert!(d.metric.len() >= 500, "{} too small: {}", d.name, d.metric.len());
+        }
+    }
+
+    #[test]
+    fn table2_dims_match_paper() {
+        let ds = table2_datasets(Scale::Small, 2);
+        let dims: Vec<usize> = ds.iter().map(|(_, p)| p.dim()).collect();
+        assert_eq!(dims, vec![2, 3, 9, 50]);
+    }
+
+    #[test]
+    fn table3_full_matches_paper_sizes() {
+        let ds = table3_datasets(Scale::Medium, 3);
+        assert_eq!(ds.len(), 14);
+        assert_eq!(ds[0].1.len(), 256);
+        assert_eq!(ds[0].1.dim(), 128);
+        assert_eq!(ds[8].1.len(), 7500);
+    }
+
+    #[test]
+    fn directed_dataset_is_asymmetric_metric() {
+        let ds = table1_datasets(Scale::Small, 4);
+        let dsn = &ds[4];
+        assert_eq!(dsn.kind, "d-graph");
+        assert!(!dsn.metric.symmetric());
+    }
+}

@@ -1,0 +1,547 @@
+//! One function per table/figure of the paper's evaluation. Each returns a
+//! [`Table`] whose rows mirror what the paper reports; the CLI and the
+//! cargo benches print them, EXPERIMENTS.md records them.
+
+use super::datasets::{table1_datasets, table2_datasets, table3_datasets, AnyMetric};
+use super::table::{fnum, Table};
+use super::Scale;
+use crate::algo::{
+    scan_medoid, toprank, toprank2, trimed_medoid, trimed_with_opts, TopRankOpts, TrimedOpts,
+};
+use crate::data::synthetic as syn;
+use crate::kmedoids::{kmeds, trikmeds, KmedsOpts, TrikmedsOpts};
+use crate::kmedoids::trikmeds::TrikmedsInit;
+use crate::metric::{Counted, MetricSpace, VectorMetric};
+
+/// Mean one-to-all count ("computed elements", n̂) of a medoid algorithm
+/// over `reps` seeds; also sanity-checks that every run agrees with the
+/// reference medoid energy when one is supplied.
+fn mean_computed<M: MetricSpace, F: Fn(&Counted<&M>, u64) -> (usize, f64, u64)>(
+    metric: &M,
+    reps: usize,
+    run: F,
+    ref_energy: Option<f64>,
+) -> f64 {
+    let mut total = 0u64;
+    for rep in 0..reps {
+        let counted = Counted::new(metric);
+        let (_, energy, _) = run(&counted, rep as u64 * 7919 + 1);
+        if let Some(re) = ref_energy {
+            assert!(
+                (energy - re).abs() <= 1e-6 * re.max(1.0),
+                "algorithm returned E={energy}, reference E={re}"
+            );
+        }
+        total += counted.counts().one_to_all;
+    }
+    total as f64 / reps as f64
+}
+
+// ---------------------------------------------------------------------
+// Figure 3: computed elements vs N, trimed vs TOPRANK.
+// ---------------------------------------------------------------------
+
+/// Figure 3: left panel = uniform cube d∈{2..6}; right panel = unit ball
+/// with inner mass 1/200, d∈{2,6}. Series of n̂ against N for trimed and
+/// TOPRANK, with the paper's reference curves √N and N^{2/3}log^{1/3}N.
+pub fn fig3(scale: Scale, seed: u64) -> Table {
+    let ns: Vec<usize> = match scale {
+        Scale::Small => vec![1_000, 2_154, 4_642],
+        Scale::Medium => vec![1_000, 2_154, 4_642, 10_000, 21_544],
+        Scale::Full => vec![1_000, 2_154, 4_642, 10_000, 21_544, 46_416, 100_000],
+    };
+    let reps = match scale {
+        Scale::Small => 1,
+        _ => 3,
+    };
+    let mut t = Table::new(
+        "Figure 3: computed elements vs N (trimed vs TOPRANK)",
+        &["panel", "d", "N", "trimed n̂", "toprank n̂", "sqrt(N)", "N^2/3·log^1/3"],
+    );
+    let panel = |t: &mut Table, panel_name: &str, d: usize, pts_for: &dyn Fn(usize, u64) -> crate::data::Points| {
+        for &n in &ns {
+            let mut tm = 0.0;
+            let mut tr = 0.0;
+            for rep in 0..reps {
+                let pts = pts_for(n, seed + rep as u64 * 131 + d as u64);
+                let m = VectorMetric::new(pts);
+                let cm = Counted::new(&m);
+                let _ = trimed_medoid(&cm, seed + rep as u64);
+                tm += cm.counts().one_to_all as f64;
+                let ct = Counted::new(&m);
+                let _ = toprank(&ct, &TopRankOpts { seed: seed + rep as u64, ..Default::default() });
+                tr += ct.counts().one_to_all as f64;
+            }
+            let nf = n as f64;
+            t.push_row(vec![
+                panel_name.to_string(),
+                d.to_string(),
+                n.to_string(),
+                fnum(tm / reps as f64),
+                fnum(tr / reps as f64),
+                fnum(nf.sqrt()),
+                fnum(nf.powf(2.0 / 3.0) * nf.ln().powf(1.0 / 3.0)),
+            ]);
+        }
+    };
+    for d in 2..=6usize {
+        panel(&mut t, "uniform-cube", d, &|n, s| syn::uniform_cube(n, d, s));
+    }
+    for d in [2usize, 6] {
+        panel(&mut t, "ball-1/200", d, &|n, s| syn::ball_shell_biased(n, d, 0.01, s));
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Table 1: n̂ for TOPRANK / TOPRANK2 / trimed on the nine datasets.
+// ---------------------------------------------------------------------
+
+/// Table 1: mean computed elements over `scale.reps()` seeded runs for
+/// each algorithm on each (stand-in) dataset. All three algorithms are
+/// verified to return a minimiser of the scan energy on Small scale.
+pub fn table1(scale: Scale, seed: u64) -> Table {
+    let reps = scale.reps();
+    let mut t = Table::new(
+        "Table 1: mean computed elements n̂ (lower is better)",
+        &["dataset", "type", "N", "TOPRANK n̂", "TOPRANK2 n̂", "trimed n̂"],
+    );
+    for ds in table1_datasets(scale, seed) {
+        let n = ds.metric.len();
+        let m: &AnyMetric = &ds.metric;
+        // Reference energy for correctness cross-checks (cheap enough at
+        // Small scale only).
+        let ref_energy = if scale == Scale::Small {
+            Some(scan_medoid(&m).energy)
+        } else {
+            None
+        };
+        let tr = mean_computed(
+            &m,
+            reps,
+            |cm, s| {
+                let r = toprank(cm, &TopRankOpts { seed: s, ..Default::default() });
+                (r.medoid, r.energy, r.computed)
+            },
+            ref_energy,
+        );
+        let tr2 = mean_computed(
+            &m,
+            reps,
+            |cm, s| {
+                let r = toprank2(cm, &TopRankOpts { seed: s, ..Default::default() });
+                (r.medoid, r.energy, r.computed)
+            },
+            ref_energy,
+        );
+        let tm = mean_computed(
+            &m,
+            reps,
+            |cm, s| {
+                let r = trimed_medoid(cm, s);
+                (r.medoid, r.energy, r.computed)
+            },
+            ref_energy,
+        );
+        t.push_row(vec![
+            ds.name.to_string(),
+            ds.kind.to_string(),
+            n.to_string(),
+            fnum(tr),
+            fnum(tr2),
+            fnum(tm),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Table 2: trikmeds-ε distance calculations and energies.
+// ---------------------------------------------------------------------
+
+/// Table 2: for each dataset and K ∈ {10, ⌈√N⌉}: `N_c/N²` for ε = 0 and
+/// relative distance counts φ_c / energies φ_E for ε ∈ {0.01, 0.1}.
+pub fn table2(scale: Scale, seed: u64) -> Table {
+    let mut t = Table::new(
+        "Table 2: trikmeds-ε relative distance calculations and energies",
+        &[
+            "dataset", "N", "d", "K", "Nc/N^2 (ε=0)", "φc ε=.01", "φE ε=.01", "φc ε=.1",
+            "φE ε=.1", "iters",
+        ],
+    );
+    for (name, pts) in table2_datasets(scale, seed) {
+        let n = pts.len();
+        let d = pts.dim();
+        let ks = [10usize, (n as f64).sqrt().ceil() as usize];
+        for k in ks {
+            let run = |eps: f64| {
+                let m = Counted::new(VectorMetric::new(pts.clone()));
+                let r = trikmeds(
+                    &m,
+                    &TrikmedsOpts {
+                        k,
+                        init: TrikmedsInit::Uniform(seed + k as u64),
+                        eps,
+                        max_iters: 100,
+                    },
+                );
+                (m.counts().dists, r.loss, r.iterations)
+            };
+            let (c0, e0, iters) = run(0.0);
+            let (c1, e1, _) = run(0.01);
+            let (c2, e2, _) = run(0.1);
+            t.push_row(vec![
+                name.to_string(),
+                n.to_string(),
+                d.to_string(),
+                k.to_string(),
+                fnum(c0 as f64 / (n as f64 * n as f64)),
+                fnum(c1 as f64 / c0 as f64),
+                fnum(e1 / e0),
+                fnum(c2 as f64 / c0 as f64),
+                fnum(e2 / e0),
+                iters.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Table 3 (SM-E): Park-Jun vs uniform initialisation for KMEDS.
+// ---------------------------------------------------------------------
+
+/// Table 3: final-loss ratio of uniform-init KMEDS (mean/σ over
+/// `scale.reps()` seeds) to Park-Jun-init KMEDS, for K ∈ {10, ⌈√N⌉,
+/// ⌈N/10⌉}. Ratios < 1 mean uniform wins (the paper's conclusion).
+pub fn table3(scale: Scale, seed: u64) -> Table {
+    let reps = scale.reps();
+    let mut t = Table::new(
+        "Table 3 (SM-E): uniform vs Park-Jun initialisation, loss ratios",
+        &[
+            "dataset", "N", "d", "μu/μpark K=10", "σu/μpark K=10", "μu/μpark K=√N",
+            "σu/μpark K=√N", "μu/μpark K=N/10", "σu/μpark K=N/10",
+        ],
+    );
+    for (name, pts) in table3_datasets(scale, seed) {
+        let n = pts.len();
+        let d = pts.dim();
+        let m = VectorMetric::new(pts);
+        let ks = [
+            10.min(n),
+            ((n as f64).sqrt().ceil() as usize).min(n),
+            (n.div_ceil(10)).min(n),
+        ];
+        let mut cells = vec![name.to_string(), n.to_string(), d.to_string()];
+        for k in ks {
+            let park = kmeds(&m, &KmedsOpts { k, uniform_seed: None, max_iters: 100 }).loss;
+            let mut losses = Vec::with_capacity(reps);
+            for rep in 0..reps {
+                let r = kmeds(
+                    &m,
+                    &KmedsOpts { k, uniform_seed: Some(seed + rep as u64), max_iters: 100 },
+                );
+                losses.push(r.loss);
+            }
+            let mu = losses.iter().sum::<f64>() / reps as f64;
+            let var = losses.iter().map(|l| (l - mu) * (l - mu)).sum::<f64>() / reps as f64;
+            let sigma = var.sqrt();
+            // Degenerate guard: at K=N/10 on tiny sets park loss can be ~0.
+            let denom = if park > 1e-12 { park } else { 1e-12 };
+            cells.push(fnum(mu / denom));
+            cells.push(fnum(sigma / denom));
+        }
+        t.push_row(cells);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Figure 4 (SM-F): ξ√N fits on ball distributions.
+// ---------------------------------------------------------------------
+
+/// Figure 4: trimed computed elements on B_d(0,1) for d ∈ {2,3,4,5},
+/// uniform (left) vs 19×-lower inner density (right), against ξ√N.
+/// The fitted ξ per (panel, d) is reported in the last column of the
+/// final row of each series.
+pub fn fig4(scale: Scale, seed: u64) -> Table {
+    let ns: Vec<usize> = match scale {
+        Scale::Small => vec![1_000, 3_162],
+        Scale::Medium => vec![1_000, 3_162, 10_000, 31_623],
+        Scale::Full => vec![1_000, 3_162, 10_000, 31_623, 100_000],
+    };
+    let reps = if scale == Scale::Small { 1 } else { 3 };
+    let mut t = Table::new(
+        "Figure 4 (SM-F): trimed computed elements on ball distributions",
+        &["panel", "d", "N", "n̂", "n̂/sqrt(N)"],
+    );
+    for (panel, inner_keep) in [("uniform-ball", 1.0f64), ("shell-19x", 0.1)] {
+        for d in 2..=5usize {
+            for &n in &ns {
+                let mut total = 0.0;
+                for rep in 0..reps {
+                    let s = seed + rep as u64 * 977 + d as u64 * 13;
+                    let pts = if inner_keep >= 1.0 {
+                        syn::ball_uniform(n, d, s)
+                    } else {
+                        syn::ball_shell_biased(n, d, inner_keep, s)
+                    };
+                    let m = Counted::new(VectorMetric::new(pts));
+                    let _ = trimed_medoid(&m, s);
+                    total += m.counts().one_to_all as f64;
+                }
+                let nhat = total / reps as f64;
+                t.push_row(vec![
+                    panel.to_string(),
+                    d.to_string(),
+                    n.to_string(),
+                    fnum(nhat),
+                    fnum(nhat / (n as f64).sqrt()),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Figure 7 (SM-L): when do computations happen?
+// ---------------------------------------------------------------------
+
+/// Figure 7: distribution over loop position of trimed's computed
+/// elements on uniform 2-d data. The paper proves P(compute at n) is
+/// O(n^{-1/2}); we report per-decade compute counts against the
+/// theoretical 2(√hi − √lo) reference (normalised to the first decade).
+pub fn fig7(scale: Scale, seed: u64) -> Table {
+    let n = match scale {
+        Scale::Small => 5_000,
+        Scale::Medium => 30_000,
+        Scale::Full => 100_000,
+    };
+    let pts = syn::uniform_box(n, 2, -1.0, 1.0, seed);
+    let m = VectorMetric::new(pts);
+    let r = trimed_with_opts(
+        &m,
+        &TrimedOpts { seed, record_trace: true, ..Default::default() },
+    );
+    let trace = r.trace.expect("trace requested");
+    let mut t = Table::new(
+        "Figure 7 (SM-L): computed elements per loop-position decade",
+        &["decade [lo,hi)", "computed", "n^-1/2 prediction (scaled)"],
+    );
+    let mut bins: Vec<(usize, usize, usize)> = Vec::new(); // lo, hi, count
+    let mut lo = 1usize;
+    while lo < n {
+        let hi = (lo * 10).min(n);
+        let count = trace.iter().filter(|&&(it, _)| it + 1 >= lo && it + 1 < hi).count();
+        bins.push((lo, hi, count));
+        lo = hi;
+    }
+    // Normalise the sqrt-law prediction to the first decade's count.
+    let pred = |lo: usize, hi: usize| 2.0 * ((hi as f64).sqrt() - (lo as f64).sqrt());
+    let scale_f = if bins.is_empty() || bins[0].2 == 0 {
+        1.0
+    } else {
+        bins[0].2 as f64 / pred(bins[0].0, bins[0].1)
+    };
+    for (lo, hi, count) in bins {
+        t.push_row(vec![
+            format!("[{lo},{hi})"),
+            count.to_string(),
+            fnum(scale_f * pred(lo, hi)),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Figure 6 (SM-G): the α/β/ρ energy envelope.
+// ---------------------------------------------------------------------
+
+/// Numerical check of the Fig. 6 envelope: on uniform 1-d data the excess
+/// energy E(i) − E* is bounded between α·e(i)² and β·e(i)² within radius
+/// ρ of the medoid. Returns (α, β) fitted at radius ρ.
+pub fn fig6_envelope(n: usize, rho: f64, seed: u64) -> (f64, f64) {
+    let pts = syn::uniform_box(n, 1, -1.0, 1.0, seed);
+    let m = VectorMetric::new(pts.clone());
+    let s = scan_medoid(&m);
+    let med = s.medoid;
+    let (mut alpha, mut beta) = (f64::INFINITY, 0.0f64);
+    for i in 0..n {
+        if i == med {
+            continue;
+        }
+        let e = (pts.row(i)[0] - pts.row(med)[0]).abs();
+        if e <= rho && e > 1e-9 {
+            let excess = s.energies[i] - s.energy;
+            let ratio = excess / (e * e);
+            alpha = alpha.min(ratio);
+            beta = beta.max(ratio);
+        }
+    }
+    (alpha, beta)
+}
+
+// ---------------------------------------------------------------------
+// Ablations (design choices DESIGN.md calls out; not paper artifacts).
+// ---------------------------------------------------------------------
+
+/// §5.1.3 "who needs the exact medoid anyway?": RAND needs `ln N / ε²`
+/// computed elements to return an ε-accurate energy w.h.p.; trimed gets
+/// the *exact* medoid in fewer on low-d data. Reports both, plus the
+/// realised RAND error, across N.
+pub fn ablation_rand_quality(scale: Scale, seed: u64) -> Table {
+    use crate::algo::rand_energies;
+    let ns: Vec<usize> = match scale {
+        Scale::Small => vec![2_000, 8_000],
+        Scale::Medium => vec![2_000, 8_000, 32_000],
+        Scale::Full => vec![2_000, 8_000, 32_000, 100_000],
+    };
+    let eps = 0.05;
+    let mut t = Table::new(
+        "Ablation (§5.1.3): RAND's ε=0.05 budget vs trimed's exact cost",
+        &["N", "RAND anchors (lnN/ε²)", "RAND rel-err of argmin", "trimed n̂ (exact)"],
+    );
+    for &n in &ns {
+        let pts = syn::uniform_cube(n, 2, seed + n as u64);
+        let m = VectorMetric::new(pts);
+        let l = (((n as f64).ln() / (eps * eps)).ceil() as usize).min(n);
+        let r = rand_energies(&m, l, seed);
+        let est_best = r
+            .est_energies
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        let s = scan_medoid(&m);
+        let rel_err = (s.energies[est_best] - s.energy) / s.energy;
+        let cm = Counted::new(&m);
+        let tri = trimed_medoid(&cm, seed);
+        let _ = tri;
+        t.push_row(vec![
+            n.to_string(),
+            l.to_string(),
+            fnum(rel_err),
+            fnum(cm.counts().one_to_all as f64),
+        ]);
+    }
+    t
+}
+
+/// SM-C α′ sweep: TOPRANK's threshold constant trades survivor-set size
+/// (cost) against the w.h.p. guarantee margin. The paper uses α′ = 1.
+pub fn ablation_alpha_prime(scale: Scale, seed: u64) -> Table {
+    let n = match scale {
+        Scale::Small => 3_000,
+        Scale::Medium => 10_000,
+        Scale::Full => 30_000,
+    };
+    let pts = syn::uniform_cube(n, 2, seed);
+    let m = VectorMetric::new(pts);
+    let s = scan_medoid(&m);
+    let mut t = Table::new(
+        "Ablation (SM-C): TOPRANK α′ sweep (N fixed, uniform 2-d)",
+        &["α′", "anchors", "survivors", "total n̂", "found true medoid"],
+    );
+    for alpha in [1.0, 1.5, 2.0] {
+        let cm = Counted::new(&m);
+        let r = toprank(&cm, &TopRankOpts { alpha_prime: alpha, seed, ..Default::default() });
+        let correct = (s.energies[r.medoid] - s.energy).abs() < 1e-9;
+        t.push_row(vec![
+            fnum(alpha),
+            r.anchors.to_string(),
+            r.survivors.to_string(),
+            cm.counts().one_to_all.to_string(),
+            correct.to_string(),
+        ]);
+    }
+    t
+}
+
+/// §3 shuffle ablation: random visiting order vs ascending-energy (the
+/// friendliest) vs descending-energy (the pathological order the shuffle
+/// exists to avoid w.h.p.).
+pub fn ablation_order(scale: Scale, seed: u64) -> Table {
+    let n = match scale {
+        Scale::Small => 2_000,
+        Scale::Medium => 8_000,
+        Scale::Full => 20_000,
+    };
+    let pts = syn::uniform_cube(n, 2, seed);
+    let m = VectorMetric::new(pts);
+    let s = scan_medoid(&m);
+    let mut by_energy: Vec<usize> = (0..n).collect();
+    by_energy.sort_by(|&a, &b| s.energies[a].partial_cmp(&s.energies[b]).unwrap());
+    let mut t = Table::new(
+        "Ablation (§3): trimed visiting-order sensitivity",
+        &["order", "computed n̂"],
+    );
+    let run = |order: Option<Vec<usize>>| {
+        let cm = Counted::new(&m);
+        let _ = trimed_with_opts(
+            &cm,
+            &TrimedOpts { seed, order, ..Default::default() },
+        );
+        cm.counts().one_to_all
+    };
+    t.push_row(vec!["shuffled (default)".into(), run(None).to_string()]);
+    t.push_row(vec!["ascending energy (best case)".into(), run(Some(by_energy.clone())).to_string()]);
+    by_energy.reverse();
+    t.push_row(vec!["descending energy (pathological)".into(), run(Some(by_energy)).to_string()]);
+    t
+}
+
+/// Dispatch an experiment by id (used by the CLI).
+pub fn run_by_id(id: &str, scale: Scale, seed: u64) -> Option<Table> {
+    match id {
+        "fig3" => Some(fig3(scale, seed)),
+        "table1" => Some(table1(scale, seed)),
+        "table2" => Some(table2(scale, seed)),
+        "table3" => Some(table3(scale, seed)),
+        "fig4" => Some(fig4(scale, seed)),
+        "fig7" => Some(fig7(scale, seed)),
+        "rand-quality" => Some(ablation_rand_quality(scale, seed)),
+        "alpha-prime" => Some(ablation_alpha_prime(scale, seed)),
+        "order" => Some(ablation_order(scale, seed)),
+        _ => None,
+    }
+}
+
+/// All experiment ids, in paper order (ablations last).
+pub const ALL_IDS: &[&str] = &[
+    "fig3", "table1", "table2", "table3", "fig4", "fig7", "rand-quality", "alpha-prime", "order",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_small_runs_and_decays() {
+        let t = fig7(Scale::Small, 1);
+        assert!(t.rows.len() >= 3);
+        // First decade computes everything (10 elements), later decades
+        // compute fewer per element.
+        let first: usize = t.rows[0][1].parse().unwrap();
+        let last: usize = t.rows.last().unwrap()[1].parse().unwrap();
+        assert!(first >= 5);
+        // Total computes far below N.
+        let total: usize = t.rows.iter().map(|r| r[1].parse::<usize>().unwrap()).sum();
+        assert!(total < 2_000, "computed {total}");
+        let _ = last;
+    }
+
+    #[test]
+    fn fig6_envelope_is_positive_and_finite() {
+        let (alpha, beta) = fig6_envelope(101, 0.5, 3);
+        assert!(alpha > 0.0, "alpha {alpha}");
+        assert!(beta.is_finite() && beta >= alpha);
+    }
+
+    #[test]
+    fn run_by_id_dispatch() {
+        assert!(run_by_id("nope", Scale::Small, 0).is_none());
+        assert!(run_by_id("fig7", Scale::Small, 0).is_some());
+    }
+}

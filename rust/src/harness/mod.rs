@@ -1,0 +1,88 @@
+//! Experiment harness: dataset registry, experiment implementations for
+//! every table and figure in the paper, table/series formatting, and a
+//! small timing utility (criterion is not in the offline vendor set).
+//!
+//! The same experiment code backs the CLI (`trimed exp --id <id>`) and the
+//! cargo benches (`rust/benches/bench_<id>.rs`), so numbers in
+//! EXPERIMENTS.md are regenerable both ways.
+
+pub mod bench;
+pub mod datasets;
+pub mod experiments;
+pub mod table;
+
+pub use bench::{time_block, BenchStats};
+pub use table::Table;
+
+/// Workload scale for experiment regeneration.
+///
+/// The paper's exact sizes (N up to 1.1e6 graph nodes with ~2e5 Dijkstra
+/// runs for TOPRANK) need hours of CPU; scaling N preserves the *shape*
+/// of every comparison (scaling exponents, who-wins ordering, crossovers)
+/// which is what EXPERIMENTS.md compares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Seconds; CI-sized.
+    Small,
+    /// Minutes; the default for `cargo bench` and EXPERIMENTS.md.
+    Medium,
+    /// Closest to the paper's sizes that stays practical on one CPU.
+    Full,
+}
+
+impl Scale {
+    /// Parse from a string (`small|medium|full`).
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "small" => Some(Scale::Small),
+            "medium" => Some(Scale::Medium),
+            "full" => Some(Scale::Full),
+            _ => None,
+        }
+    }
+
+    /// From the `TRIMED_SCALE` env var, defaulting to `Medium`.
+    pub fn from_env() -> Scale {
+        std::env::var("TRIMED_SCALE")
+            .ok()
+            .and_then(|s| Scale::parse(&s))
+            .unwrap_or(Scale::Medium)
+    }
+
+    /// Scale a paper-sized N down to this tier.
+    pub fn n(&self, paper_n: usize, small: usize, medium: usize) -> usize {
+        match self {
+            Scale::Small => small.min(paper_n),
+            Scale::Medium => medium.min(paper_n),
+            Scale::Full => paper_n,
+        }
+    }
+
+    /// Repetitions for averaged columns (paper uses 10).
+    pub fn reps(&self) -> usize {
+        match self {
+            Scale::Small => 2,
+            Scale::Medium => 3,
+            Scale::Full => 10,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_parse() {
+        assert_eq!(Scale::parse("small"), Some(Scale::Small));
+        assert_eq!(Scale::parse("medium"), Some(Scale::Medium));
+        assert_eq!(Scale::parse("nope"), None);
+    }
+
+    #[test]
+    fn scale_n_clamps_to_paper() {
+        assert_eq!(Scale::Full.n(5000, 100, 1000), 5000);
+        assert_eq!(Scale::Small.n(5000, 100, 1000), 100);
+        assert_eq!(Scale::Medium.n(500, 100, 1000), 500);
+    }
+}

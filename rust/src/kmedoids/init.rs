@@ -1,0 +1,84 @@
+//! Medoid initialisation schemes.
+//!
+//! The paper (§2.3, SM-E) compares the "well-centred" deterministic
+//! initialisation of Park & Jun (2009) against uniform random sampling
+//! and finds uniform as good or better — Table 3 reproduces this.
+
+use crate::metric::MetricSpace;
+use crate::rng::Rng;
+
+/// Uniform random initialisation: K distinct indices.
+pub fn uniform_init(n: usize, k: usize, seed: u64) -> Vec<usize> {
+    assert!(k <= n, "K={k} > N={n}");
+    Rng::new(seed).sample_without_replacement(n, k)
+}
+
+/// Park & Jun (2009) initialisation (paper Alg. 2 line 2): compute all
+/// distances, then pick the K indices minimising
+/// `f(i) = Σ_j D(i,j) / S(j)` with `S(j) = Σ_l D(j,l)` — i.e. the K most
+/// central elements under a normalised distance.
+///
+/// Requires Θ(N²) distance computations by construction, which is exactly
+/// the cost the paper's trikmeds removes.
+pub fn park_jun_init<M: MetricSpace>(metric: &M, k: usize) -> Vec<usize> {
+    let n = metric.len();
+    assert!(k <= n, "K={k} > N={n}");
+    // Row sums S(j) first.
+    let mut row = vec![0.0f64; n];
+    let mut s = vec![0.0f64; n];
+    let mut rows: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for j in 0..n {
+        metric.one_to_all(j, &mut row);
+        s[j] = row.iter().sum();
+        rows.push(row.clone());
+    }
+    let mut f: Vec<(f64, usize)> = (0..n)
+        .map(|i| {
+            let fi: f64 = (0..n)
+                .map(|j| if s[j] > 0.0 { rows[j][i] / s[j] } else { 0.0 })
+                .sum();
+            (fi, i)
+        })
+        .collect();
+    f.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    f[..k].iter().map(|&(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gauss_mix;
+    use crate::data::Points;
+    use crate::metric::VectorMetric;
+
+    #[test]
+    fn uniform_init_distinct_in_range() {
+        let m = uniform_init(100, 10, 7);
+        assert_eq!(m.len(), 10);
+        let mut s = m.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+        assert!(s.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn park_jun_picks_central_elements() {
+        // A tight cluster at origin plus one far outlier: the outlier must
+        // not be among the K=2 most central.
+        let mut data = Vec::new();
+        for i in 0..9 {
+            data.extend_from_slice(&[0.01 * i as f64, 0.0]);
+        }
+        data.extend_from_slice(&[100.0, 100.0]);
+        let m = VectorMetric::new(Points::new(2, data));
+        let init = park_jun_init(&m, 2);
+        assert!(!init.contains(&9), "outlier selected: {init:?}");
+    }
+
+    #[test]
+    fn park_jun_deterministic() {
+        let m = VectorMetric::new(gauss_mix(120, 2, 3, 0.05, 11));
+        assert_eq!(park_jun_init(&m, 5), park_jun_init(&m, 5));
+    }
+}

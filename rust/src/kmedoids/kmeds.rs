@@ -1,0 +1,173 @@
+//! KMEDS — the Voronoi-iteration K-medoids algorithm of Park & Jun (2009),
+//! paper Alg. 2: the baseline trikmeds accelerates.
+//!
+//! All Θ(N²) distances are computed and stored upfront (the paper's §2.3
+//! points out this is what makes KMEDS unusable at scale); assignment and
+//! medoid updates then read from the matrix.
+
+use super::{init, ClusteringResult};
+use crate::metric::MetricSpace;
+
+/// Options for [`kmeds`].
+#[derive(Clone, Debug)]
+pub struct KmedsOpts {
+    /// Number of clusters.
+    pub k: usize,
+    /// `None` → Park-Jun deterministic initialisation (paper default);
+    /// `Some(seed)` → uniform random initialisation.
+    pub uniform_seed: Option<u64>,
+    /// Iteration cap.
+    pub max_iters: usize,
+}
+
+impl KmedsOpts {
+    /// Defaults: Park-Jun init, 100 iterations cap.
+    pub fn new(k: usize) -> Self {
+        KmedsOpts { k, uniform_seed: None, max_iters: 100 }
+    }
+}
+
+/// Run KMEDS. Memory Θ(N²) — intended for the paper's small datasets
+/// (Table 3) and as the exactness reference for `trikmeds-0`.
+pub fn kmeds<M: MetricSpace>(metric: &M, opts: &KmedsOpts) -> ClusteringResult {
+    let n = metric.len();
+    let k = opts.k;
+    assert!(k >= 1 && k <= n);
+
+    // Full distance matrix (row i = one-to-all from i).
+    let mut dmat: Vec<f64> = vec![0.0; n * n];
+    {
+        let mut row = vec![0.0f64; n];
+        for i in 0..n {
+            metric.one_to_all(i, &mut row);
+            dmat[i * n..(i + 1) * n].copy_from_slice(&row);
+        }
+    }
+    let d = |i: usize, j: usize| dmat[i * n + j];
+
+    let mut medoids: Vec<usize> = match opts.uniform_seed {
+        Some(seed) => init::uniform_init(n, k, seed),
+        None => {
+            // Park-Jun init from the stored matrix: f(i) = Σ_j D(i,j)/S(j).
+            let s: Vec<f64> = (0..n).map(|j| dmat[j * n..(j + 1) * n].iter().sum()).collect();
+            let mut f: Vec<(f64, usize)> = (0..n)
+                .map(|i| ((0..n).map(|j| if s[j] > 0.0 { d(j, i) / s[j] } else { 0.0 }).sum(), i))
+                .collect();
+            f.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            f[..k].iter().map(|&(_, i)| i).collect()
+        }
+    };
+
+    let mut assignments = vec![0usize; n];
+    let mut converged = false;
+    let mut iterations = 0;
+
+    // Tie-breaking convention (shared with trikmeds so that trikmeds-0
+    // reproduces KMEDS trajectories exactly, §5.2): the incumbent
+    // assignment/medoid is kept unless a strictly better candidate exists;
+    // among tying non-incumbent candidates the lowest index wins. Ties are
+    // measure-zero in general position but *always* occur for even-sized
+    // clusters in 1-d (both medians have equal sums).
+    let mut first = true;
+    for _ in 0..opts.max_iters {
+        iterations += 1;
+        // Assignment step (incumbent-keeping after the first pass).
+        let mut changed = false;
+        for i in 0..n {
+            let mut best = if first {
+                (0usize, f64::INFINITY)
+            } else {
+                (assignments[i], d(i, medoids[assignments[i]]))
+            };
+            for (c, &m) in medoids.iter().enumerate() {
+                let dd = d(i, m);
+                if dd < best.1 {
+                    best = (c, dd);
+                }
+            }
+            if assignments[i] != best.0 {
+                assignments[i] = best.0;
+                changed = true;
+            }
+        }
+        first = false;
+        // Medoid update: argmin of in-cluster distance sums, incumbent
+        // kept on ties.
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (i, &a) in assignments.iter().enumerate() {
+            members[a].push(i);
+        }
+        for (c, mem) in members.iter().enumerate() {
+            if mem.is_empty() {
+                continue; // keep previous medoid (cannot happen: medoid stays)
+            }
+            let inc_sum: f64 = mem.iter().map(|&j| d(medoids[c], j)).sum();
+            let mut best = (medoids[c], inc_sum);
+            for &i in mem {
+                let s: f64 = mem.iter().map(|&j| d(i, j)).sum();
+                if s < best.1 {
+                    best = (i, s);
+                }
+            }
+            medoids[c] = best.0;
+        }
+        if !changed && iterations > 1 {
+            converged = true;
+            break;
+        }
+    }
+
+    let loss: f64 = (0..n).map(|i| d(i, medoids[assignments[i]])).sum();
+    ClusteringResult { medoids, assignments, loss, iterations, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gauss_mix;
+    use crate::data::Points;
+    use crate::metric::{Counted, VectorMetric};
+
+    #[test]
+    fn separates_two_obvious_clusters() {
+        let mut data = Vec::new();
+        for i in 0..10 {
+            data.extend_from_slice(&[0.01 * i as f64, 0.0]);
+        }
+        for i in 0..10 {
+            data.extend_from_slice(&[10.0 + 0.01 * i as f64, 0.0]);
+        }
+        let m = VectorMetric::new(Points::new(2, data));
+        let r = kmeds(&m, &KmedsOpts::new(2));
+        assert!(r.converged);
+        // All of the first 10 in one cluster, the rest in the other.
+        let a0 = r.assignments[0];
+        assert!(r.assignments[..10].iter().all(|&a| a == a0));
+        assert!(r.assignments[10..].iter().all(|&a| a != a0));
+    }
+
+    #[test]
+    fn computes_n_squared_distances_upfront() {
+        let n = 60;
+        let m = Counted::new(VectorMetric::new(gauss_mix(n, 2, 3, 0.05, 1)));
+        let _ = kmeds(&m, &KmedsOpts::new(3));
+        // All distance work is the N one-to-all passes; iterations add none.
+        assert_eq!(m.counts().one_to_all, n as u64);
+        assert_eq!(m.counts().dists, (n * n) as u64);
+    }
+
+    #[test]
+    fn loss_decreases_from_init() {
+        let m = VectorMetric::new(gauss_mix(300, 2, 5, 0.03, 2));
+        let r = kmeds(&m, &KmedsOpts { k: 5, uniform_seed: Some(3), max_iters: 100 });
+        let r1 = kmeds(&m, &KmedsOpts { k: 5, uniform_seed: Some(3), max_iters: 1 });
+        assert!(r.loss <= r1.loss + 1e-9);
+    }
+
+    #[test]
+    fn k_equals_n_gives_zero_loss() {
+        let m = VectorMetric::new(gauss_mix(20, 2, 2, 0.1, 4));
+        let r = kmeds(&m, &KmedsOpts { k: 20, uniform_seed: Some(0), max_iters: 10 });
+        assert!(r.loss < 1e-12);
+    }
+}

@@ -1,0 +1,50 @@
+//! K-medoids clustering: the paper's accelerated `trikmeds` (Algs. 6–11)
+//! and the KMEDS baseline of Park & Jun (2009) it is measured against.
+
+pub mod init;
+pub mod kmeds;
+pub mod trikmeds;
+
+pub use init::{park_jun_init, uniform_init};
+pub use kmeds::{kmeds, KmedsOpts};
+pub use trikmeds::{trikmeds, TrikmedsOpts};
+
+/// Result of a K-medoids run (either algorithm).
+#[derive(Clone, Debug)]
+pub struct ClusteringResult {
+    /// Dataset indices of the K medoids.
+    pub medoids: Vec<usize>,
+    /// Cluster id per element.
+    pub assignments: Vec<usize>,
+    /// Final loss L(M) = Σ_i dist(x(i), x(m(a(i)))).
+    pub loss: f64,
+    /// Iterations until convergence (assignment fixpoint or cap).
+    pub iterations: usize,
+    /// Whether the run converged before hitting the iteration cap.
+    pub converged: bool,
+}
+
+impl ClusteringResult {
+    /// Number of elements per cluster.
+    pub fn cluster_sizes(&self, k: usize) -> Vec<usize> {
+        let mut v = vec![0usize; k];
+        for &a in &self.assignments {
+            v[a] += 1;
+        }
+        v
+    }
+}
+
+/// Recompute the loss of an assignment/medoid pair from scratch
+/// (verification helper used by tests and the harness).
+pub fn loss<M: crate::metric::MetricSpace>(
+    metric: &M,
+    medoids: &[usize],
+    assignments: &[usize],
+) -> f64 {
+    assignments
+        .iter()
+        .enumerate()
+        .map(|(i, &a)| metric.dist(i, medoids[a]))
+        .sum()
+}

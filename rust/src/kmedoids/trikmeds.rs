@@ -1,0 +1,407 @@
+//! `trikmeds` (paper §4, Algs. 6–11): KMEDS with all Θ(N²) upfront
+//! distances removed.
+//!
+//! Distances are computed only on demand, guarded by two bound families:
+//!
+//! * **assignment** (Alg. 9) — Elkan-style lower bounds `l_c(i,k)` on the
+//!   distance from element `i` to medoid `k`, decayed by the distance
+//!   `p(k)` each medoid moved;
+//! * **medoid update** (Alg. 8) — trimed-style lower bounds `l_s(i)` on
+//!   the *in-cluster* distance sum of `i`, tightened with
+//!   `|d̃(i')·v(k) − l_s(i)|` after every exact candidate evaluation, and
+//!   adjusted for membership churn by the flux formula of Alg. 10.
+//!
+//! With `eps == 0` the trajectory is identical to KMEDS started from the
+//! same medoids (§5.2); `eps > 0` relaxes both bound tests, computing an
+//! element only when its bound is more than a factor `1+eps` below the
+//! incumbent — the paper's `trikmeds-ε`.
+//!
+//! Implementation note: the paper contiguates storage so each cluster is a
+//! consecutive range (Alg. 11). We keep explicit per-cluster member lists
+//! instead — identical asymptotics, no data movement — and note that the
+//! medoid plays Alg. 11's "first element of the range" role.
+
+use super::{init, ClusteringResult};
+use crate::metric::MetricSpace;
+
+/// Options for [`trikmeds`].
+#[derive(Clone, Debug)]
+pub struct TrikmedsOpts {
+    /// Number of clusters.
+    pub k: usize,
+    /// Seed for uniform medoid initialisation (the paper's recommended
+    /// scheme after SM-E), or explicit initial medoids.
+    pub init: TrikmedsInit,
+    /// Relaxation ε ≥ 0 for both bound tests (trikmeds-ε); 0 is exact.
+    pub eps: f64,
+    /// Iteration cap.
+    pub max_iters: usize,
+}
+
+/// Initialisation choice for trikmeds.
+#[derive(Clone, Debug)]
+pub enum TrikmedsInit {
+    /// K distinct uniform indices from the given seed.
+    Uniform(u64),
+    /// Caller-provided medoid indices (e.g. to mirror a KMEDS run).
+    Given(Vec<usize>),
+}
+
+impl TrikmedsOpts {
+    /// Defaults: uniform init with seed 0, exact (ε = 0), 100-iter cap.
+    pub fn new(k: usize) -> Self {
+        TrikmedsOpts { k, init: TrikmedsInit::Uniform(0), eps: 0.0, max_iters: 100 }
+    }
+}
+
+struct State {
+    k: usize,
+    medoids: Vec<usize>,
+    /// a(i): cluster of element i.
+    assign: Vec<usize>,
+    /// d(i): exact distance from i to its cluster's medoid.
+    d: Vec<f64>,
+    /// l_c(i,k): lower bound on dist(i, medoid k), row-major n×k.
+    lc: Vec<f64>,
+    /// l_s(i): lower bound on Σ_{i' ∈ cluster(i)} dist(i', i).
+    ls: Vec<f64>,
+    /// s(k): exact in-cluster distance sum of medoid k.
+    s: Vec<f64>,
+    /// p(k): distance medoid k moved in the last update.
+    p: Vec<f64>,
+    /// Member lists per cluster.
+    members: Vec<Vec<usize>>,
+    // Flux counters (Alg. 9 -> Alg. 10).
+    ds_in: Vec<f64>,
+    ds_out: Vec<f64>,
+    dn_in: Vec<u64>,
+    dn_out: Vec<u64>,
+}
+
+/// Run trikmeds over any metric space.
+pub fn trikmeds<M: MetricSpace>(metric: &M, opts: &TrikmedsOpts) -> ClusteringResult {
+    let n = metric.len();
+    let k = opts.k;
+    assert!(k >= 1 && k <= n);
+    assert!(opts.eps >= 0.0);
+
+    // ---- initialise (Alg. 7) -------------------------------------------
+    let medoids: Vec<usize> = match &opts.init {
+        TrikmedsInit::Uniform(seed) => init::uniform_init(n, k, *seed),
+        TrikmedsInit::Given(m) => {
+            assert_eq!(m.len(), k);
+            m.clone()
+        }
+    };
+    let mut st = State {
+        k,
+        medoids,
+        assign: vec![0; n],
+        d: vec![0.0; n],
+        lc: vec![0.0; n * k],
+        ls: vec![0.0; n],
+        s: vec![0.0; k],
+        p: vec![0.0; k],
+        members: vec![Vec::new(); k],
+        ds_in: vec![0.0; k],
+        ds_out: vec![0.0; k],
+        dn_in: vec![0; k],
+        dn_out: vec![0; k],
+    };
+    for i in 0..n {
+        let mut best = (0usize, f64::INFINITY);
+        for c in 0..k {
+            let dd = metric.dist(i, st.medoids[c]);
+            st.lc[i * k + c] = dd; // tight
+            if dd < best.1 {
+                best = (c, dd);
+            }
+        }
+        st.assign[i] = best.0;
+        st.d[i] = best.1;
+        st.members[best.0].push(i);
+        st.s[best.0] += best.1;
+    }
+    for c in 0..k {
+        st.ls[st.medoids[c]] = st.s[c]; // tight for medoids
+    }
+
+    // ---- main loop (Alg. 6) --------------------------------------------
+    let mut iterations = 0;
+    let mut converged = false;
+    for _ in 0..opts.max_iters {
+        iterations += 1;
+        let medoids_changed = update_medoids(metric, &mut st, opts.eps);
+        let assignments_changed = assign_to_clusters(metric, &mut st, opts.eps);
+        update_sum_bounds(&mut st);
+        if !medoids_changed && !assignments_changed {
+            converged = true;
+            break;
+        }
+    }
+
+    let loss: f64 = st.d.iter().sum();
+    ClusteringResult {
+        medoids: st.medoids,
+        assignments: st.assign,
+        loss,
+        iterations,
+        converged,
+    }
+}
+
+/// Alg. 8. Returns true if any medoid moved.
+fn update_medoids<M: MetricSpace>(metric: &M, st: &mut State, eps: f64) -> bool {
+    let mut any_moved = false;
+    let mut dtilde: Vec<f64> = Vec::new();
+    for c in 0..st.k {
+        let mem = std::mem::take(&mut st.members[c]);
+        let v = mem.len() as f64;
+        let old_medoid = st.medoids[c];
+        for &i in &mem {
+            // Bound test (with trikmeds-ε relaxation).
+            if st.ls[i] * (1.0 + eps) >= st.s[c] {
+                continue;
+            }
+            // Make l_s(i) tight: all in-cluster distances to i.
+            dtilde.clear();
+            dtilde.reserve(mem.len());
+            let mut sum = 0.0;
+            for &j in &mem {
+                let dd = metric.dist(i, j);
+                dtilde.push(dd);
+                sum += dd;
+            }
+            st.ls[i] = sum;
+            // Accept i as the new medoid candidate?
+            if sum < st.s[c] {
+                st.s[c] = sum;
+                st.medoids[c] = i;
+                // Re-point members' exact medoid distances at i.
+                for (&j, &dd) in mem.iter().zip(&dtilde) {
+                    st.d[j] = dd;
+                }
+            }
+            // Tighten members' sum bounds: S(j) >= |S(i) - v·dist(i,j)|.
+            for (&j, &dd) in mem.iter().zip(&dtilde) {
+                let b = (sum - v * dd).abs();
+                if b > st.ls[j] {
+                    st.ls[j] = b;
+                }
+            }
+        }
+        if st.medoids[c] != old_medoid {
+            any_moved = true;
+            st.p[c] = metric.dist(old_medoid, st.medoids[c]);
+        } else {
+            st.p[c] = 0.0;
+        }
+        st.members[c] = mem;
+    }
+    any_moved
+}
+
+/// Alg. 9. Returns true if any assignment changed.
+fn assign_to_clusters<M: MetricSpace>(metric: &M, st: &mut State, eps: f64) -> bool {
+    let k = st.k;
+    let n = st.assign.len();
+    for c in 0..k {
+        st.ds_in[c] = 0.0;
+        st.ds_out[c] = 0.0;
+        st.dn_in[c] = 0;
+        st.dn_out[c] = 0;
+    }
+    let mut changed = false;
+    for i in 0..n {
+        // Decay bounds by medoid movement.
+        let row = &mut st.lc[i * k..(i + 1) * k];
+        for (c, l) in row.iter_mut().enumerate() {
+            *l = (*l - st.p[c]).max(0.0);
+        }
+        // Current assignment is exact.
+        let a_old = st.assign[i];
+        let d_old = st.d[i];
+        row[a_old] = d_old;
+        let mut a = a_old;
+        let mut dmin = d_old;
+        for c in 0..k {
+            if c == a {
+                continue;
+            }
+            // Bound test with the trikmeds-ε relaxation: we tolerate an
+            // assignment within a factor 1+eps of the nearest medoid.
+            if st.lc[i * k + c] * (1.0 + eps) < dmin {
+                let dd = metric.dist(i, st.medoids[c]);
+                st.lc[i * k + c] = dd;
+                if dd < dmin {
+                    a = c;
+                    dmin = dd;
+                }
+            }
+        }
+        if a != a_old {
+            changed = true;
+            st.assign[i] = a;
+            st.d[i] = dmin;
+            st.ls[i] = 0.0; // unknown in the new cluster
+            st.dn_in[a] += 1;
+            st.dn_out[a_old] += 1;
+            st.ds_in[a] += dmin;
+            st.ds_out[a_old] += d_old;
+            // Move between member lists lazily: rebuild below.
+        }
+    }
+    if changed {
+        for m in st.members.iter_mut() {
+            m.clear();
+        }
+        for (i, &a) in st.assign.iter().enumerate() {
+            st.members[a].push(i);
+        }
+    }
+    changed
+}
+
+/// Alg. 10: adjust in-cluster sum bounds for membership churn, and refresh
+/// the exact medoid sums `s(k)` with the net flux.
+fn update_sum_bounds(st: &mut State) {
+    for c in 0..st.k {
+        let js_abs = st.ds_in[c] + st.ds_out[c];
+        let js_net = st.ds_in[c] - st.ds_out[c];
+        let jn_abs = (st.dn_in[c] + st.dn_out[c]) as f64;
+        let jn_net = st.dn_in[c] as f64 - st.dn_out[c] as f64;
+        if jn_abs == 0.0 {
+            continue; // no churn in this cluster
+        }
+        for &i in &st.members[c] {
+            let di = st.d[i];
+            let decay = (js_abs - jn_net * di).min(jn_abs * di - js_net);
+            st.ls[i] = (st.ls[i] - decay).max(0.0);
+        }
+        // s(k) is the medoid's exact in-cluster sum: arrivals/departures
+        // change it by exactly the net distance flux (distances are to the
+        // current medoid, which has not moved since update_medoids).
+        st.s[c] += js_net;
+        st.ls[st.medoids[c]] = st.s[c];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{gauss_mix, uniform_cube};
+    use crate::kmedoids::{kmeds, loss as recompute_loss, KmedsOpts};
+    use crate::metric::{Counted, MetricSpace, VectorMetric};
+
+    fn loss_matches_state(metric: &VectorMetric, r: &ClusteringResult) {
+        let l = recompute_loss(metric, &r.medoids, &r.assignments);
+        assert!((l - r.loss).abs() < 1e-6, "stored loss {} vs recomputed {}", r.loss, l);
+    }
+
+    #[test]
+    fn equals_kmeds_given_same_init() {
+        // §5.2: trikmeds-0 returns exactly the clustering of KMEDS with the
+        // same (uniform) initialisation.
+        for seed in 0..4u64 {
+            let pts = gauss_mix(250, 2, 5, 0.04, seed + 100);
+            let m = VectorMetric::new(pts);
+            let init = init::uniform_init(m.len(), 5, seed);
+            let r_ref = kmeds(&m, &KmedsOpts { k: 5, uniform_seed: Some(seed), max_iters: 100 });
+            let r = trikmeds(
+                &m,
+                &TrikmedsOpts {
+                    k: 5,
+                    init: TrikmedsInit::Given(init),
+                    eps: 0.0,
+                    max_iters: 100,
+                },
+            );
+            assert!((r.loss - r_ref.loss).abs() < 1e-9, "seed {seed}: {} vs {}", r.loss, r_ref.loss);
+            let mut ma = r.medoids.clone();
+            let mut mb = r_ref.medoids.clone();
+            ma.sort_unstable();
+            mb.sort_unstable();
+            assert_eq!(ma, mb, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn uses_fewer_distances_than_kmeds() {
+        let n = 400;
+        let pts = gauss_mix(n, 2, 8, 0.03, 7);
+        let ma = Counted::new(VectorMetric::new(pts.clone()));
+        let _ = trikmeds(&ma, &TrikmedsOpts { k: 8, ..TrikmedsOpts::new(8) });
+        let nc = ma.counts().dists;
+        assert!(
+            nc < (n * n) as u64 / 2,
+            "trikmeds used {nc} distances vs KMEDS {}",
+            n * n
+        );
+    }
+
+    #[test]
+    fn eps_monotone_distance_savings_and_bounded_loss() {
+        let pts = uniform_cube(600, 2, 21);
+        let m0 = Counted::new(VectorMetric::new(pts.clone()));
+        let r0 = trikmeds(&m0, &TrikmedsOpts { k: 10, ..TrikmedsOpts::new(10) });
+        let c0 = m0.counts().dists;
+        for eps in [0.01, 0.1] {
+            let m = Counted::new(VectorMetric::new(pts.clone()));
+            let r = trikmeds(
+                &m,
+                &TrikmedsOpts { k: 10, eps, ..TrikmedsOpts::new(10) },
+            );
+            // Relaxation saves distance computations...
+            assert!(m.counts().dists <= c0 + c0 / 10, "eps={eps}");
+            // ...at only a bounded loss increase (paper: φ_E ≈ 1.0-1.1).
+            assert!(r.loss <= r0.loss * 1.5, "eps={eps}: {} vs {}", r.loss, r0.loss);
+        }
+    }
+
+    #[test]
+    fn loss_is_consistent() {
+        let pts = gauss_mix(300, 3, 6, 0.05, 9);
+        let m = VectorMetric::new(pts);
+        let r = trikmeds(&m, &TrikmedsOpts::new(6));
+        loss_matches_state(&m, &r);
+    }
+
+    #[test]
+    fn k_one_medoid_is_dataset_medoid() {
+        use crate::algo::scan_medoid;
+        let pts = uniform_cube(150, 2, 33);
+        let m = VectorMetric::new(pts);
+        let r = trikmeds(&m, &TrikmedsOpts::new(1));
+        let s = scan_medoid(&m);
+        assert!((s.energies[r.medoids[0]] - s.energy).abs() < 1e-9);
+    }
+
+    #[test]
+    fn medoid_stays_in_own_cluster() {
+        let pts = gauss_mix(200, 2, 4, 0.05, 41);
+        let m = VectorMetric::new(pts);
+        let r = trikmeds(&m, &TrikmedsOpts::new(4));
+        for (c, &mi) in r.medoids.iter().enumerate() {
+            assert_eq!(r.assignments[mi], c);
+        }
+    }
+
+    #[test]
+    fn converges_within_cap() {
+        let pts = gauss_mix(500, 2, 10, 0.02, 55);
+        let m = VectorMetric::new(pts);
+        let r = trikmeds(&m, &TrikmedsOpts::new(10));
+        assert!(r.converged, "did not converge in {} iters", r.iterations);
+    }
+
+    #[test]
+    fn works_on_graphs() {
+        use crate::graph::generators::sensor_net;
+        use crate::graph::GraphMetric;
+        let sg = sensor_net(300, 1.8, false, 3);
+        let gm = GraphMetric::new(sg.graph);
+        let r = trikmeds(&gm, &TrikmedsOpts::new(5));
+        assert_eq!(r.assignments.len(), gm.len());
+        assert!(r.loss.is_finite());
+    }
+}

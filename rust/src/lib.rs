@@ -1,0 +1,39 @@
+//! # trimed — sub-quadratic exact medoid computation
+//!
+//! Reproduction of Newling & Fleuret, *A Sub-Quadratic Exact Medoid
+//! Algorithm* (AISTATS 2017): the `trimed` exact medoid algorithm, its
+//! ε-relaxation and top-k ranking generalisation, the accelerated
+//! `trikmeds` K-medoids algorithm, and the baselines the paper compares
+//! against (exhaustive scan, RAND, TOPRANK, TOPRANK2, Park-Jun KMEDS) —
+//! over both vector data and shortest-path graph metrics.
+//!
+//! Architecture (see DESIGN.md): a Rust Layer-3 coordinator owning the
+//! adaptive bound-elimination loops; distance hot-spots available both as
+//! native Rust scans and as AOT-compiled JAX+Pallas HLO artifacts executed
+//! through the XLA PJRT runtime ([`runtime`]).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use trimed::data::synthetic::uniform_cube;
+//! use trimed::metric::{Counted, VectorMetric};
+//! use trimed::algo::{trimed_medoid, scan_medoid};
+//!
+//! let pts = uniform_cube(500, 2, 42);
+//! let metric = Counted::new(VectorMetric::new(pts));
+//! let result = trimed_medoid(&metric, 42);
+//! assert_eq!(result.medoid, scan_medoid(&metric).medoid);
+//! // trimed computed far fewer elements than the O(N^2) scan:
+//! assert!(result.computed < 200);
+//! ```
+
+pub mod algo;
+pub mod cli;
+pub mod data;
+pub mod graph;
+pub mod harness;
+pub mod kmedoids;
+pub mod metric;
+pub mod rng;
+pub mod runtime;
+pub mod testutil;

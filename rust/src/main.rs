@@ -1,0 +1,221 @@
+//! `trimed` CLI — the Layer-3 entry point.
+//!
+//! Subcommands:
+//! * `medoid`    — find the medoid of a synthetic or TSV dataset with any
+//!   of the algorithms (trimed / toprank / toprank2 / rand / scan),
+//!   natively or over the XLA runtime (`--xla`).
+//! * `kmedoids`  — cluster with trikmeds-ε or KMEDS.
+//! * `exp`       — regenerate a paper table/figure (`--id fig3|table1|...`).
+//! * `artifacts` — verify the AOT artifact registry loads and compiles.
+
+use anyhow::{bail, Context, Result};
+use trimed::algo::{
+    rand_energies, scan_medoid, toprank, toprank2, trimed_with_opts, TopRankOpts, TrimedOpts,
+};
+use trimed::cli::Args;
+use trimed::data::synthetic as syn;
+use trimed::data::{io as data_io, Points};
+use trimed::harness::experiments;
+use trimed::harness::Scale;
+use trimed::kmedoids::{kmeds, trikmeds, KmedsOpts, TrikmedsOpts};
+use trimed::kmedoids::trikmeds::TrikmedsInit;
+use trimed::metric::{Counted, MetricSpace, VectorMetric, XlaVectorMetric};
+use trimed::runtime::Runtime;
+
+const USAGE: &str = "\
+trimed — sub-quadratic exact medoid computation (Newling & Fleuret, AISTATS 2017)
+
+USAGE:
+  trimed medoid   [--data SPEC] [--n N] [--d D] [--seed S] [--algo A] [--eps E] [--xla]
+  trimed kmedoids [--data SPEC] [--n N] [--d D] [--seed S] [--k K] [--eps E] [--algo trikmeds|kmeds]
+  trimed exp      --id fig3|table1|table2|table3|fig4|fig7|all [--scale small|medium|full] [--seed S] [--save DIR]
+  trimed artifacts [--dir DIR]
+
+DATA SPECS (--data):
+  uniform (default) | ball | shell | birch | border | mnist | file:<path.tsv>
+
+ALGORITHMS (--algo for medoid):
+  trimed (default) | toprank | toprank2 | rand | scan
+";
+
+fn load_data(args: &Args) -> Result<Points> {
+    let n = args.get_parsed("n", 10_000usize)?;
+    let d = args.get_parsed("d", 2usize)?;
+    let seed = args.get_parsed("seed", 0u64)?;
+    let spec = args.get("data").unwrap_or("uniform");
+    Ok(match spec {
+        "uniform" => syn::uniform_cube(n, d, seed),
+        "ball" => syn::ball_uniform(n, d, seed),
+        "shell" => syn::ball_shell_biased(n, d, 0.01, seed),
+        "birch" => syn::birch_grid(n, seed),
+        "border" => syn::border_map(n, 8, seed),
+        "mnist" => syn::mnist_like(n, seed),
+        other => {
+            if let Some(path) = other.strip_prefix("file:") {
+                data_io::load_points(std::path::Path::new(path))?
+            } else {
+                bail!("unknown --data spec {other:?} (see --help)");
+            }
+        }
+    })
+}
+
+fn cmd_medoid(args: &Args) -> Result<()> {
+    let pts = load_data(args)?;
+    let seed = args.get_parsed("seed", 0u64)?;
+    let eps = args.get_parsed("eps", 0.0f64)?;
+    let algo = args.get("algo").unwrap_or("trimed");
+    let (n, d) = (pts.len(), pts.dim());
+    println!("dataset: N={n} d={d} algo={algo} xla={}", args.flag("xla"));
+
+    let t0 = std::time::Instant::now();
+    let run = |m: &dyn MetricSpace| -> Result<(usize, f64)> {
+        Ok(match algo {
+            "trimed" => {
+                let slack = if args.flag("xla") { 1e-4 * n as f64 } else { 0.0 };
+                let r = trimed_with_opts(&m, &TrimedOpts { seed, eps, slack, ..Default::default() });
+                (r.medoid, r.energy)
+            }
+            "toprank" => {
+                let r = toprank(&m, &TopRankOpts { seed, ..Default::default() });
+                (r.medoid, r.energy)
+            }
+            "toprank2" => {
+                let r = toprank2(&m, &TopRankOpts { seed, ..Default::default() });
+                (r.medoid, r.energy)
+            }
+            "rand" => {
+                let l = ((n as f64).ln() / 0.05f64.powi(2)).ceil() as usize;
+                let r = rand_energies(&m, l.min(n), seed);
+                let best = r
+                    .est_energies
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                (best.0, *best.1)
+            }
+            "scan" => {
+                let r = scan_medoid(&m);
+                (r.medoid, r.energy)
+            }
+            other => bail!("unknown --algo {other:?}"),
+        })
+    };
+
+    let (medoid, energy, counts) = if args.flag("xla") {
+        let rt = Runtime::open_default().context("XLA runtime (run `make artifacts`)")?;
+        let m = Counted::new(XlaVectorMetric::new(&rt, pts)?);
+        let (medoid, energy) = run(&&m)?;
+        (medoid, energy, m.counts())
+    } else {
+        let m = Counted::new(VectorMetric::new(pts));
+        let (medoid, energy) = run(&&m)?;
+        (medoid, energy, m.counts())
+    };
+    println!(
+        "medoid={medoid} energy={energy:.6} computed_elements={} distances={} wall={:.1?}",
+        counts.one_to_all,
+        counts.dists,
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+fn cmd_kmedoids(args: &Args) -> Result<()> {
+    let pts = load_data(args)?;
+    let seed = args.get_parsed("seed", 0u64)?;
+    let k = args.get_parsed("k", 10usize)?;
+    let eps = args.get_parsed("eps", 0.0f64)?;
+    let algo = args.get("algo").unwrap_or("trikmeds");
+    let n = pts.len();
+    let m = Counted::new(VectorMetric::new(pts));
+    let t0 = std::time::Instant::now();
+    let r = match algo {
+        "trikmeds" => trikmeds(
+            &m,
+            &TrikmedsOpts { k, init: TrikmedsInit::Uniform(seed), eps, max_iters: 100 },
+        ),
+        "kmeds" => kmeds(&m, &KmedsOpts { k, uniform_seed: Some(seed), max_iters: 100 }),
+        other => bail!("unknown --algo {other:?}"),
+    };
+    let c = m.counts();
+    println!(
+        "algo={algo} K={k} eps={eps} loss={:.4} iters={} converged={} distances={} ({}% of N^2) wall={:.1?}",
+        r.loss,
+        r.iterations,
+        r.converged,
+        c.dists,
+        (100.0 * c.dists as f64 / (n as f64 * n as f64)).round(),
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args.get("id").context("--id required (or `all`)")?;
+    let scale = match args.get("scale") {
+        None => Scale::from_env(),
+        Some(s) => Scale::parse(s).with_context(|| format!("bad --scale {s:?}"))?,
+    };
+    let seed = args.get_parsed("seed", 0u64)?;
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL_IDS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let table = experiments::run_by_id(id, scale, seed)
+            .with_context(|| format!("unknown experiment id {id:?}"))?;
+        println!("{}", table.to_markdown());
+        println!("[{id} done in {:.1?}]\n", t0.elapsed());
+        if let Some(dir) = args.get("save") {
+            let path = std::path::Path::new(dir).join(format!("{id}.tsv"));
+            table.save_tsv(&path)?;
+            println!("saved {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.get("dir").unwrap_or("artifacts");
+    let rt = Runtime::open(std::path::Path::new(dir))?;
+    let arts = rt.registry().artifacts();
+    println!("{} artifacts in {dir}/", arts.len());
+    // Compile the smoke variants to prove the whole path.
+    for name in ["one_to_all_n512_d2", "trimed_step_n512_d2"] {
+        let t0 = std::time::Instant::now();
+        rt.executable(name)?;
+        println!("  compiled {name} in {:.1?}", t0.elapsed());
+    }
+    println!("artifact registry OK");
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    let keys = [
+        "data", "n", "d", "seed", "algo", "eps", "k", "id", "scale", "save", "dir",
+    ];
+    let flags = ["xla"];
+    let result = Args::parse(argv, &keys, &flags).and_then(|args| {
+        match args.command.as_deref() {
+            Some("medoid") => cmd_medoid(&args),
+            Some("kmedoids") => cmd_kmedoids(&args),
+            Some("exp") => cmd_exp(&args),
+            Some("artifacts") => cmd_artifacts(&args),
+            Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
+            None => bail!("missing subcommand\n{USAGE}"),
+        }
+    });
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,217 @@
+//! Metric-space abstraction shared by every algorithm in the library.
+//!
+//! The paper's algorithms (trimed, TOPRANK, RAND, KMEDS, trikmeds) are all
+//! generic over a metric: they only ever ask for the distance between two
+//! elements, or — the hot operation — for *all* distances from one element
+//! ("computing an element" in the paper's terminology). On vector data the
+//! one-to-all operation is a blocked scan (natively or via the XLA runtime);
+//! on graphs it is a single-source Dijkstra, which is why the paper counts
+//! computed *elements* rather than raw distances.
+//!
+//! [`Counted`] wraps any metric and tracks both counters; the experiment
+//! harness reports them exactly as the paper's `n̂` and `N_c` columns do.
+
+pub mod vector;
+pub mod xla_vector;
+
+pub use crate::graph::GraphMetric;
+pub use vector::VectorMetric;
+pub use xla_vector::XlaVectorMetric;
+
+use std::cell::Cell;
+
+/// A finite metric space over elements `0..len()`.
+///
+/// Implementations must satisfy the metric axioms (symmetry is *not*
+/// assumed — directed graphs give quasi-metrics; the triangle inequality
+/// is what trimed's correctness relies on and holds for shortest paths).
+pub trait MetricSpace {
+    /// Number of elements in the space.
+    fn len(&self) -> usize;
+
+    /// Distance from element `i` to element `j`.
+    fn dist(&self, i: usize, j: usize) -> f64;
+
+    /// Write distances from `i` to every element into `out` (len == len()).
+    ///
+    /// This is the paper's "compute element i". Implementations override it
+    /// when a one-to-all pass is cheaper than `len()` point queries
+    /// (vector blocks, Dijkstra).
+    fn one_to_all(&self, i: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.len());
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.dist(i, j);
+        }
+    }
+
+    /// True when the space has no elements.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether `dist(i, j) == dist(j, i)` for all pairs. Directed graphs
+    /// return `false`, which makes trimed fall back to the one-sided
+    /// directed bounds (see `algo::trimed`).
+    fn symmetric(&self) -> bool {
+        true
+    }
+
+    /// Write distances from every element *to* `i` (in-distances) into
+    /// `out`. Equal to [`MetricSpace::one_to_all`] for symmetric spaces;
+    /// directed graphs override this with a reverse-graph Dijkstra.
+    fn all_to_one(&self, i: usize, out: &mut [f64]) {
+        assert!(self.symmetric(), "asymmetric metric must override all_to_one");
+        self.one_to_all(i, out)
+    }
+}
+
+/// Counters accumulated by [`Counted`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counts {
+    /// Individual distance evaluations (a one-to-all pass adds `len()`).
+    pub dists: u64,
+    /// Number of one-to-all passes ("computed elements", the paper's n̂).
+    pub one_to_all: u64,
+}
+
+/// Wrapper that counts distance work done through it.
+///
+/// Interior mutability (`Cell`) keeps the [`MetricSpace`] methods `&self`,
+/// so algorithms need no special plumbing to be instrumented.
+pub struct Counted<M: MetricSpace> {
+    inner: M,
+    dists: Cell<u64>,
+    one_to_all: Cell<u64>,
+}
+
+impl<M: MetricSpace> Counted<M> {
+    /// Wrap a metric with zeroed counters.
+    pub fn new(inner: M) -> Self {
+        Counted { inner, dists: Cell::new(0), one_to_all: Cell::new(0) }
+    }
+
+    /// Snapshot of the counters.
+    pub fn counts(&self) -> Counts {
+        Counts { dists: self.dists.get(), one_to_all: self.one_to_all.get() }
+    }
+
+    /// Reset counters to zero.
+    pub fn reset(&self) {
+        self.dists.set(0);
+        self.one_to_all.set(0);
+    }
+
+    /// Access the wrapped metric.
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+
+    /// Unwrap.
+    pub fn into_inner(self) -> M {
+        self.inner
+    }
+}
+
+impl<M: MetricSpace> MetricSpace for Counted<M> {
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.dists.set(self.dists.get() + 1);
+        self.inner.dist(i, j)
+    }
+
+    fn one_to_all(&self, i: usize, out: &mut [f64]) {
+        self.dists.set(self.dists.get() + self.inner.len() as u64);
+        self.one_to_all.set(self.one_to_all.get() + 1);
+        self.inner.one_to_all(i, out);
+    }
+
+    fn symmetric(&self) -> bool {
+        self.inner.symmetric()
+    }
+
+    fn all_to_one(&self, i: usize, out: &mut [f64]) {
+        self.dists.set(self.dists.get() + self.inner.len() as u64);
+        self.one_to_all.set(self.one_to_all.get() + 1);
+        self.inner.all_to_one(i, out);
+    }
+}
+
+/// Blanket impl so `&M` can be passed where a metric is expected.
+impl<M: MetricSpace + ?Sized> MetricSpace for &M {
+    fn len(&self) -> usize {
+        (**self).len()
+    }
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        (**self).dist(i, j)
+    }
+    fn one_to_all(&self, i: usize, out: &mut [f64]) {
+        (**self).one_to_all(i, out)
+    }
+    fn symmetric(&self) -> bool {
+        (**self).symmetric()
+    }
+    fn all_to_one(&self, i: usize, out: &mut [f64]) {
+        (**self).all_to_one(i, out)
+    }
+}
+
+/// Mean distance from `i` to all other elements — the paper's energy
+/// E(i) = Σ_{j≠i} dist(i,j) / (N−1). Computes one-to-all once.
+pub fn energy<M: MetricSpace>(metric: &M, i: usize, scratch: &mut Vec<f64>) -> f64 {
+    let n = metric.len();
+    scratch.resize(n, 0.0);
+    metric.one_to_all(i, scratch);
+    if n <= 1 {
+        return 0.0;
+    }
+    let sum: f64 = scratch.iter().sum();
+    sum / (n - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Line(Vec<f64>);
+    impl MetricSpace for Line {
+        fn len(&self) -> usize {
+            self.0.len()
+        }
+        fn dist(&self, i: usize, j: usize) -> f64 {
+            (self.0[i] - self.0[j]).abs()
+        }
+    }
+
+    #[test]
+    fn counted_tracks_dist_and_ota() {
+        let m = Counted::new(Line(vec![0.0, 1.0, 3.0]));
+        let _ = m.dist(0, 1);
+        let _ = m.dist(1, 2);
+        let mut out = vec![0.0; 3];
+        m.one_to_all(0, &mut out);
+        let c = m.counts();
+        assert_eq!(c.dists, 2 + 3);
+        assert_eq!(c.one_to_all, 1);
+        m.reset();
+        assert_eq!(m.counts(), Counts::default());
+    }
+
+    #[test]
+    fn default_one_to_all_matches_dist() {
+        let m = Line(vec![0.0, 2.0, 5.0]);
+        let mut out = vec![0.0; 3];
+        m.one_to_all(2, &mut out);
+        assert_eq!(out, vec![5.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn energy_is_mean_excluding_self() {
+        let m = Line(vec![0.0, 1.0, 3.0]);
+        let mut scratch = Vec::new();
+        // E(1) = (1 + 2)/2
+        assert!((energy(&m, 1, &mut scratch) - 1.5).abs() < 1e-12);
+    }
+}

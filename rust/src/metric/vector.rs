@@ -1,0 +1,86 @@
+//! Native Euclidean metric over dense vector data.
+
+use super::MetricSpace;
+use crate::data::{squared_euclidean, Points};
+
+/// Euclidean metric over a [`Points`] set, computed natively in Rust.
+///
+/// The one-to-all pass is the trimed hot path for vector data; it runs as a
+/// single streaming scan over the row-major storage (see DESIGN §Perf).
+pub struct VectorMetric {
+    points: Points,
+}
+
+impl VectorMetric {
+    /// Wrap a point set.
+    pub fn new(points: Points) -> Self {
+        VectorMetric { points }
+    }
+
+    /// Underlying point set.
+    pub fn points(&self) -> &Points {
+        &self.points
+    }
+
+    /// Consume and return the point set.
+    pub fn into_points(self) -> Points {
+        self.points
+    }
+}
+
+impl MetricSpace for VectorMetric {
+    fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    #[inline]
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.points.dist(i, j)
+    }
+
+    fn one_to_all(&self, i: usize, out: &mut [f64]) {
+        let n = self.points.len();
+        assert_eq!(out.len(), n);
+        let d = self.points.dim();
+        let q = self.points.row(i).to_vec(); // detach from the scan borrow
+        let flat = self.points.flat();
+        for (j, o) in out.iter_mut().enumerate() {
+            let row = &flat[j * d..(j + 1) * d];
+            *o = squared_euclidean(&q, row).sqrt();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::energy;
+
+    #[test]
+    fn one_to_all_matches_pairwise() {
+        let p = Points::new(2, vec![0.0, 0.0, 1.0, 0.0, 0.0, 2.0, 3.0, 4.0]);
+        let m = VectorMetric::new(p);
+        let mut out = vec![0.0; 4];
+        m.one_to_all(3, &mut out);
+        for j in 0..4 {
+            assert!((out[j] - m.dist(3, j)).abs() < 1e-12);
+        }
+        assert_eq!(out[3], 0.0);
+    }
+
+    #[test]
+    fn energy_of_middle_point_is_smallest() {
+        // 1-d points: medoid of {0, 1, 2, 3, 10} is 2 (middle element).
+        let p = Points::new(1, vec![0.0, 1.0, 2.0, 3.0, 10.0]);
+        let m = VectorMetric::new(p);
+        let mut scratch = Vec::new();
+        let energies: Vec<f64> = (0..5).map(|i| energy(&m, i, &mut scratch)).collect();
+        let best = energies
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best, 2);
+    }
+}

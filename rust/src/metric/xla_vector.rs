@@ -1,0 +1,83 @@
+//! Euclidean metric whose one-to-all pass runs on the XLA/PJRT runtime.
+//!
+//! Same semantics as [`super::VectorMetric`], but the hot operation
+//! executes the AOT-compiled `one_to_all` artifact (JAX + Pallas, lowered
+//! at build time): the dataset lives in a device buffer, each pass ships
+//! one query in and one distance vector out. Point-pair queries
+//! ([`MetricSpace::dist`]) stay native — they are off the hot path.
+//!
+//! Numerics: the artifact computes in f32 with the MXU norm-decomposition,
+//! so distances carry ~1e-3·scale absolute error (see
+//! `python/compile/kernels/distance.py`). Algorithms that need exact
+//! triangle-inequality soundness on top of this metric should use a small
+//! `slack` (see `TrimedOpts::slack`); the self-distance is clamped to 0.
+
+use super::MetricSpace;
+use crate::data::Points;
+use crate::runtime::{OneToAllExec, Runtime};
+use anyhow::Result;
+use std::cell::Cell;
+
+/// Vector metric backed by the `one_to_all` XLA artifact.
+pub struct XlaVectorMetric {
+    points: Points,
+    exec: OneToAllExec,
+    /// Executions performed (for the hot-path benches).
+    dispatches: Cell<u64>,
+}
+
+impl XlaVectorMetric {
+    /// Build from a point set: picks an artifact variant, uploads the
+    /// padded dataset to the device once.
+    ///
+    /// Errors if no artifact covers `(n, d)` — run `make artifacts` or
+    /// extend the variant grid in `python/compile/aot.py`.
+    pub fn new(runtime: &Runtime, points: Points) -> Result<Self> {
+        let n = points.len();
+        let d = points.dim();
+        let mut exec = runtime.one_to_all(n, d)?;
+        let flat: Vec<f32> = points.flat().iter().map(|&v| v as f32).collect();
+        exec.load_points(&flat)?;
+        Ok(XlaVectorMetric { points, exec, dispatches: Cell::new(0) })
+    }
+
+    /// Underlying point set.
+    pub fn points(&self) -> &Points {
+        &self.points
+    }
+
+    /// Number of artifact executions so far.
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches.get()
+    }
+}
+
+impl MetricSpace for XlaVectorMetric {
+    fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Native pair distance (off the hot path; keeps counting semantics
+    /// identical to [`super::VectorMetric`]).
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.points.dist(i, j)
+    }
+
+    fn one_to_all(&self, i: usize, out: &mut [f64]) {
+        let d = self.points.dim();
+        let query: Vec<f32> = self.points.row(i).iter().map(|&v| v as f32).collect();
+        self.dispatches.set(self.dispatches.get() + 1);
+        self.exec
+            .run(&query, out)
+            .unwrap_or_else(|e| panic!("XLA one_to_all({i}) failed (d={d}): {e:#}"));
+        // The f32 norm-decomposition can leave a tiny positive residue at
+        // the self-distance; clamp it for metric hygiene.
+        out[i] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // End-to-end coverage lives in rust/tests/runtime_integration.rs (it
+    // needs `make artifacts`); unit tests here would only re-test stubs.
+}

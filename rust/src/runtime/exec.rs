@@ -1,0 +1,220 @@
+//! Typed executors over the compiled artifacts.
+//!
+//! Both executors follow the padding contract of `python/compile/model.py`:
+//! the dataset is tail-padded to the artifact's `n_pad` with copies of the
+//! last real row; `pad_count` and the true `n` ride along as `f32[1]`
+//! device buffers. Points and constants are uploaded once; per call only
+//! the query (and for `trimed_step` the bounds) cross the host boundary.
+
+use super::registry::ArtifactInfo;
+use anyhow::{anyhow, bail, Context, Result};
+use std::rc::Rc;
+
+fn upload(client: &xla::PjRtClient, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer(data, dims, None)
+        .map_err(|e| anyhow!("uploading {dims:?} f32 buffer: {e:?}"))
+}
+
+/// Pad `flat` (n×d row-major) to `n_pad` rows by repeating the final row.
+fn pad_points(flat: &[f32], n: usize, d: usize, n_pad: usize) -> Vec<f32> {
+    assert_eq!(flat.len(), n * d);
+    assert!(n_pad >= n && n > 0);
+    let mut padded = Vec::with_capacity(n_pad * d);
+    padded.extend_from_slice(flat);
+    let last = &flat[(n - 1) * d..];
+    for _ in n..n_pad {
+        padded.extend_from_slice(last);
+    }
+    padded
+}
+
+/// Shared state: uploaded points + constant buffers for one dataset.
+struct Loaded {
+    points: xla::PjRtBuffer,
+    n_true: xla::PjRtBuffer,
+    pad_count: xla::PjRtBuffer,
+}
+
+fn load_dataset(
+    client: &xla::PjRtClient,
+    info: &ArtifactInfo,
+    n: usize,
+    flat: &[f32],
+) -> Result<Loaded> {
+    if flat.len() != n * info.d {
+        bail!("points len {} != n*d = {}*{}", flat.len(), n, info.d);
+    }
+    let padded = pad_points(flat, n, info.d, info.n_pad);
+    Ok(Loaded {
+        points: upload(client, &padded, &[info.n_pad, info.d])?,
+        n_true: upload(client, &[n as f32], &[1])?,
+        pad_count: upload(client, &[(info.n_pad - n) as f32], &[1])?,
+    })
+}
+
+/// Executor for the `one_to_all` artifact: distances + pad-corrected sum.
+pub struct OneToAllExec {
+    client: xla::PjRtClient,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    info: ArtifactInfo,
+    n: usize,
+    loaded: Option<Loaded>,
+}
+
+impl OneToAllExec {
+    pub(super) fn new(
+        client: xla::PjRtClient,
+        exe: Rc<xla::PjRtLoadedExecutable>,
+        info: ArtifactInfo,
+        n: usize,
+    ) -> Self {
+        OneToAllExec { client, exe, info, n, loaded: None }
+    }
+
+    /// The artifact backing this executor.
+    pub fn info(&self) -> &ArtifactInfo {
+        &self.info
+    }
+
+    /// Number of real (unpadded) points.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Upload the dataset (row-major n×d f32). Must be called once before
+    /// [`Self::run`].
+    pub fn load_points(&mut self, flat: &[f32]) -> Result<()> {
+        self.loaded = Some(load_dataset(&self.client, &self.info, self.n, flat)?);
+        Ok(())
+    }
+
+    /// Distances from `query` (d f32) to all points, written into
+    /// `out[0..n]` as f64; returns the exact-sum output (pad-corrected).
+    pub fn run(&self, query: &[f32], out: &mut [f64]) -> Result<f64> {
+        let loaded = self.loaded.as_ref().context("load_points not called")?;
+        if query.len() != self.info.d {
+            bail!("query dim {} != {}", query.len(), self.info.d);
+        }
+        if out.len() != self.n {
+            bail!("out len {} != n {}", out.len(), self.n);
+        }
+        let qbuf = upload(&self.client, query, &[self.info.d])?;
+        // one_to_all takes (query, points, pad_count) — no n_true (it
+        // would be dead in the graph and is DCE'd from the artifact).
+        let results = self
+            .exe
+            .execute_b(&[&qbuf, &loaded.points, &loaded.pad_count])
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.info.name))?;
+        let tuple = results[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let (dists, sum) = tuple.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let dvec: Vec<f32> = dists.to_vec().map_err(|e| anyhow!("dists to_vec: {e:?}"))?;
+        for (o, &v) in out.iter_mut().zip(dvec.iter()) {
+            *o = v as f64;
+        }
+        let s: f32 = sum
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("sum to_vec: {e:?}"))?
+            .first()
+            .copied()
+            .context("empty sum output")?;
+        Ok(s as f64)
+    }
+}
+
+/// Executor for the `trimed_step` artifact: one dispatch computes the
+/// element (distances + sum) and tightens all lower bounds.
+pub struct TrimedStepExec {
+    client: xla::PjRtClient,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    info: ArtifactInfo,
+    n: usize,
+    loaded: Option<Loaded>,
+}
+
+/// Result of one trimed step dispatch.
+pub struct StepOut {
+    /// Distances to the real points (f64, length n).
+    pub dists: Vec<f64>,
+    /// Pad-corrected distance sum of the computed element.
+    pub sum: f64,
+    /// Tightened lower bounds (f32 as produced by the artifact, length
+    /// n_pad; entries past n belong to pads and are meaningless).
+    pub lb: Vec<f32>,
+}
+
+impl TrimedStepExec {
+    pub(super) fn new(
+        client: xla::PjRtClient,
+        exe: Rc<xla::PjRtLoadedExecutable>,
+        info: ArtifactInfo,
+        n: usize,
+    ) -> Self {
+        TrimedStepExec { client, exe, info, n, loaded: None }
+    }
+
+    /// The artifact backing this executor.
+    pub fn info(&self) -> &ArtifactInfo {
+        &self.info
+    }
+
+    /// Upload the dataset. Must be called once before [`Self::step`].
+    pub fn load_points(&mut self, flat: &[f32]) -> Result<()> {
+        self.loaded = Some(load_dataset(&self.client, &self.info, self.n, flat)?);
+        Ok(())
+    }
+
+    /// Execute one trimed inner step: compute `query`'s distances and sum,
+    /// and tighten the bound vector `lb` (length n_pad, f32).
+    pub fn step(&self, query: &[f32], lb: &[f32]) -> Result<StepOut> {
+        let loaded = self.loaded.as_ref().context("load_points not called")?;
+        if query.len() != self.info.d {
+            bail!("query dim {} != {}", query.len(), self.info.d);
+        }
+        if lb.len() != self.info.n_pad {
+            bail!("lb len {} != n_pad {}", lb.len(), self.info.n_pad);
+        }
+        let qbuf = upload(&self.client, query, &[self.info.d])?;
+        let lbuf = upload(&self.client, lb, &[self.info.n_pad])?;
+        let results = self
+            .exe
+            .execute_b(&[&qbuf, &loaded.points, &lbuf, &loaded.n_true, &loaded.pad_count])
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.info.name))?;
+        let tuple = results[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let (dists, sum, lb_new) = tuple.to_tuple3().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let dvec: Vec<f32> = dists.to_vec().map_err(|e| anyhow!("dists: {e:?}"))?;
+        let s: f32 = sum
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("sum: {e:?}"))?
+            .first()
+            .copied()
+            .context("empty sum output")?;
+        Ok(StepOut {
+            dists: dvec[..self.n].iter().map(|&v| v as f64).collect(),
+            sum: s as f64,
+            lb: lb_new.to_vec().map_err(|e| anyhow!("lb: {e:?}"))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_points_repeats_last_row() {
+        let flat = vec![1.0, 2.0, 3.0, 4.0]; // 2 points, d=2
+        let p = pad_points(&flat, 2, 2, 4);
+        assert_eq!(p, vec![1.0, 2.0, 3.0, 4.0, 3.0, 4.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn pad_points_noop_when_full() {
+        let flat = vec![1.0, 2.0];
+        assert_eq!(pad_points(&flat, 1, 2, 1), flat);
+    }
+}

@@ -1,0 +1,134 @@
+//! Artifact manifest parsing and variant selection.
+//!
+//! `python/compile/aot.py` writes `manifest.tsv` with one row per emitted
+//! HLO artifact: `name  op  n_pad  d  tile  file`. The registry picks,
+//! for a requested `(op, n, d)`, the smallest `n_pad >= n` variant with an
+//! exact dimension match.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One artifact row from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    /// Unique artifact name, e.g. `one_to_all_n4096_d2`.
+    pub name: String,
+    /// Operation: `one_to_all` or `trimed_step`.
+    pub op: String,
+    /// Padded point count the HLO was lowered for.
+    pub n_pad: usize,
+    /// Dimensionality.
+    pub d: usize,
+    /// Pallas tile size used at lowering (informational).
+    pub tile: usize,
+    /// File name within the artifact directory.
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    artifacts: Vec<ArtifactInfo>,
+}
+
+impl Registry {
+    /// Parse `manifest.tsv`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 6 {
+                bail!("manifest line {}: expected 6 fields, got {}", lineno + 1, f.len());
+            }
+            artifacts.push(ArtifactInfo {
+                name: f[0].to_string(),
+                op: f[1].to_string(),
+                n_pad: f[2].parse().with_context(|| format!("line {}: n_pad", lineno + 1))?,
+                d: f[3].parse().with_context(|| format!("line {}: d", lineno + 1))?,
+                tile: f[4].parse().with_context(|| format!("line {}: tile", lineno + 1))?,
+                file: f[5].to_string(),
+            });
+        }
+        Ok(Registry { artifacts })
+    }
+
+    /// All artifacts.
+    pub fn artifacts(&self) -> &[ArtifactInfo] {
+        &self.artifacts
+    }
+
+    /// Lookup by unique name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Smallest variant of `op` with `n_pad >= n` and exact `d`.
+    pub fn best_variant(&self, op: &str, n: usize, d: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.op == op && a.d == d && a.n_pad >= n)
+            .min_by_key(|a| a.n_pad)
+    }
+
+    /// Dimensions available for `op` (sorted, deduped).
+    pub fn dims_for(&self, op: &str) -> Vec<usize> {
+        let mut dims: Vec<usize> =
+            self.artifacts.iter().filter(|a| a.op == op).map(|a| a.d).collect();
+        dims.sort_unstable();
+        dims.dedup();
+        dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# name\top\tn_pad\td\ttile\tfile
+one_to_all_n512_d2\tone_to_all\t512\t2\t512\tone_to_all_n512_d2.hlo.txt
+one_to_all_n4096_d2\tone_to_all\t4096\t2\t512\tone_to_all_n4096_d2.hlo.txt
+one_to_all_n4096_d3\tone_to_all\t4096\t3\t512\tone_to_all_n4096_d3.hlo.txt
+trimed_step_n4096_d2\ttrimed_step\t4096\t2\t512\ttrimed_step_n4096_d2.hlo.txt
+";
+
+    #[test]
+    fn parse_and_lookup() {
+        let r = Registry::parse(SAMPLE).unwrap();
+        assert_eq!(r.artifacts().len(), 4);
+        assert!(r.by_name("one_to_all_n4096_d3").is_some());
+        assert!(r.by_name("nope").is_none());
+    }
+
+    #[test]
+    fn best_variant_picks_smallest_fit() {
+        let r = Registry::parse(SAMPLE).unwrap();
+        assert_eq!(r.best_variant("one_to_all", 100, 2).unwrap().n_pad, 512);
+        assert_eq!(r.best_variant("one_to_all", 513, 2).unwrap().n_pad, 4096);
+        assert!(r.best_variant("one_to_all", 5000, 2).is_none());
+        assert!(r.best_variant("one_to_all", 100, 7).is_none());
+    }
+
+    #[test]
+    fn dims_listing() {
+        let r = Registry::parse(SAMPLE).unwrap();
+        assert_eq!(r.dims_for("one_to_all"), vec![2, 3]);
+        assert_eq!(r.dims_for("trimed_step"), vec![2]);
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        assert!(Registry::parse("a\tb\tc\n").is_err());
+        assert!(Registry::parse("a\tb\tx\t2\t512\tf\n").is_err());
+    }
+}

@@ -1,0 +1,68 @@
+//! Lightweight seeded property-testing helper (no proptest in the offline
+//! vendor set).
+//!
+//! [`check`] runs a predicate over `cases` seeded RNGs and reports the
+//! failing seed, so a failure reproduces with
+//! `check_one(<seed>, |rng| ...)`.
+
+use crate::rng::Rng;
+
+/// Run `prop` over `cases` independent seeded RNGs derived from
+/// `base_seed`. Panics with the failing derived seed on first failure.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(base_seed: u64, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let derived = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(derived);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed (base_seed={base_seed}, case={case}, derived_seed={derived}): {msg}");
+        }
+    }
+}
+
+/// Run `prop` once with the given derived seed (reproduce a failure).
+pub fn check_one<F: FnMut(&mut Rng) -> Result<(), String>>(derived_seed: u64, mut prop: F) {
+    let mut rng = Rng::new(derived_seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property failed (derived_seed={derived_seed}): {msg}");
+    }
+}
+
+/// Assert two floats are within `tol`, returning a property error string.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes() {
+        check(1, 10, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failure() {
+        check(2, 5, |rng| {
+            if rng.f64() < 2.0 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

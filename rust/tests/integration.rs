@@ -1,0 +1,180 @@
+//! Cross-module integration tests: every medoid algorithm against every
+//! metric substrate, with the exhaustive scan as ground truth.
+
+use trimed::algo::{
+    medoid_1d, scan_medoid, toprank, toprank2, tree_medoid, trimed_medoid, trimed_topk,
+    TopRankOpts,
+};
+use trimed::data::synthetic as syn;
+use trimed::data::Points;
+use trimed::graph::generators as gen;
+use trimed::graph::GraphMetric;
+use trimed::harness::datasets::{table1_datasets, AnyMetric};
+use trimed::harness::Scale;
+use trimed::metric::{Counted, MetricSpace, VectorMetric};
+
+/// Energy-equality assertion (medoid index may differ only under exact
+/// energy ties, which the paper's uniqueness assumption excludes but
+/// floating data can produce).
+fn assert_same_medoid<M: MetricSpace>(m: &M, got: usize, got_e: f64, what: &str) {
+    let s = scan_medoid(m);
+    assert!(
+        (got_e - s.energy).abs() < 1e-9 && (s.energies[got] - s.energy).abs() < 1e-9,
+        "{what}: got {got} (E={got_e}), scan says {} (E={})",
+        s.medoid,
+        s.energy
+    );
+}
+
+#[test]
+fn trimed_exact_on_all_table1_substrates() {
+    // The nine dataset families of Table 1 at CI scale, all substrates.
+    for ds in table1_datasets(Scale::Small, 42) {
+        let m: &AnyMetric = &ds.metric;
+        let r = trimed_medoid(&m, 7);
+        assert_same_medoid(&m, r.medoid, r.energy, ds.name);
+    }
+}
+
+#[test]
+fn trimed_exact_across_dimensions_and_distributions() {
+    for d in [1usize, 2, 4, 8, 16] {
+        for (name, pts) in [
+            ("cube", syn::uniform_cube(400, d, d as u64)),
+            ("ball", syn::ball_uniform(400, d, d as u64 + 50)),
+            ("mix", syn::gauss_mix(400, d, 5, 0.05, d as u64 + 100)),
+        ] {
+            let m = VectorMetric::new(pts);
+            let r = trimed_medoid(&m, 11);
+            assert_same_medoid(&m, r.medoid, r.energy, &format!("{name} d={d}"));
+        }
+    }
+}
+
+#[test]
+fn trimed_exact_on_weighted_digraph() {
+    for seed in [1u64, 2, 3] {
+        let g = gen::preferential_attachment(400, 3, 0.5, seed);
+        let gm = GraphMetric::new_directed(g);
+        let r = trimed_medoid(&gm, seed);
+        assert_same_medoid(&gm, r.medoid, r.energy, "digraph");
+    }
+}
+
+#[test]
+fn all_algorithms_agree_on_sensor_net() {
+    let sg = gen::sensor_net(1200, 1.6, false, 9);
+    let gm = Counted::new(GraphMetric::new(sg.graph));
+    let s = scan_medoid(&gm);
+    let tri = trimed_medoid(&gm, 1);
+    let tr = toprank(&gm, &TopRankOpts::default());
+    let tr2 = toprank2(&gm, &TopRankOpts::default());
+    for (name, medoid) in [("trimed", tri.medoid), ("toprank", tr.medoid), ("toprank2", tr2.medoid)] {
+        assert!(
+            (s.energies[medoid] - s.energy).abs() < 1e-9,
+            "{name} returned non-medoid {medoid}"
+        );
+    }
+}
+
+#[test]
+fn tree_medoid_agrees_with_trimed_on_tree_metric() {
+    for seed in 0..5u64 {
+        let tree = gen::random_tree(150, seed);
+        let (tm, te) = tree_medoid(&tree);
+        let gm = GraphMetric::new(tree);
+        let r = trimed_medoid(&gm, seed);
+        assert!(
+            (r.energy - te).abs() < 1e-9,
+            "seed {seed}: tree oracle {tm} (E={te}) vs trimed {} (E={})",
+            r.medoid,
+            r.energy
+        );
+    }
+}
+
+#[test]
+fn quickselect_agrees_with_trimed_in_1d() {
+    for seed in 0..5u64 {
+        let pts = syn::uniform_cube(501, 1, seed);
+        let xs: Vec<f64> = pts.flat().to_vec();
+        let m = VectorMetric::new(pts);
+        let q = medoid_1d(&xs, seed);
+        let r = trimed_medoid(&m, seed);
+        let s = scan_medoid(&m);
+        assert!((s.energies[q] - s.energy).abs() < 1e-9, "quickselect");
+        assert!((s.energies[r.medoid] - s.energy).abs() < 1e-9, "trimed");
+    }
+}
+
+#[test]
+fn topk_consistent_between_trimed_and_toprank() {
+    let pts = syn::gauss_mix(800, 3, 6, 0.05, 3);
+    let m = VectorMetric::new(pts);
+    let k = 7;
+    let a = trimed_topk(&m, k, 5);
+    let b = toprank(&m, &TopRankOpts { k, ..Default::default() });
+    assert_eq!(a.elements, b.topk);
+}
+
+#[test]
+fn sm_a_adversarial_graph_needs_linear_computes() {
+    // SM-A's hardness example: an almost-complete graph where the medoid
+    // is the unique node with full degree. With hop-count distances all
+    // energies are within O(1/N) of each other, so elimination is weak —
+    // trimed still returns the exact medoid.
+    let m_half = 30usize;
+    let n = 2 * m_half + 1;
+    let mut edges = Vec::new();
+    // Node 0 connects to everyone; others miss one edge each (pair i<->i+1
+    // skipped for i odd).
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let skip = u != 0 && v != 0 && u + 1 == v && u % 2 == 1;
+            if !skip {
+                edges.push((u, v, 1.0));
+            }
+        }
+    }
+    let gm = GraphMetric::new(trimed::graph::CsrGraph::from_edges(n, &edges, true));
+    let s = scan_medoid(&gm);
+    assert_eq!(s.medoid, 0, "full-degree node is the medoid");
+    let r = trimed_medoid(&gm, 3);
+    assert_eq!(r.medoid, 0);
+}
+
+#[test]
+fn counted_accounting_is_exact_for_scan() {
+    let pts = syn::uniform_cube(97, 2, 8);
+    let m = Counted::new(VectorMetric::new(pts));
+    let _ = scan_medoid(&m);
+    assert_eq!(m.counts().one_to_all, 97);
+    assert_eq!(m.counts().dists, 97 * 97);
+}
+
+#[test]
+fn trimed_handles_degenerate_sets() {
+    // All-identical points: every element is a medoid with E = 0.
+    let pts = Points::new(3, vec![1.0; 3 * 12]);
+    let m = VectorMetric::new(pts);
+    let r = trimed_medoid(&m, 0);
+    assert_eq!(r.energy, 0.0);
+
+    // Two points.
+    let m = VectorMetric::new(Points::new(2, vec![0.0, 0.0, 1.0, 0.0]));
+    let r = trimed_medoid(&m, 0);
+    assert!((r.energy - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn dataset_io_roundtrip_through_medoid() {
+    let dir = std::env::temp_dir().join("trimed_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cloud.tsv");
+    let pts = syn::uniform_cube(300, 2, 5);
+    trimed::data::io::save_points(&path, &pts).unwrap();
+    let loaded = trimed::data::io::load_points(&path).unwrap();
+    let m1 = VectorMetric::new(pts);
+    let m2 = VectorMetric::new(loaded);
+    assert_eq!(trimed_medoid(&m1, 1).medoid, trimed_medoid(&m2, 1).medoid);
+}

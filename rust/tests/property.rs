@@ -1,0 +1,187 @@
+//! Property-based tests (seeded randomised, see `trimed::testutil`) of the
+//! paper's core invariants: Thm 3.1 exactness, bound soundness, the Thm
+//! 3.2 scaling, the ε-relaxation guarantee, the Fig. 6 energy envelope,
+//! and the metric axioms of every substrate.
+
+use trimed::algo::trimed::TrimedResult;
+use trimed::algo::{scan_medoid, trimed_with_opts, TrimedOpts};
+use trimed::data::synthetic as syn;
+use trimed::graph::generators as gen;
+use trimed::graph::GraphMetric;
+use trimed::harness::experiments::fig6_envelope;
+use trimed::metric::{Counted, MetricSpace, VectorMetric};
+use trimed::rng::Rng;
+use trimed::testutil::{check, close};
+
+fn random_points(rng: &mut Rng, max_n: usize, max_d: usize) -> trimed::data::Points {
+    let n = 20 + rng.below(max_n - 20);
+    let d = 1 + rng.below(max_d);
+    match rng.below(3) {
+        0 => syn::uniform_cube(n, d, rng.next_u64()),
+        1 => syn::ball_uniform(n, d, rng.next_u64()),
+        _ => syn::gauss_mix(n, d, 1 + rng.below(6), 0.02 + rng.f64() * 0.2, rng.next_u64()),
+    }
+}
+
+#[test]
+fn prop_trimed_exactness_thm31() {
+    check(101, 25, |rng| {
+        let pts = random_points(rng, 300, 6);
+        let m = VectorMetric::new(pts);
+        let r = trimed_with_opts(&m, &TrimedOpts { seed: rng.next_u64(), ..Default::default() });
+        let s = scan_medoid(&m);
+        close(r.energy, s.energy, 1e-9, "trimed vs scan energy")?;
+        close(s.energies[r.medoid], s.energy, 1e-9, "returned element is a minimiser")
+    });
+}
+
+#[test]
+fn prop_lower_bounds_sound_at_termination() {
+    check(202, 15, |rng| {
+        let pts = random_points(rng, 250, 5);
+        let m = VectorMetric::new(pts);
+        let n = m.len();
+        let r: TrimedResult = trimed_with_opts(&m, &TrimedOpts { seed: rng.next_u64(), ..Default::default() });
+        let mut row = vec![0.0; n];
+        for j in 0..n {
+            m.one_to_all(j, &mut row);
+            let s: f64 = row.iter().sum();
+            if r.lower_bounds[j] > s + 1e-7 {
+                return Err(format!("bound {} > true sum {} at {j}", r.lower_bounds[j], s));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eps_relaxation_guarantee() {
+    check(303, 15, |rng| {
+        let pts = random_points(rng, 400, 4);
+        let m = VectorMetric::new(pts);
+        let s = scan_medoid(&m);
+        let eps = rng.f64() * 0.5;
+        let r = trimed_with_opts(
+            &m,
+            &TrimedOpts { seed: rng.next_u64(), eps, ..Default::default() },
+        );
+        if r.energy > s.energy * (1.0 + eps) + 1e-9 {
+            return Err(format!("eps={eps}: E={} > (1+eps)E*={}", r.energy, s.energy * (1.0 + eps)));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sqrt_n_scaling_on_uniform_2d() {
+    // Thm 3.2: doubling N should grow computed elements ~sqrt(2)x, far
+    // below 2x. Verified statistically across seeds at two sizes.
+    let measure = |n: usize, seed: u64| -> f64 {
+        let mut total = 0u64;
+        for rep in 0..3u64 {
+            let pts = syn::uniform_cube(n, 2, seed + rep * 17);
+            let m = Counted::new(VectorMetric::new(pts));
+            let _ = trimed_with_opts(&m, &TrimedOpts { seed: rep, ..Default::default() });
+            total += m.counts().one_to_all;
+        }
+        total as f64 / 3.0
+    };
+    let small = measure(2_000, 1);
+    let big = measure(8_000, 2);
+    let growth = big / small;
+    // 4x data → ideal 2x computes; allow generous noise but exclude
+    // linear (4x) growth.
+    assert!(
+        growth < 3.0,
+        "computed-elements growth {growth:.2} suggests super-sqrt scaling ({small:.0} → {big:.0})"
+    );
+}
+
+#[test]
+fn prop_metric_axioms_all_substrates() {
+    check(404, 8, |rng| {
+        // Vector, undirected graph, directed graph substrates.
+        let pts = random_points(rng, 120, 4);
+        let vm = VectorMetric::new(pts);
+        let sg = gen::sensor_net(150 + rng.below(100), 1.8, false, rng.next_u64());
+        let gm = GraphMetric::new(sg.graph);
+        let dg = gen::preferential_attachment(100 + rng.below(80), 3, 0.5, rng.next_u64());
+        let dm = GraphMetric::new_directed(dg);
+
+        fn axioms<M: MetricSpace>(m: &M, rng: &mut Rng, symmetric: bool) -> Result<(), String> {
+            let n = m.len();
+            for _ in 0..40 {
+                let (i, j, k) = (rng.below(n), rng.below(n), rng.below(n));
+                let (dij, djk, dik) = (m.dist(i, j), m.dist(j, k), m.dist(i, k));
+                if m.dist(i, i).abs() > 1e-12 {
+                    return Err(format!("d({i},{i}) != 0"));
+                }
+                if dij < 0.0 {
+                    return Err(format!("negative distance d({i},{j})={dij}"));
+                }
+                if symmetric && (dij - m.dist(j, i)).abs() > 1e-9 {
+                    return Err(format!("asymmetry at ({i},{j})"));
+                }
+                if dik > dij + djk + 1e-9 {
+                    return Err(format!(
+                        "triangle violated: d({i},{k})={dik} > d({i},{j})+d({j},{k})={}",
+                        dij + djk
+                    ));
+                }
+            }
+            Ok(())
+        }
+        axioms(&vm, rng, true)?;
+        axioms(&gm, rng, true)?;
+        axioms(&dm, rng, false)
+    });
+}
+
+#[test]
+fn prop_one_to_all_consistent_with_dist() {
+    check(505, 8, |rng| {
+        let sg = gen::sensor_net(120 + rng.below(120), 1.9, false, rng.next_u64());
+        let gm = GraphMetric::new(sg.graph);
+        let n = gm.len();
+        let mut out = vec![0.0; n];
+        let i = rng.below(n);
+        gm.one_to_all(i, &mut out);
+        for _ in 0..20 {
+            let j = rng.below(n);
+            close(out[j], gm.dist(i, j), 1e-9, "one_to_all vs dist")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fig6_envelope_alpha_beta() {
+    // SM-G Fig. 6: on uniform 1-d data the excess energy is quadratically
+    // bounded near the medoid, with alpha > 0 across sample sizes.
+    for n in [101usize, 501, 1001] {
+        let (alpha, beta) = fig6_envelope(n, 0.5, n as u64);
+        assert!(alpha > 0.05, "n={n}: alpha {alpha} too small");
+        assert!(beta < 20.0, "n={n}: beta {beta} exploded");
+        assert!(alpha <= beta);
+    }
+}
+
+#[test]
+fn prop_directed_bounds_sound() {
+    check(606, 10, |rng| {
+        let g = gen::preferential_attachment(120 + rng.below(100), 3, 0.5, rng.next_u64());
+        let gm = GraphMetric::new_directed(g);
+        let n = gm.len();
+        let r = trimed_with_opts(&gm, &TrimedOpts { seed: rng.next_u64(), ..Default::default() });
+        let mut row = vec![0.0; n];
+        for j in 0..n {
+            gm.one_to_all(j, &mut row);
+            let s: f64 = row.iter().sum();
+            if r.lower_bounds[j] > s + 1e-7 {
+                return Err(format!("directed bound {} > sum {} at {j}", r.lower_bounds[j], s));
+            }
+        }
+        let sc = scan_medoid(&gm);
+        close(r.energy, sc.energy, 1e-9, "directed exactness")
+    });
+}

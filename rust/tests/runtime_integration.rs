@@ -1,0 +1,159 @@
+//! End-to-end tests of the XLA/PJRT runtime path: HLO artifacts produced
+//! by `make artifacts` are loaded, compiled and executed from Rust, and
+//! their numerics are checked against the native f64 implementation.
+//!
+//! All tests skip (with a message) when `artifacts/manifest.tsv` is
+//! missing, so `cargo test` works before `make artifacts`.
+
+use trimed::algo::{scan_medoid, trimed_with_opts, TrimedOpts};
+use trimed::data::synthetic::uniform_cube;
+use trimed::metric::{Counted, MetricSpace, VectorMetric, XlaVectorMetric};
+use trimed::runtime::{artifacts_available, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open_default().expect("open runtime"))
+}
+
+#[test]
+fn registry_lists_expected_ops() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let dims = rt.registry().dims_for("one_to_all");
+    assert!(dims.contains(&2), "dims: {dims:?}");
+    assert!(!rt.registry().dims_for("trimed_step").is_empty());
+}
+
+#[test]
+fn one_to_all_matches_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let pts = uniform_cube(700, 2, 42); // pads up to 4096
+    let native = VectorMetric::new(pts.clone());
+    let xm = XlaVectorMetric::new(&rt, pts).expect("xla metric");
+    let n = xm.len();
+    let mut a = vec![0.0; n];
+    let mut b = vec![0.0; n];
+    for i in [0usize, 1, 350, 699] {
+        native.one_to_all(i, &mut a);
+        xm.one_to_all(i, &mut b);
+        for j in 0..n {
+            assert!(
+                (a[j] - b[j]).abs() < 2e-3,
+                "i={i} j={j}: native {} xla {}",
+                a[j],
+                b[j]
+            );
+        }
+        assert_eq!(b[i], 0.0, "self-distance clamped");
+    }
+}
+
+#[test]
+fn one_to_all_sum_is_pad_corrected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // 700 real points inside a 4096-pad artifact: the artifact-side sum
+    // must match the native sum over the 700 real points only.
+    let pts = uniform_cube(700, 3, 7);
+    let native = VectorMetric::new(pts.clone());
+    let n = pts.len();
+    let mut exec = rt.one_to_all(n, 3).expect("exec");
+    let flat: Vec<f32> = pts.flat().iter().map(|&v| v as f32).collect();
+    exec.load_points(&flat).unwrap();
+    let mut native_d = vec![0.0; n];
+    native.one_to_all(5, &mut native_d);
+    let native_sum: f64 = native_d.iter().sum();
+    let q: Vec<f32> = pts.row(5).iter().map(|&v| v as f32).collect();
+    let mut out = vec![0.0; n];
+    let s = exec.run(&q, &mut out).unwrap();
+    assert!(
+        (s - native_sum).abs() / native_sum < 1e-3,
+        "xla sum {s} vs native {native_sum}"
+    );
+}
+
+#[test]
+fn trimed_step_tightens_bounds_soundly() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let pts = uniform_cube(600, 2, 11);
+    let n = pts.len();
+    let mut exec = rt.trimed_step(n, 2).expect("exec");
+    let flat: Vec<f32> = pts.flat().iter().map(|&v| v as f32).collect();
+    exec.load_points(&flat).unwrap();
+    let n_pad = exec.info().n_pad;
+
+    // True sums (native f64).
+    let native = VectorMetric::new(pts.clone());
+    let mut row = vec![0.0; n];
+    let true_sums: Vec<f64> = (0..n)
+        .map(|j| {
+            native.one_to_all(j, &mut row);
+            row.iter().sum()
+        })
+        .collect();
+
+    let mut lb = vec![0.0f32; n_pad];
+    for qi in [0usize, 17, 300] {
+        let q: Vec<f32> = pts.row(qi).iter().map(|&v| v as f64 as f32).collect();
+        let out = exec.step(&q, &lb).unwrap();
+        assert!((out.sum - true_sums[qi]).abs() / true_sums[qi] < 1e-3);
+        lb = out.lb;
+        // Bounds stay below true sums (with f32 tolerance).
+        for j in 0..n {
+            assert!(
+                (lb[j] as f64) <= true_sums[j] + 0.5,
+                "lb[{j}]={} exceeds true sum {}",
+                lb[j],
+                true_sums[j]
+            );
+        }
+    }
+    // And bounds are non-trivial after three computes.
+    let nonzero = lb[..n].iter().filter(|&&v| v > 0.0).count();
+    assert!(nonzero > n / 2, "only {nonzero} bounds tightened");
+}
+
+#[test]
+fn trimed_over_xla_metric_finds_the_medoid() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let pts = uniform_cube(3000, 2, 99);
+    let native = VectorMetric::new(pts.clone());
+    let s = scan_medoid(&native);
+
+    let xm = Counted::new(XlaVectorMetric::new(&rt, pts).expect("xla metric"));
+    // f32 slack: sums are O(N·diam); rounding error ~1e-3·sqrt(d)·N^(1/2)
+    // per sum — a generous slack only costs a few extra computed elements.
+    let r = trimed_with_opts(
+        &xm,
+        &TrimedOpts { seed: 3, slack: 0.05 * 3000.0_f64.sqrt(), ..Default::default() },
+    );
+    // The XLA-found medoid has (native) energy within f32 tolerance of the
+    // true optimum.
+    let found_e = s.energies[r.medoid];
+    assert!(
+        (found_e - s.energy).abs() < 1e-3,
+        "xla medoid {} (E={found_e}) vs native {} (E={})",
+        r.medoid,
+        s.medoid,
+        s.energy
+    );
+    // And the sub-quadratic behaviour survives the backend swap.
+    assert!(
+        r.computed < 1000,
+        "computed {} of 3000 — elimination broken on XLA path",
+        r.computed
+    );
+}
+
+#[test]
+fn xla_metric_counts_match_wrapper() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let pts = uniform_cube(512, 2, 5);
+    let xm = Counted::new(XlaVectorMetric::new(&rt, pts).expect("xla metric"));
+    let mut out = vec![0.0; 512];
+    xm.one_to_all(3, &mut out);
+    xm.one_to_all(9, &mut out);
+    assert_eq!(xm.counts().one_to_all, 2);
+    assert_eq!(xm.inner().dispatches(), 2);
+}
