@@ -25,7 +25,7 @@ fn main() {
         let t0 = std::time::Instant::now();
         let r = trikmeds(
             &m,
-            &TrikmedsOpts { k, init: TrikmedsInit::Uniform(1), eps, max_iters: 100 },
+            &TrikmedsOpts { init: TrikmedsInit::Uniform(1), eps, ..TrikmedsOpts::new(k) },
         );
         let c = m.counts().dists;
         if eps == 0.0 {
@@ -55,7 +55,7 @@ fn main() {
     let m = VectorMetric::new(small);
     let a = trikmeds(
         &m,
-        &TrikmedsOpts { k: 20, init: TrikmedsInit::Given(init), eps: 0.0, max_iters: 100 },
+        &TrikmedsOpts { init: TrikmedsInit::Given(init), ..TrikmedsOpts::new(20) },
     );
     let b = kmeds(&m, &KmedsOpts { k: 20, uniform_seed: Some(9), max_iters: 100 });
     assert!(

@@ -102,7 +102,7 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     let rc = trikmeds(
         &mc,
-        &TrikmedsOpts { k, init: TrikmedsInit::Uniform(0), eps: 0.01, max_iters: 100 },
+        &TrikmedsOpts { init: TrikmedsInit::Uniform(0), eps: 0.01, ..TrikmedsOpts::new(k) },
     );
     let frac = mc.counts().dists as f64 / (n2 as f64 * n2 as f64);
     println!(

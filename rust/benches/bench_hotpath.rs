@@ -1,24 +1,67 @@
 //! Hot-path microbenchmarks (ours, not a paper artifact): the per-layer
-//! numbers behind EXPERIMENTS.md §Perf.
+//! numbers behind EXPERIMENTS.md §Perf and the BENCH_PR1.json perf
+//! trajectory.
 //!
 //! * native one-to-all distance scan throughput (L3 hot loop) across d;
+//! * batched many_to_all throughput across thread counts (the engine's
+//!   parallel backend);
 //! * XLA/PJRT one-to-all dispatch (the AOT JAX+Pallas kernel) across d;
-//! * Dijkstra one-to-all on a road network (graph hot loop);
-//! * end-to-end trimed wall time, native vs XLA backends.
+//! * Dijkstra one-to-all on a road network (graph hot loop), sequential
+//!   and fanned out across threads;
+//! * end-to-end trimed wall time: sequential vs batched engine rounds at
+//!   several thread counts (the acceptance workload: N=50k, d=3).
 //!
 //! Run: cargo bench --bench bench_hotpath
+//! Set TRIMED_BENCH_JSON=path to also write the records as JSON
+//! (BENCH_PR1.json schema).
 
 use trimed::algo::{trimed_medoid, trimed_with_opts, TrimedOpts};
 use trimed::data::synthetic::uniform_cube;
 use trimed::graph::dijkstra::dijkstra_all;
 use trimed::graph::generators::road_network;
 use trimed::harness::bench::{fmt_ns, time_block};
+use trimed::harness::available_threads;
 use trimed::metric::{MetricSpace, VectorMetric, XlaVectorMetric};
 use trimed::runtime::{artifacts_available, Runtime};
 
+/// One benchmark record for the JSON perf trajectory.
+struct Record {
+    name: &'static str,
+    n: usize,
+    d: usize,
+    threads: usize,
+    batch: usize,
+    computed: u64,
+    wall_ns: f64,
+}
+
+/// Serialise as `{"records": [...]}` — the shape BENCH_PR1.json's
+/// regeneration recipe commits verbatim.
+fn json(records: &[Record]) -> String {
+    let mut s = String::from("{\"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"n\": {}, \"d\": {}, \"threads\": {}, \"batch\": {}, \
+             \"computed\": {}, \"wall_ns\": {:.0}}}{}\n",
+            r.name,
+            r.n,
+            r.d,
+            r.threads,
+            r.batch,
+            r.computed,
+            r.wall_ns,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]}");
+    s
+}
+
 fn main() {
     let n = 50_000;
-    println!("== hot path microbenchmarks (N={n}) ==\n");
+    let max_threads = available_threads();
+    let mut records: Vec<Record> = Vec::new();
+    println!("== hot path microbenchmarks (N={n}, cores={max_threads}) ==\n");
 
     // L3 native one-to-all scan.
     for d in [2usize, 6, 50] {
@@ -33,6 +76,46 @@ fn main() {
             bytes / stats.median_ns,
             n as f64 / stats.median_ns * 1e3
         );
+        records.push(Record {
+            name: "one_to_all",
+            n,
+            d,
+            threads: 1,
+            batch: 1,
+            computed: 1,
+            wall_ns: stats.median_ns,
+        });
+    }
+
+    // Batched many_to_all: the engine's parallel backend.
+    println!();
+    for d in [2usize, 6, 50] {
+        let pts = uniform_cube(n, d, 1);
+        let m = VectorMetric::new(pts);
+        let batch = 64usize;
+        let ids: Vec<usize> = (0..batch).map(|q| (q * 701) % n).collect();
+        let mut out = vec![0.0; batch * n];
+        for threads in [1usize, max_threads] {
+            m.set_threads(threads);
+            let stats = time_block(2, 10, || m.many_to_all(&ids, &mut out));
+            println!(
+                "many_to_all d={d:<3} B={batch} t={threads}: {}  ({:.1} Mdist/s)",
+                stats.summary(),
+                (batch * n) as f64 / stats.median_ns * 1e3
+            );
+            records.push(Record {
+                name: "many_to_all",
+                n,
+                d,
+                threads,
+                batch,
+                computed: batch as u64,
+                wall_ns: stats.median_ns,
+            });
+            if max_threads == 1 {
+                break;
+            }
+        }
     }
 
     // XLA dispatch (if artifacts built).
@@ -51,10 +134,10 @@ fn main() {
             );
         }
     } else {
-        println!("xla    one_to_all: skipped (run `make artifacts`)");
+        println!("\nxla    one_to_all: skipped (run `make artifacts`)");
     }
 
-    // Graph hot loop.
+    // Graph hot loop, sequential and fanned out.
     {
         let sg = road_network(160, 160, 0.9, 3);
         let g = sg.graph;
@@ -66,22 +149,91 @@ fn main() {
             stats.summary(),
             nn as f64 / stats.median_ns * 1e3
         );
+        let gm = trimed::graph::GraphMetric::new(g);
+        let batch = 16usize;
+        let ids: Vec<usize> = (0..batch).map(|q| (q * 977) % nn).collect();
+        let mut rows = vec![0.0; batch * nn];
+        for threads in [1usize, max_threads] {
+            gm.set_threads(threads);
+            let stats = time_block(1, 5, || gm.many_to_all(&ids, &mut rows));
+            println!(
+                "dijkstra fan-out N={nn} B={batch} t={threads}: {}",
+                stats.summary()
+            );
+            records.push(Record {
+                name: "dijkstra_fanout",
+                n: nn,
+                d: 0,
+                threads,
+                batch,
+                computed: batch as u64,
+                wall_ns: stats.median_ns,
+            });
+            if max_threads == 1 {
+                break;
+            }
+        }
     }
 
-    // End-to-end trimed.
+    // End-to-end trimed: sequential vs the batched engine (the acceptance
+    // workload `medoid --n 50000 --d 3`).
     println!();
     {
-        let pts = uniform_cube(n, 2, 5);
+        let pts = uniform_cube(n, 3, 5);
         let m = VectorMetric::new(pts.clone());
+        let seq = trimed_medoid(&m, 9);
         let stats = time_block(1, 5, || trimed_medoid(&m, 9));
-        println!("trimed native N={n} d=2  : {} per full medoid search", fmt_ns(stats.median_ns));
+        println!(
+            "trimed native N={n} d=3 B=1   t=1: {} per medoid (computed {})",
+            fmt_ns(stats.median_ns),
+            seq.computed
+        );
+        records.push(Record {
+            name: "trimed",
+            n,
+            d: 3,
+            threads: 1,
+            batch: 1,
+            computed: seq.computed,
+            wall_ns: stats.median_ns,
+        });
+        // Oversubscribing cores is fine — the acceptance point (t=8) stays
+        // comparable across machines.
+        for threads in [1usize, 2, 4, 8] {
+            let batch = 64usize;
+            let opts = TrimedOpts { seed: 9, batch, threads, ..Default::default() };
+            let r = trimed_with_opts(&m, &opts);
+            let stats = time_block(1, 5, || trimed_with_opts(&m, &opts));
+            println!(
+                "trimed native N={n} d=3 B={batch}  t={threads}: {} per medoid (computed {}, {:.2}x of sequential n̂)",
+                fmt_ns(stats.median_ns),
+                r.computed,
+                r.computed as f64 / seq.computed as f64
+            );
+            records.push(Record {
+                name: "trimed",
+                n,
+                d: 3,
+                threads,
+                batch,
+                computed: r.computed,
+                wall_ns: stats.median_ns,
+            });
+        }
         if artifacts_available() {
             let rt = Runtime::open_default().expect("runtime");
-            let xm = XlaVectorMetric::new(&rt, pts).expect("xla metric");
+            let pts2 = uniform_cube(n, 2, 5);
+            let xm = XlaVectorMetric::new(&rt, pts2).expect("xla metric");
             let stats = time_block(1, 3, || {
                 trimed_with_opts(&xm, &TrimedOpts { seed: 9, slack: 1e-4 * n as f64, ..Default::default() })
             });
             println!("trimed xla    N={n} d=2  : {} per full medoid search", fmt_ns(stats.median_ns));
         }
+    }
+
+    println!("\nBENCH_PR1 records:\n{}", json(&records));
+    if let Ok(path) = std::env::var("TRIMED_BENCH_JSON") {
+        std::fs::write(&path, json(&records)).expect("write TRIMED_BENCH_JSON");
+        println!("wrote {path}");
     }
 }

@@ -9,11 +9,13 @@ pub mod tree;
 pub mod trimed;
 
 pub use quickselect::medoid_1d;
-pub use rand_est::{rand_energies, RandResult};
-pub use scan::{scan_medoid, ScanResult};
+pub use rand_est::{rand_energies, rand_energies_batched, RandResult};
+pub use scan::{scan_medoid, scan_medoid_batched, ScanResult};
 pub use toprank::{toprank, toprank2, TopRankOpts, TopRankResult};
 pub use tree::tree_medoid;
-pub use trimed::{trimed_medoid, trimed_topk, trimed_with_opts, TrimedOpts, TrimedResult};
+pub use trimed::{
+    trimed_medoid, trimed_topk, trimed_topk_with_opts, trimed_with_opts, TrimedOpts, TrimedResult,
+};
 
 /// Result common to all medoid algorithms.
 #[derive(Clone, Debug)]

@@ -22,6 +22,18 @@ pub struct RandResult {
 /// Each anchor costs one one-to-all pass (a reverse Dijkstra on directed
 /// graphs, since Ê needs dist(x(j), x(i)) for all j).
 pub fn rand_energies<M: MetricSpace>(metric: &M, l: usize, seed: u64) -> RandResult {
+    rand_energies_batched(metric, l, seed, 1)
+}
+
+/// RAND with anchors computed `batch` at a time via
+/// [`MetricSpace::all_to_many`] — identical estimates (anchors are absorbed
+/// in the same order), but the backend can parallelise each batch.
+pub fn rand_energies_batched<M: MetricSpace>(
+    metric: &M,
+    l: usize,
+    seed: u64,
+    batch: usize,
+) -> RandResult {
     let n = metric.len();
     assert!(n > 0);
     let l = l.clamp(1, n);
@@ -29,22 +41,41 @@ pub fn rand_energies<M: MetricSpace>(metric: &M, l: usize, seed: u64) -> RandRes
     let anchors = rng.sample_without_replacement(n, l);
 
     let mut sums = vec![0.0f64; n];
-    let mut row = vec![0.0f64; n];
     let mut delta_hat = f64::INFINITY;
-    for &a in &anchors {
-        metric.all_to_one(a, &mut row);
-        let mut maxd = 0.0f64;
-        for (s, &d) in sums.iter_mut().zip(row.iter()) {
-            *s += d;
-            if d > maxd {
-                maxd = d;
-            }
-        }
-        delta_hat = delta_hat.min(2.0 * maxd);
-    }
+    absorb_anchors(metric, &anchors, batch, &mut sums, &mut delta_hat);
     let scale = n as f64 / (l as f64 * (n.max(2) - 1) as f64);
     let est_energies: Vec<f64> = sums.iter().map(|s| s * scale).collect();
     RandResult { est_energies, anchors, delta_hat, computed: l as u64 }
+}
+
+/// Accumulate in-distance sums and the Δ̂ diameter bound over `anchors`,
+/// `batch` reverse passes per [`MetricSpace::all_to_many`] call. Shared by
+/// RAND and TOPRANK2's incremental anchor rounds.
+pub(crate) fn absorb_anchors<M: MetricSpace>(
+    metric: &M,
+    anchors: &[usize],
+    batch: usize,
+    sums: &mut [f64],
+    delta_hat: &mut f64,
+) {
+    let n = metric.len();
+    assert_eq!(sums.len(), n);
+    let b = batch.max(1);
+    let mut buf = vec![0.0f64; b.min(anchors.len().max(1)) * n];
+    for chunk in anchors.chunks(b) {
+        let out = &mut buf[..chunk.len() * n];
+        metric.all_to_many(chunk, out);
+        for row in out.chunks(n) {
+            let mut maxd = 0.0f64;
+            for (s, &d) in sums.iter_mut().zip(row.iter()) {
+                *s += d;
+                if d > maxd {
+                    maxd = d;
+                }
+            }
+            *delta_hat = delta_hat.min(2.0 * maxd);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -92,6 +123,18 @@ mod tests {
         }
         assert!(r.delta_hat >= true_diam - 1e-12);
         assert!(r.delta_hat <= 2.0 * true_diam + 1e-12);
+    }
+
+    #[test]
+    fn batched_anchors_match_sequential() {
+        let m = VectorMetric::new(uniform_cube(150, 2, 8));
+        let seq = rand_energies(&m, 40, 9);
+        for batch in [4usize, 7, 64] {
+            let b = rand_energies_batched(&m, 40, 9, batch);
+            assert_eq!(b.anchors, seq.anchors, "batch={batch}");
+            assert_eq!(b.est_energies, seq.est_energies, "batch={batch}");
+            assert_eq!(b.delta_hat, seq.delta_hat, "batch={batch}");
+        }
     }
 
     #[test]

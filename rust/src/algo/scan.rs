@@ -33,6 +33,25 @@ pub fn scan_medoid<M: MetricSpace>(metric: &M) -> ScanResult {
     ScanResult { medoid: best.0, energy: best.1, energies }
 }
 
+/// The same exhaustive scan through the batched backend: N exact sums via
+/// `batch`-wide [`MetricSpace::many_to_all`] passes (which parallelise
+/// under [`MetricSpace::set_threads`]). Identical results and tie-breaking
+/// to [`scan_medoid`]; `batch = 1` is also identical in distance counts.
+pub fn scan_medoid_batched<M: MetricSpace>(metric: &M, batch: usize) -> ScanResult {
+    let n = metric.len();
+    assert!(n > 0, "empty set has no medoid");
+    let ids: Vec<usize> = (0..n).collect();
+    let sums = crate::engine::batched_sums(metric, &ids, batch);
+    let energies: Vec<f64> = sums.iter().map(|&s| sum_to_energy(s, n)).collect();
+    let mut best = (0usize, f64::INFINITY);
+    for (i, &e) in energies.iter().enumerate() {
+        if e < best.1 {
+            best = (i, e);
+        }
+    }
+    ScanResult { medoid: best.0, energy: best.1, energies }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -53,6 +72,17 @@ mod tests {
         let m = VectorMetric::new(Points::new(1, vec![0.0, 10.0, 4.0, 5.0, 6.0]));
         let r = scan_medoid(&m);
         assert_eq!(r.medoid, 3); // 5.0 is the median
+    }
+
+    #[test]
+    fn batched_scan_matches_sequential() {
+        let m = VectorMetric::new(uniform_cube(90, 3, 7));
+        let seq = scan_medoid(&m);
+        for batch in [1usize, 4, 64] {
+            let b = scan_medoid_batched(&m, batch);
+            assert_eq!(b.medoid, seq.medoid, "batch={batch}");
+            assert_eq!(b.energies, seq.energies, "batch={batch}");
+        }
     }
 
     #[test]

@@ -5,9 +5,16 @@
 //! lies below a Hoeffding threshold, and compute exact energies of the
 //! survivors. TOPRANK uses a fixed anchor count `Θ(N^{2/3} log^{1/3} N)`;
 //! TOPRANK2 grows the anchor set until the survivor set stops shrinking.
+//!
+//! Both phases are rounds of independent one-to-all passes, so they run on
+//! the batched backend: anchors are absorbed `batch` reverse passes at a
+//! time and the survivors' exact pass goes through
+//! [`crate::engine::batched_sums`] — estimates and results are identical to
+//! the sequential implementation for every `batch`.
 
-use super::rand_est::rand_energies;
+use super::rand_est::{absorb_anchors, rand_energies_batched};
 use super::sum_to_energy;
+use crate::engine::batched_sums;
 use crate::metric::MetricSpace;
 use crate::rng::Rng;
 
@@ -23,11 +30,17 @@ pub struct TopRankOpts {
     pub k: usize,
     /// RNG seed for anchor sampling.
     pub seed: u64,
+    /// One-to-all passes per batched backend call (anchor rounds and the
+    /// survivors' exact pass); results are identical for every value.
+    pub batch: usize,
+    /// Parallelism hint forwarded to the metric backend before the run;
+    /// `0` leaves the backend's current setting untouched.
+    pub threads: usize,
 }
 
 impl Default for TopRankOpts {
     fn default() -> Self {
-        TopRankOpts { alpha_prime: 1.0, q_scale: 1.0, k: 1, seed: 0 }
+        TopRankOpts { alpha_prime: 1.0, q_scale: 1.0, k: 1, seed: 0, batch: 1, threads: 0 }
     }
 }
 
@@ -49,17 +62,21 @@ pub struct TopRankResult {
     pub survivors: u64,
 }
 
-/// Exact energies for a candidate set; returns (best index, best energy,
-/// ranked list, energies by candidate position).
-fn exact_pass<M: MetricSpace>(metric: &M, candidates: &[usize], k: usize) -> (Vec<usize>, Vec<f64>) {
+/// Exact energies for a candidate set, computed `batch` elements per
+/// backend call; returns the k best (candidates, energies) ascending.
+fn exact_pass<M: MetricSpace>(
+    metric: &M,
+    candidates: &[usize],
+    k: usize,
+    batch: usize,
+) -> (Vec<usize>, Vec<f64>) {
     let n = metric.len();
-    let mut row = vec![0.0f64; n];
-    let mut ranked: Vec<(f64, usize)> = Vec::with_capacity(candidates.len());
-    for &c in candidates {
-        metric.one_to_all(c, &mut row);
-        let e = sum_to_energy(row.iter().sum(), n);
-        ranked.push((e, c));
-    }
+    let sums = batched_sums(metric, candidates, batch);
+    let mut ranked: Vec<(f64, usize)> = sums
+        .iter()
+        .zip(candidates.iter())
+        .map(|(&s, &c)| (sum_to_energy(s, n), c))
+        .collect();
     ranked.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let kk = k.min(ranked.len());
     (
@@ -72,12 +89,15 @@ fn exact_pass<M: MetricSpace>(metric: &M, candidates: &[usize], k: usize) -> (Ve
 pub fn toprank<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult {
     let n = metric.len();
     assert!(n > 0 && opts.k >= 1);
+    if opts.threads > 0 {
+        metric.set_threads(opts.threads);
+    }
     let nf = n as f64;
     let ln_n = nf.ln().max(1.0);
     // l = q · N^{2/3} (log N)^{1/3}, clamped to N.
     let l = ((opts.q_scale * nf.powf(2.0 / 3.0) * ln_n.powf(1.0 / 3.0)).ceil() as usize).clamp(1, n);
 
-    let rand = rand_energies(metric, l, opts.seed);
+    let rand = rand_energies_batched(metric, l, opts.seed, opts.batch);
     let mut est_sorted = rand.est_energies.clone();
     est_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let e_k = est_sorted[opts.k - 1];
@@ -85,7 +105,7 @@ pub fn toprank<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult 
 
     let survivors: Vec<usize> =
         (0..n).filter(|&i| rand.est_energies[i] <= threshold).collect();
-    let (topk, energies) = exact_pass(metric, &survivors, opts.k);
+    let (topk, energies) = exact_pass(metric, &survivors, opts.k, opts.batch);
     TopRankResult {
         medoid: topk[0],
         energy: energies[0],
@@ -105,6 +125,9 @@ pub fn toprank<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult 
 pub fn toprank2<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult {
     let n = metric.len();
     assert!(n > 0 && opts.k >= 1);
+    if opts.threads > 0 {
+        metric.set_threads(opts.threads);
+    }
     let nf = n as f64;
     let ln_n = nf.ln().max(1.0);
     let l0 = (nf.sqrt().ceil() as usize).clamp(1, n);
@@ -116,29 +139,7 @@ pub fn toprank2<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult
     let perm = rng.permutation(n);
     let mut n_anchors = 0usize;
     let mut sums = vec![0.0f64; n];
-    let mut row = vec![0.0f64; n];
     let mut delta_hat = f64::INFINITY;
-
-    let add_anchors = |count: usize,
-                           n_anchors: &mut usize,
-                           sums: &mut [f64],
-                           delta_hat: &mut f64,
-                           row: &mut [f64]| {
-        let take = count.min(n - *n_anchors);
-        for t in 0..take {
-            let a = perm[*n_anchors + t];
-            metric.all_to_one(a, row);
-            let mut maxd = 0.0f64;
-            for (s, &d) in sums.iter_mut().zip(row.iter()) {
-                *s += d;
-                if d > maxd {
-                    maxd = d;
-                }
-            }
-            *delta_hat = delta_hat.min(2.0 * maxd);
-        }
-        *n_anchors += take;
-    };
 
     let survivor_count = |sums: &[f64], l: usize, delta_hat: f64| -> usize {
         let scale = nf / (l as f64 * (n.max(2) - 1) as f64);
@@ -151,10 +152,22 @@ pub fn toprank2<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult
         est.len()
     };
 
-    add_anchors(l0, &mut n_anchors, &mut sums, &mut delta_hat, &mut row);
+    let grow = |count: usize, n_anchors: &mut usize, sums: &mut [f64], delta_hat: &mut f64| {
+        let take = count.min(n - *n_anchors);
+        absorb_anchors(
+            metric,
+            &perm[*n_anchors..*n_anchors + take],
+            opts.batch,
+            sums,
+            delta_hat,
+        );
+        *n_anchors += take;
+    };
+
+    grow(l0, &mut n_anchors, &mut sums, &mut delta_hat);
     let mut p_prev = survivor_count(&sums, n_anchors, delta_hat);
     while n_anchors < n {
-        add_anchors(q, &mut n_anchors, &mut sums, &mut delta_hat, &mut row);
+        grow(q, &mut n_anchors, &mut sums, &mut delta_hat);
         let p = survivor_count(&sums, n_anchors, delta_hat);
         let shrink = p_prev.saturating_sub(p);
         p_prev = p;
@@ -170,7 +183,7 @@ pub fn toprank2<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let thr = sorted[opts.k - 1] + 2.0 * opts.alpha_prime * delta_hat * (ln_n / n_anchors as f64).sqrt();
     let survivors: Vec<usize> = (0..n).filter(|&i| est[i] <= thr).collect();
-    let (topk, energies) = exact_pass(metric, &survivors, opts.k);
+    let (topk, energies) = exact_pass(metric, &survivors, opts.k, opts.batch);
     TopRankResult {
         medoid: topk[0],
         energy: energies[0],
@@ -185,7 +198,7 @@ pub fn toprank2<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult
 mod tests {
     use super::*;
     use crate::algo::scan_medoid;
-    use crate::data::synthetic::{uniform_cube, gauss_mix};
+    use crate::data::synthetic::{gauss_mix, uniform_cube};
     use crate::graph::generators::sensor_net;
     use crate::graph::GraphMetric;
     use crate::metric::{Counted, VectorMetric};
@@ -209,6 +222,28 @@ mod tests {
         let r = toprank(&m, &TopRankOpts::default());
         assert_eq!(r.computed, m.counts().one_to_all);
         assert_eq!(r.computed, r.anchors + r.survivors);
+    }
+
+    #[test]
+    fn toprank_batched_identical_to_sequential() {
+        let m = VectorMetric::new(uniform_cube(900, 2, 16));
+        let seq = toprank(&m, &TopRankOpts { seed: 2, ..Default::default() });
+        for batch in [8usize, 64] {
+            let b = toprank(&m, &TopRankOpts { seed: 2, batch, ..Default::default() });
+            assert_eq!(b.medoid, seq.medoid, "batch={batch}");
+            assert_eq!(b.topk, seq.topk, "batch={batch}");
+            assert_eq!(b.computed, seq.computed, "batch={batch}");
+        }
+    }
+
+    #[test]
+    fn toprank2_batched_identical_to_sequential() {
+        let m = VectorMetric::new(gauss_mix(700, 2, 8, 0.06, 4));
+        let seq = toprank2(&m, &TopRankOpts { seed: 5, ..Default::default() });
+        let b = toprank2(&m, &TopRankOpts { seed: 5, batch: 16, ..Default::default() });
+        assert_eq!(b.medoid, seq.medoid);
+        assert_eq!(b.anchors, seq.anchors);
+        assert_eq!(b.computed, seq.computed);
     }
 
     #[test]

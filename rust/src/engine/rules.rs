@@ -1,0 +1,188 @@
+//! Elimination rules: the algorithm-specific heads of the shared loop.
+//!
+//! A rule owns the incumbent state (best sum, top-k heap, cluster medoid
+//! candidate), exposes the threshold candidates are eliminated against, and
+//! absorbs every computed item's exact sum in visit order.
+
+/// Algorithm-specific head of the elimination loop.
+pub trait EliminationRule {
+    /// Current elimination threshold on distance sums: items whose lower
+    /// bound reaches it (after relaxation/slack) are skipped.
+    fn threshold(&self) -> f64;
+
+    /// A computed item's exact out-sum and its distance row over the
+    /// universe. Called in visit order, immediately after the compute.
+    fn observe(&mut self, item: usize, sum: f64, dists: &[f64]);
+}
+
+/// Track the single lowest sum — the medoid rule (paper Alg. 1).
+#[derive(Clone, Debug)]
+pub struct BestSumRule {
+    /// Item with the lowest exact sum seen so far.
+    pub best_item: usize,
+    /// Its sum (`INFINITY` until the first compute).
+    pub best_sum: f64,
+}
+
+impl BestSumRule {
+    /// Start with no incumbent.
+    pub fn new() -> Self {
+        BestSumRule { best_item: usize::MAX, best_sum: f64::INFINITY }
+    }
+}
+
+impl Default for BestSumRule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EliminationRule for BestSumRule {
+    fn threshold(&self) -> f64 {
+        self.best_sum
+    }
+
+    fn observe(&mut self, item: usize, sum: f64, _dists: &[f64]) {
+        if sum < self.best_sum {
+            self.best_sum = sum;
+            self.best_item = item;
+        }
+    }
+}
+
+/// Track the `k` lowest sums — the top-k ranking rule (paper §6).
+#[derive(Clone, Debug)]
+pub struct TopKSumRule {
+    k: usize,
+    /// Max-heap of the k best (sum, item) pairs seen so far.
+    heap: std::collections::BinaryHeap<(OrdF64, usize)>,
+}
+
+impl TopKSumRule {
+    /// Rule keeping the `k` lowest sums (`k >= 1`).
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        TopKSumRule { k, heap: std::collections::BinaryHeap::with_capacity(k + 1) }
+    }
+
+    /// The kept items as `(sum, item)`, ascending by sum.
+    pub fn into_ranked(self) -> Vec<(f64, usize)> {
+        let mut ranked: Vec<(f64, usize)> =
+            self.heap.into_iter().map(|(s, i)| (s.0, i)).collect();
+        ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        ranked
+    }
+}
+
+impl EliminationRule for TopKSumRule {
+    fn threshold(&self) -> f64 {
+        if self.heap.len() == self.k {
+            self.heap.peek().unwrap().0 .0
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    fn observe(&mut self, item: usize, sum: f64, _dists: &[f64]) {
+        if self.heap.len() < self.k {
+            self.heap.push((OrdF64(sum), item));
+        } else if sum < self.heap.peek().unwrap().0 .0 {
+            self.heap.pop();
+            self.heap.push((OrdF64(sum), item));
+        }
+    }
+}
+
+/// Track the lowest in-cluster sum plus its distance row — trikmeds'
+/// medoid-update rule (paper Alg. 8). Items are member-list *positions*.
+#[derive(Clone, Debug)]
+pub struct ClusterMedoidRule {
+    /// Lowest in-cluster sum (starts at the current medoid's exact sum).
+    pub best_sum: f64,
+    /// Position of the improving candidate, if any improved on the
+    /// incumbent medoid.
+    pub best_pos: Option<usize>,
+    /// The improving candidate's distances to every member (re-points the
+    /// members' exact medoid distances on acceptance).
+    pub best_row: Vec<f64>,
+}
+
+impl ClusterMedoidRule {
+    /// Start from the incumbent medoid's exact in-cluster sum.
+    pub fn new(current_sum: f64) -> Self {
+        ClusterMedoidRule { best_sum: current_sum, best_pos: None, best_row: Vec::new() }
+    }
+
+    /// Whether some candidate improved on the incumbent medoid.
+    pub fn improved(&self) -> bool {
+        self.best_pos.is_some()
+    }
+}
+
+impl EliminationRule for ClusterMedoidRule {
+    fn threshold(&self) -> f64 {
+        self.best_sum
+    }
+
+    fn observe(&mut self, item: usize, sum: f64, dists: &[f64]) {
+        if sum < self.best_sum {
+            self.best_sum = sum;
+            self.best_pos = Some(item);
+            self.best_row.clear();
+            self.best_row.extend_from_slice(dists);
+        }
+    }
+}
+
+/// f64 wrapper with total order (finite, non-NaN values only).
+#[derive(Copy, Clone, Debug, PartialEq)]
+struct OrdF64(f64);
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN in OrdF64")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_sum_tracks_minimum() {
+        let mut r = BestSumRule::new();
+        assert_eq!(r.threshold(), f64::INFINITY);
+        r.observe(3, 10.0, &[]);
+        r.observe(5, 7.0, &[]);
+        r.observe(8, 9.0, &[]);
+        assert_eq!(r.best_item, 5);
+        assert_eq!(r.threshold(), 7.0);
+    }
+
+    #[test]
+    fn topk_keeps_k_smallest_sorted() {
+        let mut r = TopKSumRule::new(2);
+        for (i, s) in [(0usize, 5.0), (1, 3.0), (2, 9.0), (3, 4.0)] {
+            r.observe(i, s, &[]);
+        }
+        assert_eq!(r.threshold(), 4.0);
+        assert_eq!(r.into_ranked(), vec![(3.0, 1), (4.0, 3)]);
+    }
+
+    #[test]
+    fn cluster_rule_records_row_of_best() {
+        let mut r = ClusterMedoidRule::new(6.0);
+        r.observe(0, 8.0, &[1.0, 2.0]); // no improvement
+        assert!(!r.improved());
+        r.observe(1, 5.0, &[3.0, 4.0]);
+        r.observe(2, 5.5, &[9.0, 9.0]); // worse than the new incumbent
+        assert_eq!(r.best_pos, Some(1));
+        assert_eq!(r.best_row, vec![3.0, 4.0]);
+        assert_eq!(r.best_sum, 5.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Compute backends the elimination engine runs over.
+//!
+//! The engine only needs a *universe* of items and a batched "compute these
+//! items' distance rows" operation. [`FullSpace`] is the whole metric space
+//! (trimed, top-k): computes are one-to-all passes. [`SubsetSpace`] is a
+//! cluster's member list (trikmeds' medoid update): a compute is the
+//! member's distances to its cluster only, evaluated as point queries so
+//! the paper's `N_c` distance accounting matches the sequential algorithm.
+
+use crate::metric::MetricSpace;
+
+/// A universe of items the engine can eliminate over.
+pub trait EliminationSpace {
+    /// Number of items in the universe.
+    fn len(&self) -> usize;
+
+    /// True when the universe has no items.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether out- and in-distances coincide (drives the bound family).
+    fn symmetric(&self) -> bool {
+        true
+    }
+
+    /// Distances from each `ids[q]` to every universe item, written to the
+    /// row-major `out` (`ids.len() × len()`).
+    fn compute_batch(&self, ids: &[usize], out: &mut [f64]);
+
+    /// In-distances (row `q` = distances from every item *to* `ids[q]`);
+    /// only called when [`EliminationSpace::symmetric`] is false.
+    fn compute_batch_rev(&self, ids: &[usize], out: &mut [f64]) {
+        assert!(self.symmetric(), "asymmetric space must override compute_batch_rev");
+        self.compute_batch(ids, out)
+    }
+}
+
+/// The whole metric space: items are elements, computes are (batched)
+/// one-to-all passes.
+pub struct FullSpace<'a, M: MetricSpace> {
+    metric: &'a M,
+}
+
+impl<'a, M: MetricSpace> FullSpace<'a, M> {
+    /// Wrap a metric.
+    pub fn new(metric: &'a M) -> Self {
+        FullSpace { metric }
+    }
+}
+
+impl<M: MetricSpace> EliminationSpace for FullSpace<'_, M> {
+    fn len(&self) -> usize {
+        self.metric.len()
+    }
+
+    fn symmetric(&self) -> bool {
+        self.metric.symmetric()
+    }
+
+    fn compute_batch(&self, ids: &[usize], out: &mut [f64]) {
+        self.metric.many_to_all(ids, out);
+    }
+
+    fn compute_batch_rev(&self, ids: &[usize], out: &mut [f64]) {
+        self.metric.all_to_many(ids, out);
+    }
+}
+
+/// A subset of a metric space, addressed by *position* in a member list.
+///
+/// Computes are `members.len()` point-distance queries per item (not
+/// one-to-all passes), exactly as trikmeds Alg. 8 evaluates candidate
+/// medoids — so a `Counted` wrapper sees the same `dists` growth as the
+/// sequential implementation. The subset is always treated as symmetric,
+/// mirroring the sequential trikmeds.
+pub struct SubsetSpace<'a, M: MetricSpace> {
+    metric: &'a M,
+    members: &'a [usize],
+}
+
+impl<'a, M: MetricSpace> SubsetSpace<'a, M> {
+    /// View `members` of `metric` as an elimination universe.
+    pub fn new(metric: &'a M, members: &'a [usize]) -> Self {
+        SubsetSpace { metric, members }
+    }
+}
+
+impl<M: MetricSpace> EliminationSpace for SubsetSpace<'_, M> {
+    fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    fn compute_batch(&self, ids: &[usize], out: &mut [f64]) {
+        let v = self.members.len();
+        assert_eq!(out.len(), ids.len() * v);
+        for (&pos, row) in ids.iter().zip(out.chunks_mut(v.max(1))) {
+            let i = self.members[pos];
+            for (slot, &j) in row.iter_mut().zip(self.members.iter()) {
+                *slot = self.metric.dist(i, j);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Points;
+    use crate::metric::VectorMetric;
+
+    #[test]
+    fn subset_space_rows_are_member_local() {
+        let pts = Points::new(1, vec![0.0, 10.0, 1.0, 3.0]);
+        let m = VectorMetric::new(pts);
+        let members = [0usize, 2, 3];
+        let s = SubsetSpace::new(&m, &members);
+        assert_eq!(s.len(), 3);
+        let mut out = vec![0.0; 3];
+        s.compute_batch(&[1], &mut out); // member position 1 = element 2
+        assert_eq!(out, vec![1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn full_space_mirrors_metric() {
+        let pts = Points::new(1, vec![0.0, 2.0, 5.0]);
+        let m = VectorMetric::new(pts);
+        let s = FullSpace::new(&m);
+        assert_eq!(s.len(), 3);
+        assert!(s.symmetric());
+        let mut out = vec![0.0; 6];
+        s.compute_batch(&[2, 0], &mut out);
+        assert_eq!(out, vec![5.0, 3.0, 0.0, 0.0, 2.0, 5.0]);
+    }
+}

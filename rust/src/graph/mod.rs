@@ -250,19 +250,31 @@ impl CsrGraph {
 /// reverse graph is precomputed so that [`MetricSpace::all_to_one`]
 /// (in-distances, needed by trimed's directed bounds and by RAND's anchor
 /// estimates) is a single reverse Dijkstra.
+///
+/// The batched [`MetricSpace::many_to_all`] pass is a multi-source SSSP
+/// fan-out: sources are split into contiguous groups and each group's
+/// Dijkstra/BFS runs on its own thread ([`MetricSpace::set_threads`])
+/// against the shared CSR storage.
 pub struct GraphMetric {
     graph: CsrGraph,
     /// `Some` for directed graphs: arcs reversed.
     reverse: Option<CsrGraph>,
     /// All arcs have weight 1 → one-to-all uses BFS instead of Dijkstra.
     unit_weights: bool,
+    /// Threads per batched call (0 and 1 both mean sequential).
+    threads: std::sync::atomic::AtomicUsize,
 }
 
 impl GraphMetric {
     /// Wrap an undirected (symmetric) graph.
     pub fn new(graph: CsrGraph) -> Self {
         let unit_weights = bfs::has_unit_weights(&graph);
-        GraphMetric { graph, reverse: None, unit_weights }
+        GraphMetric {
+            graph,
+            reverse: None,
+            unit_weights,
+            threads: std::sync::atomic::AtomicUsize::new(1),
+        }
     }
 
     /// Wrap a directed graph; builds the reverse graph for in-distance
@@ -270,7 +282,12 @@ impl GraphMetric {
     pub fn new_directed(graph: CsrGraph) -> Self {
         let unit_weights = bfs::has_unit_weights(&graph);
         let reverse = Some(graph.reversed());
-        GraphMetric { graph, reverse, unit_weights }
+        GraphMetric {
+            graph,
+            reverse,
+            unit_weights,
+            threads: std::sync::atomic::AtomicUsize::new(1),
+        }
     }
 
     /// The underlying graph.
@@ -284,6 +301,18 @@ impl GraphMetric {
         } else {
             dijkstra::dijkstra_all(g, i, out);
         }
+    }
+
+    /// Multi-source fan-out: one SSSP per source row, split across threads
+    /// by the shared [`crate::metric::fan_out`] scaffold.
+    fn multi_sssp(&self, g: &CsrGraph, ids: &[usize], out: &mut [f64]) {
+        let n = g.num_nodes();
+        let threads = self.threads.load(std::sync::atomic::Ordering::Relaxed);
+        crate::metric::fan_out(threads, n, ids, out, |chunk, rows| {
+            for (&i, row) in chunk.iter().zip(rows.chunks_mut(n)) {
+                self.sssp(g, i, row);
+            }
+        });
     }
 }
 
@@ -309,6 +338,21 @@ impl MetricSpace for GraphMetric {
             None => self.sssp(&self.graph, i, out),
             Some(rev) => self.sssp(rev, i, out),
         }
+    }
+
+    fn many_to_all(&self, ids: &[usize], out: &mut [f64]) {
+        self.multi_sssp(&self.graph, ids, out);
+    }
+
+    fn all_to_many(&self, ids: &[usize], out: &mut [f64]) {
+        match &self.reverse {
+            None => self.multi_sssp(&self.graph, ids, out),
+            Some(rev) => self.multi_sssp(rev, ids, out),
+        }
+    }
+
+    fn set_threads(&self, threads: usize) {
+        self.threads.store(threads.max(1), std::sync::atomic::Ordering::Relaxed);
     }
 }
 
@@ -371,6 +415,33 @@ mod tests {
         let mut out = vec![0.0; 5];
         m.one_to_all(2, &mut out);
         assert_eq!(out, vec![2.0, 1.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn many_to_all_matches_sequential_sssp() {
+        let sg = generators::sensor_net(200, 1.8, false, 7);
+        let m = GraphMetric::new(sg.graph);
+        let n = m.len();
+        let ids = [0usize, 3, n / 2, n - 1];
+        for threads in [1usize, 2, 5] {
+            m.set_threads(threads);
+            let mut batched = vec![0.0; ids.len() * n];
+            m.many_to_all(&ids, &mut batched);
+            let mut single = vec![0.0; n];
+            for (q, &i) in ids.iter().enumerate() {
+                m.one_to_all(i, &mut single);
+                assert_eq!(&batched[q * n..(q + 1) * n], single.as_slice(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_many_uses_reverse_graph() {
+        let g = CsrGraph::from_edges(3, &[(0, 1, 2.0), (1, 2, 3.0)], false);
+        let m = GraphMetric::new_directed(g);
+        let mut out = vec![0.0; 3];
+        m.all_to_many(&[2], &mut out);
+        assert_eq!(out, vec![5.0, 3.0, 0.0]);
     }
 
     #[test]

@@ -48,6 +48,24 @@ impl MetricSpace for AnyMetric {
             AnyMetric::Graph(m) => m.all_to_one(i, out),
         }
     }
+    fn many_to_all(&self, ids: &[usize], out: &mut [f64]) {
+        match self {
+            AnyMetric::Vector(m) => m.many_to_all(ids, out),
+            AnyMetric::Graph(m) => m.many_to_all(ids, out),
+        }
+    }
+    fn all_to_many(&self, ids: &[usize], out: &mut [f64]) {
+        match self {
+            AnyMetric::Vector(m) => m.all_to_many(ids, out),
+            AnyMetric::Graph(m) => m.all_to_many(ids, out),
+        }
+    }
+    fn set_threads(&self, threads: usize) {
+        match self {
+            AnyMetric::Vector(m) => m.set_threads(threads),
+            AnyMetric::Graph(m) => m.set_threads(threads),
+        }
+    }
 }
 
 /// A named Table-1 workload.

@@ -179,10 +179,9 @@ pub fn table2(scale: Scale, seed: u64) -> Table {
                 let r = trikmeds(
                     &m,
                     &TrikmedsOpts {
-                        k,
                         init: TrikmedsInit::Uniform(seed + k as u64),
                         eps,
-                        max_iters: 100,
+                        ..TrikmedsOpts::new(k)
                     },
                 );
                 (m.counts().dists, r.loss, r.iterations)

@@ -68,6 +68,65 @@ impl Scale {
     }
 }
 
+/// Execution configuration for the batched elimination engine, shared by
+/// the CLI (`--threads` / `--batch`) and the benches.
+///
+/// Orthogonal to [`Scale`]: `Scale` sizes the workload, `ExecConfig` says
+/// how the hot passes run. Paper-table experiments keep the sequential
+/// default so their n̂ columns stay comparable with the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecConfig {
+    /// OS threads per batched metric pass (1 = sequential).
+    pub threads: usize,
+    /// Candidates per engine round (1 = the paper's sequential loops).
+    pub batch: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig { threads: 1, batch: 1 }
+    }
+}
+
+impl ExecConfig {
+    /// From `TRIMED_THREADS` / `TRIMED_BATCH`, defaulting to sequential.
+    pub fn from_env() -> ExecConfig {
+        ExecConfig {
+            threads: Self::env_threads().unwrap_or(1),
+            batch: Self::env_batch().unwrap_or(1),
+        }
+    }
+
+    /// `TRIMED_THREADS`, if set to a positive integer.
+    pub fn env_threads() -> Option<usize> {
+        env_usize("TRIMED_THREADS")
+    }
+
+    /// `TRIMED_BATCH`, if set to a positive integer. Callers that apply a
+    /// batch heuristic (the CLI's `--threads`-only default) check this so
+    /// an explicit `TRIMED_BATCH=1` is honoured, not treated as unset.
+    pub fn env_batch() -> Option<usize> {
+        env_usize("TRIMED_BATCH")
+    }
+
+    /// Default engine batch for a thread count: deep enough that every
+    /// thread gets several queries per round, capped so the first (blind)
+    /// round doesn't waste computes. Single source of the heuristic — the
+    /// CLI's `--threads`-only default uses it.
+    pub fn batch_for(threads: usize) -> usize {
+        (8 * threads).clamp(8, 64)
+    }
+}
+
+/// Cores the OS reports as available (1 if unknown).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok().and_then(|v| v.parse::<usize>().ok()).filter(|&v| v > 0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -84,5 +143,15 @@ mod tests {
         assert_eq!(Scale::Full.n(5000, 100, 1000), 5000);
         assert_eq!(Scale::Small.n(5000, 100, 1000), 100);
         assert_eq!(Scale::Medium.n(500, 100, 1000), 500);
+    }
+
+    #[test]
+    fn exec_config_defaults_sequential() {
+        let c = ExecConfig::default();
+        assert_eq!(c, ExecConfig { threads: 1, batch: 1 });
+        assert_eq!(ExecConfig::batch_for(1), 8);
+        assert_eq!(ExecConfig::batch_for(4), 32);
+        assert_eq!(ExecConfig::batch_for(100), 64);
+        assert!(available_threads() >= 1);
     }
 }

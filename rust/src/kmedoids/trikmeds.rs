@@ -20,8 +20,17 @@
 //! consecutive range (Alg. 11). We keep explicit per-cluster member lists
 //! instead — identical asymptotics, no data movement — and note that the
 //! medoid plays Alg. 11's "first element of the range" role.
+//!
+//! The medoid update's elimination loop is the shared engine
+//! ([`crate::engine`]) run over a [`SubsetSpace`] (the cluster's member
+//! list) with [`ClusterMedoidRule`]: with `batch = 1` the trajectory — and
+//! hence the §5.2 KMEDS equivalence — is reproduced exactly; `batch > 1`
+//! evaluates candidate medoids in rounds, reaching the same fixpoint
+//! (elimination is sound either way) at a possibly different distance
+//! count.
 
 use super::{init, ClusteringResult};
+use crate::engine::{run_elimination, ClusterMedoidRule, EngineOpts, SubsetSpace};
 use crate::metric::MetricSpace;
 
 /// Options for [`trikmeds`].
@@ -36,6 +45,16 @@ pub struct TrikmedsOpts {
     pub eps: f64,
     /// Iteration cap.
     pub max_iters: usize,
+    /// Candidate medoids evaluated per engine round in the update step
+    /// (1 = the paper's sequential Alg. 8). The subset backend issues
+    /// point queries, so `batch > 1` reaches the same fixpoint with
+    /// stale-bound overhead and no parallel speedup today — useful for
+    /// batch-invariance testing; a threaded subset backend is an open
+    /// ROADMAP item.
+    pub batch: usize,
+    /// Parallelism hint forwarded to the metric backend; 0 leaves the
+    /// backend's current setting untouched.
+    pub threads: usize,
 }
 
 /// Initialisation choice for trikmeds.
@@ -48,9 +67,17 @@ pub enum TrikmedsInit {
 }
 
 impl TrikmedsOpts {
-    /// Defaults: uniform init with seed 0, exact (ε = 0), 100-iter cap.
+    /// Defaults: uniform init with seed 0, exact (ε = 0), 100-iter cap,
+    /// sequential (batch 1).
     pub fn new(k: usize) -> Self {
-        TrikmedsOpts { k, init: TrikmedsInit::Uniform(0), eps: 0.0, max_iters: 100 }
+        TrikmedsOpts {
+            k,
+            init: TrikmedsInit::Uniform(0),
+            eps: 0.0,
+            max_iters: 100,
+            batch: 1,
+            threads: 0,
+        }
     }
 }
 
@@ -84,6 +111,9 @@ pub fn trikmeds<M: MetricSpace>(metric: &M, opts: &TrikmedsOpts) -> ClusteringRe
     let k = opts.k;
     assert!(k >= 1 && k <= n);
     assert!(opts.eps >= 0.0);
+    if opts.threads > 0 {
+        metric.set_threads(opts.threads);
+    }
 
     // ---- initialise (Alg. 7) -------------------------------------------
     let medoids: Vec<usize> = match &opts.init {
@@ -131,7 +161,7 @@ pub fn trikmeds<M: MetricSpace>(metric: &M, opts: &TrikmedsOpts) -> ClusteringRe
     let mut converged = false;
     for _ in 0..opts.max_iters {
         iterations += 1;
-        let medoids_changed = update_medoids(metric, &mut st, opts.eps);
+        let medoids_changed = update_medoids(metric, &mut st, opts.eps, opts.batch);
         let assignments_changed = assign_to_clusters(metric, &mut st, opts.eps);
         update_sum_bounds(&mut st);
         if !medoids_changed && !assignments_changed {
@@ -150,44 +180,42 @@ pub fn trikmeds<M: MetricSpace>(metric: &M, opts: &TrikmedsOpts) -> ClusteringRe
     }
 }
 
-/// Alg. 8. Returns true if any medoid moved.
-fn update_medoids<M: MetricSpace>(metric: &M, st: &mut State, eps: f64) -> bool {
+/// Alg. 8, as an engine run per cluster: the member list is the universe
+/// ([`SubsetSpace`]), the incumbent medoid's exact sum is the threshold,
+/// and bound propagation `S(j) >= |S(i) - v·dist(i,j)|` is the engine's
+/// shared pass. Returns true if any medoid moved.
+fn update_medoids<M: MetricSpace>(metric: &M, st: &mut State, eps: f64, batch: usize) -> bool {
     let mut any_moved = false;
-    let mut dtilde: Vec<f64> = Vec::new();
+    let mut lb: Vec<f64> = Vec::new();
+    let mut order: Vec<usize> = Vec::new();
     for c in 0..st.k {
         let mem = std::mem::take(&mut st.members[c]);
-        let v = mem.len() as f64;
         let old_medoid = st.medoids[c];
-        for &i in &mem {
-            // Bound test (with trikmeds-ε relaxation).
-            if st.ls[i] * (1.0 + eps) >= st.s[c] {
-                continue;
-            }
-            // Make l_s(i) tight: all in-cluster distances to i.
-            dtilde.clear();
-            dtilde.reserve(mem.len());
-            let mut sum = 0.0;
-            for &j in &mem {
-                let dd = metric.dist(i, j);
-                dtilde.push(dd);
-                sum += dd;
-            }
-            st.ls[i] = sum;
-            // Accept i as the new medoid candidate?
-            if sum < st.s[c] {
-                st.s[c] = sum;
-                st.medoids[c] = i;
-                // Re-point members' exact medoid distances at i.
-                for (&j, &dd) in mem.iter().zip(&dtilde) {
-                    st.d[j] = dd;
-                }
-            }
-            // Tighten members' sum bounds: S(j) >= |S(i) - v·dist(i,j)|.
-            for (&j, &dd) in mem.iter().zip(&dtilde) {
-                let b = (sum - v * dd).abs();
-                if b > st.ls[j] {
-                    st.ls[j] = b;
-                }
+
+        // Member-local view of the l_s bounds, visited in member order
+        // (trikmeds does not shuffle: churn already randomises clusters).
+        lb.clear();
+        lb.extend(mem.iter().map(|&j| st.ls[j]));
+        order.clear();
+        order.extend(0..mem.len());
+        let space = SubsetSpace::new(metric, &mem);
+        let mut rule = ClusterMedoidRule::new(st.s[c]);
+        let _ = run_elimination(
+            &space,
+            &order,
+            &mut lb,
+            &mut rule,
+            &EngineOpts { batch, eps, ..Default::default() },
+        );
+        for (pos, &j) in mem.iter().enumerate() {
+            st.ls[j] = lb[pos];
+        }
+        if let Some(best_pos) = rule.best_pos {
+            st.s[c] = rule.best_sum;
+            st.medoids[c] = mem[best_pos];
+            // Re-point members' exact medoid distances at the new medoid.
+            for (&j, &dd) in mem.iter().zip(&rule.best_row) {
+                st.d[j] = dd;
             }
         }
         if st.medoids[c] != old_medoid {
@@ -310,10 +338,8 @@ mod tests {
             let r = trikmeds(
                 &m,
                 &TrikmedsOpts {
-                    k: 5,
                     init: TrikmedsInit::Given(init),
-                    eps: 0.0,
-                    max_iters: 100,
+                    ..TrikmedsOpts::new(5)
                 },
             );
             assert!((r.loss - r_ref.loss).abs() < 1e-9, "seed {seed}: {} vs {}", r.loss, r_ref.loss);
@@ -322,6 +348,40 @@ mod tests {
             ma.sort_unstable();
             mb.sort_unstable();
             assert_eq!(ma, mb, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn batched_update_reaches_same_fixpoint() {
+        // Elimination is sound at any batch width, so the per-iteration
+        // medoid choice — and hence the whole exact (ε = 0) trajectory —
+        // is batch-invariant; only the distance count may differ.
+        for seed in 0..3u64 {
+            let pts = gauss_mix(220, 2, 5, 0.05, seed + 40);
+            let m = VectorMetric::new(pts);
+            let init = init::uniform_init(m.len(), 5, seed);
+            let run = |batch: usize| {
+                trikmeds(
+                    &m,
+                    &TrikmedsOpts {
+                        init: TrikmedsInit::Given(init.clone()),
+                        batch,
+                        ..TrikmedsOpts::new(5)
+                    },
+                )
+            };
+            let seq = run(1);
+            for batch in [4usize, 16] {
+                let b = run(batch);
+                assert!(
+                    (b.loss - seq.loss).abs() < 1e-9,
+                    "seed {seed} batch {batch}: {} vs {}",
+                    b.loss,
+                    seq.loss
+                );
+                assert_eq!(b.medoids, seq.medoids, "seed {seed} batch {batch}");
+                assert_eq!(b.iterations, seq.iterations, "seed {seed} batch {batch}");
+            }
         }
     }
 

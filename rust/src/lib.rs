@@ -7,10 +7,12 @@
 //! against (exhaustive scan, RAND, TOPRANK, TOPRANK2, Park-Jun KMEDS) —
 //! over both vector data and shortest-path graph metrics.
 //!
-//! Architecture (see DESIGN.md): a Rust Layer-3 coordinator owning the
-//! adaptive bound-elimination loops; distance hot-spots available both as
-//! native Rust scans and as AOT-compiled JAX+Pallas HLO artifacts executed
-//! through the XLA PJRT runtime ([`runtime`]).
+//! Architecture (see DESIGN.md): one batched bound-elimination [`engine`]
+//! drives every adaptive algorithm, over a [`metric`] backend whose batched
+//! `many_to_all` pass is thread-parallel (cache-blocked multi-query scans
+//! on vectors, multi-source Dijkstra fan-out on graphs); distance hot-spots
+//! are also available as AOT-compiled JAX+Pallas HLO artifacts executed
+//! through the XLA PJRT runtime ([`runtime`], `--features xla`).
 //!
 //! ## Quickstart
 //!
@@ -30,6 +32,7 @@
 pub mod algo;
 pub mod cli;
 pub mod data;
+pub mod engine;
 pub mod graph;
 pub mod harness;
 pub mod kmedoids;

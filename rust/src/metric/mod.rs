@@ -63,6 +63,97 @@ pub trait MetricSpace {
         assert!(self.symmetric(), "asymmetric metric must override all_to_one");
         self.one_to_all(i, out)
     }
+
+    /// Batched compute: write distances from each `ids[q]` to every element
+    /// into the row `out[q*len()..(q+1)*len()]` (`out` is row-major,
+    /// `ids.len() × len()`).
+    ///
+    /// This is the engine's hot operation: one call computes a whole batch
+    /// of elements, which lets backends amortise work across queries
+    /// (cache-blocked multi-query scans on vectors, multi-source Dijkstra
+    /// fan-out on graphs) and parallelise across threads (see
+    /// [`MetricSpace::set_threads`]). The default is a sequential loop of
+    /// [`MetricSpace::one_to_all`] calls, so every metric gets batching for
+    /// free and `ids.len() == 1` is always equivalent to `one_to_all`.
+    fn many_to_all(&self, ids: &[usize], out: &mut [f64]) {
+        let n = self.len();
+        assert_eq!(out.len(), ids.len() * n, "out must be ids.len() × len()");
+        for (&i, row) in ids.iter().zip(out.chunks_mut(n.max(1))) {
+            self.one_to_all(i, row);
+        }
+    }
+
+    /// Batched in-distances: row `q` receives the distances from every
+    /// element *to* `ids[q]`. Mirrors [`MetricSpace::all_to_one`] the way
+    /// [`MetricSpace::many_to_all`] mirrors [`MetricSpace::one_to_all`].
+    ///
+    /// For symmetric spaces in- and out-distances coincide, so the default
+    /// forwards to [`MetricSpace::many_to_all`] — a backend that
+    /// parallelises out-distance batches automatically covers the anchor
+    /// passes (RAND, TOPRANK) too. Asymmetric spaces fall back to a loop
+    /// of [`MetricSpace::all_to_one`] (which they must override) unless
+    /// they override this as well (reverse-graph fan-out).
+    fn all_to_many(&self, ids: &[usize], out: &mut [f64]) {
+        if self.symmetric() {
+            self.many_to_all(ids, out);
+            return;
+        }
+        let n = self.len();
+        assert_eq!(out.len(), ids.len() * n, "out must be ids.len() × len()");
+        for (&i, row) in ids.iter().zip(out.chunks_mut(n.max(1))) {
+            self.all_to_one(i, row);
+        }
+    }
+
+    /// Parallelism hint for the batched operations: ask the backend to use
+    /// up to `threads` OS threads per `many_to_all` / `all_to_many` call.
+    ///
+    /// Default is a no-op — a metric with no parallel backend simply stays
+    /// sequential. Implementations use interior mutability (an atomic) so
+    /// the hint composes with the `&self` trait surface; `0` and `1` both
+    /// mean sequential.
+    fn set_threads(&self, _threads: usize) {}
+}
+
+/// Shared scaffold of the thread-parallel batched backends: split the
+/// query ids and the row-major output into per-thread contiguous chunks
+/// (disjoint regions — no synchronisation needed) and run `work` on each
+/// under `std::thread::scope`; `threads <= 1` runs `work` inline. `n` is
+/// the row width ([`MetricSpace::len`]).
+pub(crate) fn fan_out<F>(threads: usize, n: usize, ids: &[usize], out: &mut [f64], work: F)
+where
+    F: Fn(&[usize], &mut [f64]) + Sync,
+{
+    assert_eq!(out.len(), ids.len() * n, "out must be ids.len() × len()");
+    if ids.is_empty() || n == 0 {
+        return;
+    }
+    let t = threads.max(1).min(ids.len());
+    if t <= 1 {
+        work(ids, out);
+        return;
+    }
+    // Balanced split: t chunks whose sizes differ by at most one, so every
+    // requested thread gets work (ceil-division chunking can idle up to
+    // half the threads when ids.len() is just over a multiple of t).
+    let base = ids.len() / t;
+    let extra = ids.len() % t;
+    let work = &work; // shared by every spawned closure (F: Sync)
+    std::thread::scope(|scope| {
+        let mut ids_rest = ids;
+        let mut out_rest = out;
+        for c in 0..t {
+            let take = base + usize::from(c < extra);
+            let (id_chunk, ids_tail) = ids_rest.split_at(take);
+            ids_rest = ids_tail;
+            // mem::take moves the slice out so the split borrows the full
+            // original lifetime (a plain reborrow would not outlive the
+            // loop iteration, which the spawned thread requires).
+            let (out_chunk, out_tail) = std::mem::take(&mut out_rest).split_at_mut(take * n);
+            out_rest = out_tail;
+            scope.spawn(move || work(id_chunk, out_chunk));
+        }
+    });
 }
 
 /// Counters accumulated by [`Counted`].
@@ -71,7 +162,13 @@ pub struct Counts {
     /// Individual distance evaluations (a one-to-all pass adds `len()`).
     pub dists: u64,
     /// Number of one-to-all passes ("computed elements", the paper's n̂).
+    /// A batched pass over `B` elements adds `B`, so n̂ accounting is
+    /// identical between sequential and batched execution.
     pub one_to_all: u64,
+    /// Batched calls ([`MetricSpace::many_to_all`] /
+    /// [`MetricSpace::all_to_many`] invocations). `one_to_all / batches`
+    /// is the realised mean batch width.
+    pub batches: u64,
 }
 
 /// Wrapper that counts distance work done through it.
@@ -82,23 +179,34 @@ pub struct Counted<M: MetricSpace> {
     inner: M,
     dists: Cell<u64>,
     one_to_all: Cell<u64>,
+    batches: Cell<u64>,
 }
 
 impl<M: MetricSpace> Counted<M> {
     /// Wrap a metric with zeroed counters.
     pub fn new(inner: M) -> Self {
-        Counted { inner, dists: Cell::new(0), one_to_all: Cell::new(0) }
+        Counted {
+            inner,
+            dists: Cell::new(0),
+            one_to_all: Cell::new(0),
+            batches: Cell::new(0),
+        }
     }
 
     /// Snapshot of the counters.
     pub fn counts(&self) -> Counts {
-        Counts { dists: self.dists.get(), one_to_all: self.one_to_all.get() }
+        Counts {
+            dists: self.dists.get(),
+            one_to_all: self.one_to_all.get(),
+            batches: self.batches.get(),
+        }
     }
 
     /// Reset counters to zero.
     pub fn reset(&self) {
         self.dists.set(0);
         self.one_to_all.set(0);
+        self.batches.set(0);
     }
 
     /// Access the wrapped metric.
@@ -137,6 +245,26 @@ impl<M: MetricSpace> MetricSpace for Counted<M> {
         self.one_to_all.set(self.one_to_all.get() + 1);
         self.inner.all_to_one(i, out);
     }
+
+    fn many_to_all(&self, ids: &[usize], out: &mut [f64]) {
+        let k = ids.len() as u64;
+        self.dists.set(self.dists.get() + k * self.inner.len() as u64);
+        self.one_to_all.set(self.one_to_all.get() + k);
+        self.batches.set(self.batches.get() + 1);
+        self.inner.many_to_all(ids, out);
+    }
+
+    fn all_to_many(&self, ids: &[usize], out: &mut [f64]) {
+        let k = ids.len() as u64;
+        self.dists.set(self.dists.get() + k * self.inner.len() as u64);
+        self.one_to_all.set(self.one_to_all.get() + k);
+        self.batches.set(self.batches.get() + 1);
+        self.inner.all_to_many(ids, out);
+    }
+
+    fn set_threads(&self, threads: usize) {
+        self.inner.set_threads(threads);
+    }
 }
 
 /// Blanket impl so `&M` can be passed where a metric is expected.
@@ -155,6 +283,15 @@ impl<M: MetricSpace + ?Sized> MetricSpace for &M {
     }
     fn all_to_one(&self, i: usize, out: &mut [f64]) {
         (**self).all_to_one(i, out)
+    }
+    fn many_to_all(&self, ids: &[usize], out: &mut [f64]) {
+        (**self).many_to_all(ids, out)
+    }
+    fn all_to_many(&self, ids: &[usize], out: &mut [f64]) {
+        (**self).all_to_many(ids, out)
+    }
+    fn set_threads(&self, threads: usize) {
+        (**self).set_threads(threads)
     }
 }
 
@@ -197,6 +334,30 @@ mod tests {
         assert_eq!(c.one_to_all, 1);
         m.reset();
         assert_eq!(m.counts(), Counts::default());
+    }
+
+    #[test]
+    fn counted_tracks_batches() {
+        let m = Counted::new(Line(vec![0.0, 1.0, 3.0, 4.0]));
+        let mut out = vec![0.0; 8];
+        m.many_to_all(&[1, 3], &mut out);
+        m.all_to_many(&[0], &mut out[..4]);
+        let c = m.counts();
+        assert_eq!(c.one_to_all, 3);
+        assert_eq!(c.dists, 3 * 4);
+        assert_eq!(c.batches, 2);
+    }
+
+    #[test]
+    fn default_many_to_all_matches_one_to_all() {
+        let m = Line(vec![0.0, 2.0, 5.0]);
+        let mut batched = vec![0.0; 6];
+        m.many_to_all(&[2, 0], &mut batched);
+        let mut single = vec![0.0; 3];
+        m.one_to_all(2, &mut single);
+        assert_eq!(&batched[..3], single.as_slice());
+        m.one_to_all(0, &mut single);
+        assert_eq!(&batched[3..], single.as_slice());
     }
 
     #[test]

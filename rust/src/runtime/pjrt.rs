@@ -1,0 +1,110 @@
+//! The real XLA/PJRT runtime (compiled with `--features xla`): loads the
+//! AOT-compiled HLO-text artifacts and executes them on the hot path.
+//!
+//! The PJRT client is `Rc`-based (not `Send`); create one [`Runtime`] per
+//! thread. Dataset points are uploaded to a device buffer once and reused
+//! across calls (`execute_b`), so the steady-state per-call traffic is one
+//! query vector in and one distance vector out.
+
+use super::exec::{OneToAllExec, TrimedStepExec};
+use super::registry::Registry;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A PJRT CPU client plus a compiled-executable cache over an artifact
+/// registry.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    registry: Registry,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (containing `manifest.tsv`) and create
+    /// a PJRT CPU client.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let registry = Registry::load(&dir.join("manifest.tsv")).with_context(|| {
+            format!("loading artifact manifest from {dir:?} (run `make artifacts`)")
+        })?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            registry,
+            dir: dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Open `$TRIMED_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("TRIMED_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(Path::new(&dir))
+    }
+
+    /// The artifact registry.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// The PJRT client.
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self
+            .registry
+            .by_name(name)
+            .with_context(|| format!("unknown artifact {name:?}"))?;
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Typed one-to-all executor for `n` real points of dimension `d`
+    /// (picks the smallest artifact variant that fits and handles padding).
+    pub fn one_to_all(&self, n: usize, d: usize) -> Result<OneToAllExec> {
+        let info = self
+            .registry
+            .best_variant("one_to_all", n, d)
+            .with_context(|| format!("no one_to_all artifact fits n={n} d={d}"))?
+            .clone();
+        let exe = self.executable(&info.name)?;
+        Ok(OneToAllExec::new(self.client.clone(), exe, info, n))
+    }
+
+    /// Typed trimed-step executor (distances + sum + bound update).
+    pub fn trimed_step(&self, n: usize, d: usize) -> Result<TrimedStepExec> {
+        let info = self
+            .registry
+            .best_variant("trimed_step", n, d)
+            .with_context(|| format!("no trimed_step artifact fits n={n} d={d}"))?
+            .clone();
+        let exe = self.executable(&info.name)?;
+        Ok(TrimedStepExec::new(self.client.clone(), exe, info, n))
+    }
+}
+
+/// True if the default artifact directory exists (used by tests/benches to
+/// skip XLA paths gracefully when `make artifacts` has not run).
+pub fn artifacts_available() -> bool {
+    let dir = std::env::var("TRIMED_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    Path::new(&dir).join("manifest.tsv").exists()
+}

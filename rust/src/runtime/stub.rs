@@ -1,0 +1,145 @@
+//! Stand-in for the XLA/PJRT runtime, compiled when the `xla` cargo
+//! feature is off (the default — the `xla` bindings crate is not in the
+//! offline vendor set).
+//!
+//! Every constructor fails with a clear error and
+//! [`artifacts_available`] reports `false`, so callers that already skip
+//! gracefully when artifacts are missing (tests, benches, examples) keep
+//! working unchanged; only code that insists on the XLA path sees the
+//! error. The artifact [`Registry`](super::registry::Registry) itself is
+//! pure Rust and stays fully functional.
+//!
+//! API parity: method names and argument lists mirror `pjrt.rs` so the
+//! two builds stay drop-in for every current caller, with one documented
+//! divergence — [`Runtime::executable`] returns `Result<()>` here because
+//! the real return type (`Rc<xla::PjRtLoadedExecutable>`) cannot be named
+//! without the `xla` crate. Feature-portable code must therefore treat
+//! `executable` as a compile-and-cache trigger and discard its value
+//! (as `trimed artifacts` does); only xla-gated code may use the handle.
+//! Everything else (`client()` aside, which is inherently xla-only)
+//! matches signature-for-signature.
+
+use super::registry::{ArtifactInfo, Registry};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+const NO_XLA: &str = "this build has no XLA/PJRT runtime: rebuild with \
+                      `--features xla` and the vendored `xla` bindings crate \
+                      (see rust/Cargo.toml)";
+
+/// Stub runtime; every constructor fails.
+pub struct Runtime {
+    registry: Registry,
+}
+
+impl Runtime {
+    /// Always fails in stub builds.
+    pub fn open(_dir: &Path) -> Result<Self> {
+        bail!(NO_XLA)
+    }
+
+    /// Always fails in stub builds.
+    pub fn open_default() -> Result<Self> {
+        bail!(NO_XLA)
+    }
+
+    /// The artifact registry (unreachable: no constructor succeeds).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Always fails in stub builds. Note the divergence from the real
+    /// runtime's return type (see module docs): portable callers discard
+    /// the value.
+    pub fn executable(&self, _name: &str) -> Result<()> {
+        bail!(NO_XLA)
+    }
+
+    /// Always fails in stub builds.
+    pub fn one_to_all(&self, _n: usize, _d: usize) -> Result<OneToAllExec> {
+        bail!(NO_XLA)
+    }
+
+    /// Always fails in stub builds.
+    pub fn trimed_step(&self, _n: usize, _d: usize) -> Result<TrimedStepExec> {
+        bail!(NO_XLA)
+    }
+}
+
+/// Always false in stub builds, so XLA-dependent tests and benches skip.
+pub fn artifacts_available() -> bool {
+    false
+}
+
+/// Stub one-to-all executor (never constructed).
+pub struct OneToAllExec {
+    _private: (),
+}
+
+impl OneToAllExec {
+    /// Unreachable: stub executors are never constructed.
+    pub fn info(&self) -> &ArtifactInfo {
+        unreachable!("stub OneToAllExec cannot be constructed")
+    }
+
+    /// Number of real (unpadded) points.
+    pub fn n(&self) -> usize {
+        0
+    }
+
+    /// Always fails in stub builds.
+    pub fn load_points(&mut self, _flat: &[f32]) -> Result<()> {
+        bail!(NO_XLA)
+    }
+
+    /// Always fails in stub builds.
+    pub fn run(&self, _query: &[f32], _out: &mut [f64]) -> Result<f64> {
+        bail!(NO_XLA)
+    }
+}
+
+/// Result of one trimed step dispatch (shape mirrors the real runtime).
+pub struct StepOut {
+    /// Distances to the real points (f64, length n).
+    pub dists: Vec<f64>,
+    /// Pad-corrected distance sum of the computed element.
+    pub sum: f64,
+    /// Tightened lower bounds (f32, length n_pad).
+    pub lb: Vec<f32>,
+}
+
+/// Stub trimed-step executor (never constructed).
+pub struct TrimedStepExec {
+    _private: (),
+}
+
+impl TrimedStepExec {
+    /// Unreachable: stub executors are never constructed.
+    pub fn info(&self) -> &ArtifactInfo {
+        unreachable!("stub TrimedStepExec cannot be constructed")
+    }
+
+    /// Always fails in stub builds.
+    pub fn load_points(&mut self, _flat: &[f32]) -> Result<()> {
+        bail!(NO_XLA)
+    }
+
+    /// Always fails in stub builds.
+    pub fn step(&self, _query: &[f32], _lb: &[f32]) -> Result<StepOut> {
+        bail!(NO_XLA)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(!artifacts_available());
+        assert!(Runtime::open_default().is_err());
+        let err = Runtime::open(Path::new("artifacts")).err().expect("stub must fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--features xla"), "{msg}");
+    }
+}

@@ -1,0 +1,230 @@
+//! Engine-refactor guarantees:
+//!
+//! * **Exact-reproduction guard** — with `batch = 1` (and any thread
+//!   count) the engine-backed trimed is *bit-for-bit* identical to the
+//!   pre-refactor sequential implementation, which is kept here as a
+//!   frozen reference copy: same medoid, same computed count, identical
+//!   energies and lower-bound vectors.
+//! * **Batched soundness** — for `B ∈ {2, 8, 64}` and `threads ∈ {1, 4}`
+//!   the batched runs return the same medoid energy and sound lower
+//!   bounds, on uniform-cube vectors and on a directed
+//!   preferential-attachment graph (the quasi-metric bound family).
+
+use trimed::algo::{scan_medoid, trimed_with_opts, TrimedOpts};
+use trimed::data::synthetic::uniform_cube;
+use trimed::graph::generators::preferential_attachment;
+use trimed::graph::GraphMetric;
+use trimed::metric::{Counted, MetricSpace, VectorMetric};
+use trimed::rng::Rng;
+
+/// Frozen copy of the pre-engine sequential trimed (paper Alg. 1), exactly
+/// as the seed implemented it. Do not "improve" this: it is the bit-level
+/// reference the engine's `batch = 1` path is held to.
+fn reference_trimed<M: MetricSpace>(
+    metric: &M,
+    seed: u64,
+    eps: f64,
+    slack: f64,
+) -> (usize, f64, u64, Vec<f64>) {
+    let n = metric.len();
+    assert!(n > 0);
+    let symmetric = metric.symmetric();
+    let nf = n as f64;
+    let order: Vec<usize> = Rng::new(seed).permutation(n);
+
+    let mut lb = vec![0.0f64; n];
+    let mut best_idx = usize::MAX;
+    let mut best_sum = f64::INFINITY;
+    let mut computed: u64 = 0;
+    let mut d_out = vec![0.0f64; n];
+    let mut d_in = if symmetric { Vec::new() } else { vec![0.0f64; n] };
+
+    for &i in &order {
+        if lb[i] * (1.0 + eps) >= best_sum + slack {
+            continue;
+        }
+        metric.one_to_all(i, &mut d_out);
+        computed += 1;
+        let s_out: f64 = d_out.iter().sum();
+        lb[i] = s_out;
+        if s_out < best_sum {
+            best_sum = s_out;
+            best_idx = i;
+        }
+        if symmetric {
+            for (l, &d) in lb.iter_mut().zip(d_out.iter()) {
+                let b = (s_out - nf * d).abs();
+                if b > *l {
+                    *l = b;
+                }
+            }
+        } else {
+            metric.all_to_one(i, &mut d_in);
+            let s_in: f64 = d_in.iter().sum();
+            for ((l, &dout), &din) in lb.iter_mut().zip(d_out.iter()).zip(d_in.iter()) {
+                let b = (s_out - nf * dout).max(nf * din - s_in);
+                if b > *l {
+                    *l = b;
+                }
+            }
+        }
+    }
+    let energy = if n <= 1 { 0.0 } else { best_sum / (n - 1) as f64 };
+    (best_idx, energy, computed, lb)
+}
+
+fn assert_bit_identical<M: MetricSpace>(metric: &M, seed: u64, eps: f64, what: &str) {
+    let (ref_medoid, ref_energy, ref_computed, ref_lb) =
+        reference_trimed(metric, seed, eps, 0.0);
+    let r = trimed_with_opts(metric, &TrimedOpts { seed, eps, ..Default::default() });
+    assert_eq!(r.medoid, ref_medoid, "{what}: medoid diverged");
+    assert_eq!(r.computed, ref_computed, "{what}: computed-count diverged");
+    assert!(
+        r.energy == ref_energy,
+        "{what}: energy bits diverged: {} vs {}",
+        r.energy,
+        ref_energy
+    );
+    assert_eq!(r.lower_bounds.len(), ref_lb.len());
+    for (j, (&a, &b)) in r.lower_bounds.iter().zip(ref_lb.iter()).enumerate() {
+        assert!(a == b, "{what}: lower bound bits diverged at {j}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn guard_batch1_reproduces_sequential_on_vectors() {
+    for seed in 0..4u64 {
+        for d in [2usize, 3, 6] {
+            let pts = uniform_cube(500, d, seed * 101 + d as u64);
+            let m = VectorMetric::new(pts);
+            assert_bit_identical(&m, seed, 0.0, &format!("cube d={d} seed={seed}"));
+        }
+    }
+    // Relaxed runs share the same loop, so the guard covers eps too.
+    let m = VectorMetric::new(uniform_cube(800, 2, 99));
+    assert_bit_identical(&m, 5, 0.1, "cube eps=0.1");
+}
+
+#[test]
+fn guard_batch1_reproduces_sequential_on_directed_graph() {
+    for seed in 0..3u64 {
+        let g = preferential_attachment(220, 3, 0.6, seed + 7);
+        let gm = GraphMetric::new_directed(g);
+        assert_bit_identical(&gm, seed, 0.0, &format!("digraph seed={seed}"));
+    }
+}
+
+#[test]
+fn guard_batch1_identical_under_threads() {
+    // The threads hint must not change any result bits with batch = 1
+    // (each batch row is an independent scan).
+    let pts = uniform_cube(600, 3, 17);
+    let m = VectorMetric::new(pts);
+    let (ref_medoid, ref_energy, ref_computed, ref_lb) = reference_trimed(&m, 3, 0.0, 0.0);
+    for threads in [1usize, 4] {
+        let r = trimed_with_opts(&m, &TrimedOpts { seed: 3, threads, ..Default::default() });
+        assert_eq!(r.medoid, ref_medoid, "threads={threads}");
+        assert_eq!(r.computed, ref_computed, "threads={threads}");
+        assert!(r.energy == ref_energy, "threads={threads}");
+        assert!(r.lower_bounds.iter().zip(&ref_lb).all(|(a, b)| a == b), "threads={threads}");
+    }
+}
+
+fn true_sums<M: MetricSpace>(m: &M) -> Vec<f64> {
+    let n = m.len();
+    let mut row = vec![0.0; n];
+    (0..n)
+        .map(|j| {
+            m.one_to_all(j, &mut row);
+            row.iter().sum()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_batched_trimed_exact_and_sound_on_vectors() {
+    for seed in 0..3u64 {
+        let pts = uniform_cube(700, 3, seed * 13 + 1);
+        let m = VectorMetric::new(pts);
+        let s = scan_medoid(&m);
+        let sums = true_sums(&m);
+        let n = m.len();
+        for batch in [2usize, 8, 64] {
+            for threads in [1usize, 4] {
+                let cm = Counted::new(&m);
+                let r = trimed_with_opts(
+                    &cm,
+                    &TrimedOpts { seed, batch, threads, ..Default::default() },
+                );
+                assert!(
+                    (r.energy - s.energy).abs() < 1e-9
+                        && (s.energies[r.medoid] - s.energy).abs() < 1e-9,
+                    "seed={seed} B={batch} t={threads}: energy {} vs scan {}",
+                    r.energy,
+                    s.energy
+                );
+                assert_eq!(r.computed, cm.counts().one_to_all);
+                for j in 0..n {
+                    assert!(
+                        r.lower_bounds[j] <= sums[j] + 1e-7,
+                        "seed={seed} B={batch} t={threads}: bound {} > sum {} at {j}",
+                        r.lower_bounds[j],
+                        sums[j]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batched_trimed_exact_and_sound_on_directed_graph() {
+    let g = preferential_attachment(260, 3, 0.6, 11);
+    let gm = GraphMetric::new_directed(g);
+    assert!(!gm.symmetric());
+    let s = scan_medoid(&gm);
+    let sums = true_sums(&gm);
+    let n = gm.len();
+    for batch in [2usize, 8, 64] {
+        for threads in [1usize, 4] {
+            let r = trimed_with_opts(
+                &gm,
+                &TrimedOpts { seed: 2, batch, threads, ..Default::default() },
+            );
+            assert!(
+                (r.energy - s.energy).abs() < 1e-9
+                    && (s.energies[r.medoid] - s.energy).abs() < 1e-9,
+                "B={batch} t={threads}: energy {} vs scan {}",
+                r.energy,
+                s.energy
+            );
+            for j in 0..n {
+                assert!(
+                    r.lower_bounds[j] <= sums[j] + 1e-7,
+                    "B={batch} t={threads}: bound {} > sum {} at {j}",
+                    r.lower_bounds[j],
+                    sums[j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_overhead_stays_moderate() {
+    // The documented trade: B > 1 may compute extra elements (bounds are
+    // one round stale) but must stay within a small factor plus the
+    // unavoidable first blind round.
+    let pts = uniform_cube(4000, 3, 23);
+    let m = VectorMetric::new(pts);
+    let seq = trimed_with_opts(&m, &TrimedOpts { seed: 4, ..Default::default() });
+    for batch in [8usize, 64] {
+        let r = trimed_with_opts(&m, &TrimedOpts { seed: 4, batch, ..Default::default() });
+        assert!(
+            r.computed <= 2 * seq.computed + batch as u64,
+            "B={batch}: computed {} vs sequential {}",
+            r.computed,
+            seq.computed
+        );
+    }
+}

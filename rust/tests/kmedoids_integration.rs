@@ -25,7 +25,7 @@ fn prop_trikmeds0_equals_kmeds_everywhere() {
         let init = uniform_init(n, k, seed);
         let a = trikmeds(
             &m,
-            &TrikmedsOpts { k, init: TrikmedsInit::Given(init), eps: 0.0, max_iters: 100 },
+            &TrikmedsOpts { init: TrikmedsInit::Given(init), ..TrikmedsOpts::new(k) },
         );
         let b = kmeds(&m, &KmedsOpts { k, uniform_seed: Some(seed), max_iters: 100 });
         if (a.loss - b.loss).abs() > 1e-9 {
@@ -52,10 +52,9 @@ fn prop_internal_loss_matches_recomputation() {
         let r = trikmeds(
             &m,
             &TrikmedsOpts {
-                k,
                 init: TrikmedsInit::Uniform(rng.next_u64()),
                 eps: rng.f64() * 0.1,
-                max_iters: 100,
+                ..TrikmedsOpts::new(k)
             },
         );
         let l = recompute_loss(&m, &r.medoids, &r.assignments);
@@ -79,7 +78,7 @@ fn prop_assignments_near_optimal_under_eps() {
         let m = VectorMetric::new(pts);
         let r = trikmeds(
             &m,
-            &TrikmedsOpts { k, init: TrikmedsInit::Uniform(1), eps, max_iters: 100 },
+            &TrikmedsOpts { init: TrikmedsInit::Uniform(1), eps, ..TrikmedsOpts::new(k) },
         );
         if !r.converged {
             return Ok(()); // guarantee applies at the fixpoint
@@ -113,7 +112,7 @@ fn trikmeds_exact_on_graph_metric() {
     let init = uniform_init(n, 6, 3);
     let a = trikmeds(
         &gm,
-        &TrikmedsOpts { k: 6, init: TrikmedsInit::Given(init), eps: 0.0, max_iters: 50 },
+        &TrikmedsOpts { init: TrikmedsInit::Given(init), max_iters: 50, ..TrikmedsOpts::new(6) },
     );
     let b = kmeds(&gm, &KmedsOpts { k: 6, uniform_seed: Some(3), max_iters: 50 });
     assert!((a.loss - b.loss).abs() < 1e-9, "{} vs {}", a.loss, b.loss);
@@ -127,7 +126,7 @@ fn eps_sweep_monotone_loss_cost() {
         let m = Counted::new(VectorMetric::new(pts.clone()));
         let r = trikmeds(
             &m,
-            &TrikmedsOpts { k: 20, init: TrikmedsInit::Uniform(2), eps, max_iters: 100 },
+            &TrikmedsOpts { init: TrikmedsInit::Uniform(2), eps, ..TrikmedsOpts::new(20) },
         );
         (m.counts().dists, r.loss)
     };
