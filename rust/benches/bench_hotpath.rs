@@ -1,26 +1,32 @@
 //! Hot-path microbenchmarks (ours, not a paper artifact): the per-layer
-//! numbers behind EXPERIMENTS.md §Perf and the BENCH_PR1.json perf
+//! numbers behind EXPERIMENTS.md §Perf and the BENCH_PR*.json perf
 //! trajectory.
 //!
-//! * native one-to-all distance scan throughput (L3 hot loop) across d;
+//! * native one-to-all distance scan throughput (L3 hot loop) across
+//!   d ∈ {2, 10, 100}, through the dispatched SIMD kernel *and* through
+//!   the portable reference kernel — the pair of records is the
+//!   SIMD-vs-scalar comparison BENCH_PR2.json tracks, and the rows are
+//!   asserted bitwise-identical before timing (kernel equivalence);
 //! * batched many_to_all throughput across thread counts (the engine's
 //!   parallel backend);
 //! * XLA/PJRT one-to-all dispatch (the AOT JAX+Pallas kernel) across d;
 //! * Dijkstra one-to-all on a road network (graph hot loop), sequential
 //!   and fanned out across threads;
-//! * end-to-end trimed wall time: sequential vs batched engine rounds at
-//!   several thread counts (the acceptance workload: N=50k, d=3).
+//! * end-to-end trimed wall time: sequential vs fixed-batch vs adaptive
+//!   (`--batch auto`) engine rounds at several thread counts.
 //!
 //! Run: cargo bench --bench bench_hotpath
 //! Set TRIMED_BENCH_JSON=path to also write the records as JSON
-//! (BENCH_PR1.json schema).
+//! (BENCH_PR2.json schema). Set TRIMED_BENCH_N to shrink the point count
+//! (CI smoke runs use 4000; the default 50000 is the acceptance size).
 
 use trimed::algo::{trimed_medoid, trimed_with_opts, TrimedOpts};
+use trimed::data::simd::{kernel_name, squared_euclidean_portable};
 use trimed::data::synthetic::uniform_cube;
 use trimed::graph::dijkstra::dijkstra_all;
 use trimed::graph::generators::road_network;
-use trimed::harness::bench::{fmt_ns, time_block};
 use trimed::harness::available_threads;
+use trimed::harness::bench::{fmt_ns, time_block};
 use trimed::metric::{MetricSpace, VectorMetric, XlaVectorMetric};
 use trimed::runtime::{artifacts_available, Runtime};
 
@@ -33,16 +39,17 @@ struct Record {
     batch: usize,
     computed: u64,
     wall_ns: f64,
+    kernel: &'static str,
 }
 
-/// Serialise as `{"records": [...]}` — the shape BENCH_PR1.json's
+/// Serialise as `{"records": [...]}` — the shape BENCH_PR2.json's
 /// regeneration recipe commits verbatim.
 fn json(records: &[Record]) -> String {
     let mut s = String::from("{\"records\": [\n");
     for (i, r) in records.iter().enumerate() {
         s.push_str(&format!(
             "  {{\"name\": \"{}\", \"n\": {}, \"d\": {}, \"threads\": {}, \"batch\": {}, \
-             \"computed\": {}, \"wall_ns\": {:.0}}}{}\n",
+             \"computed\": {}, \"wall_ns\": {:.0}, \"kernel\": \"{}\"}}{}\n",
             r.name,
             r.n,
             r.d,
@@ -50,6 +57,7 @@ fn json(records: &[Record]) -> String {
             r.batch,
             r.computed,
             r.wall_ns,
+            r.kernel,
             if i + 1 < records.len() { "," } else { "" }
         ));
     }
@@ -57,21 +65,48 @@ fn json(records: &[Record]) -> String {
     s
 }
 
+/// One-to-all scan through the portable reference kernel (the scalar
+/// baseline the SIMD dispatch is measured against).
+fn one_to_all_portable(m: &VectorMetric, i: usize, out: &mut [f64]) {
+    let pts = m.points();
+    let d = pts.dim();
+    let q = pts.row(i).to_vec();
+    let flat = pts.flat();
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = squared_euclidean_portable(&q, &flat[j * d..(j + 1) * d]).sqrt();
+    }
+}
+
 fn main() {
-    let n = 50_000;
+    let n: usize = std::env::var("TRIMED_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or(50_000);
     let max_threads = available_threads();
     let mut records: Vec<Record> = Vec::new();
-    println!("== hot path microbenchmarks (N={n}, cores={max_threads}) ==\n");
+    println!(
+        "== hot path microbenchmarks (N={n}, cores={max_threads}, kernel={}) ==\n",
+        kernel_name()
+    );
 
-    // L3 native one-to-all scan.
-    for d in [2usize, 6, 50] {
+    // L3 native one-to-all scan: dispatched SIMD kernel vs the portable
+    // reference (identical rows by construction — asserted below).
+    for d in [2usize, 10, 100] {
         let pts = uniform_cube(n, d, 1);
         let m = VectorMetric::new(pts);
         let mut out = vec![0.0; n];
-        let stats = time_block(3, 20, || m.one_to_all(12345, &mut out));
+        let mut out_ref = vec![0.0; n];
+        let probe = 12_345 % n;
+        m.one_to_all(probe, &mut out);
+        one_to_all_portable(&m, probe, &mut out_ref);
+        assert_eq!(out, out_ref, "kernel-equivalence violated at d={d}");
+
+        let stats = time_block(3, 20, || m.one_to_all(probe, &mut out));
         let bytes = (n * d * 8) as f64;
         println!(
-            "native one_to_all d={d:<3}: {}  ({:.2} GB/s effective, {:.1} Mdist/s)",
+            "native one_to_all  d={d:<3} [{}]: {}  ({:.2} GB/s effective, {:.1} Mdist/s)",
+            kernel_name(),
             stats.summary(),
             bytes / stats.median_ns,
             n as f64 / stats.median_ns * 1e3
@@ -84,12 +119,31 @@ fn main() {
             batch: 1,
             computed: 1,
             wall_ns: stats.median_ns,
+            kernel: kernel_name(),
+        });
+
+        let stats_ref = time_block(3, 20, || one_to_all_portable(&m, probe, &mut out_ref));
+        println!(
+            "native one_to_all  d={d:<3} [portable]: {}  ({:.1} Mdist/s, {:.2}x of dispatched)",
+            stats_ref.summary(),
+            n as f64 / stats_ref.median_ns * 1e3,
+            stats_ref.median_ns / stats.median_ns
+        );
+        records.push(Record {
+            name: "one_to_all_portable",
+            n,
+            d,
+            threads: 1,
+            batch: 1,
+            computed: 1,
+            wall_ns: stats_ref.median_ns,
+            kernel: "portable",
         });
     }
 
     // Batched many_to_all: the engine's parallel backend.
     println!();
-    for d in [2usize, 6, 50] {
+    for d in [2usize, 10, 100] {
         let pts = uniform_cube(n, d, 1);
         let m = VectorMetric::new(pts);
         let batch = 64usize;
@@ -111,6 +165,7 @@ fn main() {
                 batch,
                 computed: batch as u64,
                 wall_ns: stats.median_ns,
+                kernel: kernel_name(),
             });
             if max_threads == 1 {
                 break;
@@ -122,7 +177,7 @@ fn main() {
     if artifacts_available() {
         let rt = Runtime::open_default().expect("runtime");
         for d in [2usize, 6, 50] {
-            let nx = 50_000usize; // fits the 65536 artifact
+            let nx = n.min(50_000); // fits the 65536 artifact
             let pts = uniform_cube(nx, d, 2);
             let xm = XlaVectorMetric::new(&rt, pts).expect("xla metric");
             let mut out = vec![0.0; nx];
@@ -139,7 +194,8 @@ fn main() {
 
     // Graph hot loop, sequential and fanned out.
     {
-        let sg = road_network(160, 160, 0.9, 3);
+        let side = ((n as f64).sqrt() as usize).clamp(40, 160);
+        let sg = road_network(side, side, 0.9, 3);
         let g = sg.graph;
         let nn = g.num_nodes();
         let mut out = vec![0.0; nn];
@@ -168,6 +224,7 @@ fn main() {
                 batch,
                 computed: batch as u64,
                 wall_ns: stats.median_ns,
+                kernel: "dijkstra",
             });
             if max_threads == 1 {
                 break;
@@ -175,16 +232,16 @@ fn main() {
         }
     }
 
-    // End-to-end trimed: sequential vs the batched engine (the acceptance
-    // workload `medoid --n 50000 --d 3`).
+    // End-to-end trimed: sequential vs the fixed-batch engine vs the
+    // adaptive schedule (the acceptance workload `medoid --n 50000 --d 3`).
     println!();
     {
         let pts = uniform_cube(n, 3, 5);
-        let m = VectorMetric::new(pts.clone());
+        let m = VectorMetric::new(pts);
         let seq = trimed_medoid(&m, 9);
         let stats = time_block(1, 5, || trimed_medoid(&m, 9));
         println!(
-            "trimed native N={n} d=3 B=1   t=1: {} per medoid (computed {})",
+            "trimed native N={n} d=3 B=1    t=1: {} per medoid (computed {})",
             fmt_ns(stats.median_ns),
             seq.computed
         );
@@ -196,6 +253,7 @@ fn main() {
             batch: 1,
             computed: seq.computed,
             wall_ns: stats.median_ns,
+            kernel: kernel_name(),
         });
         // Oversubscribing cores is fine — the acceptance point (t=8) stays
         // comparable across machines.
@@ -205,7 +263,7 @@ fn main() {
             let r = trimed_with_opts(&m, &opts);
             let stats = time_block(1, 5, || trimed_with_opts(&m, &opts));
             println!(
-                "trimed native N={n} d=3 B={batch}  t={threads}: {} per medoid (computed {}, {:.2}x of sequential n̂)",
+                "trimed native N={n} d=3 B={batch}   t={threads}: {} per medoid (computed {}, {:.2}x of sequential n̂)",
                 fmt_ns(stats.median_ns),
                 r.computed,
                 r.computed as f64 / seq.computed as f64
@@ -218,6 +276,35 @@ fn main() {
                 batch,
                 computed: r.computed,
                 wall_ns: stats.median_ns,
+                kernel: kernel_name(),
+            });
+        }
+        // Adaptive schedule: full width without the blind first round.
+        for threads in [1usize, 8] {
+            let opts = TrimedOpts {
+                seed: 9,
+                batch: 64,
+                batch_auto: true,
+                threads,
+                ..Default::default()
+            };
+            let r = trimed_with_opts(&m, &opts);
+            let stats = time_block(1, 5, || trimed_with_opts(&m, &opts));
+            println!(
+                "trimed native N={n} d=3 B=auto t={threads}: {} per medoid (computed {}, {:.2}x of sequential n̂)",
+                fmt_ns(stats.median_ns),
+                r.computed,
+                r.computed as f64 / seq.computed as f64
+            );
+            records.push(Record {
+                name: "trimed_auto",
+                n,
+                d: 3,
+                threads,
+                batch: 64,
+                computed: r.computed,
+                wall_ns: stats.median_ns,
+                kernel: kernel_name(),
             });
         }
         if artifacts_available() {
@@ -227,11 +314,11 @@ fn main() {
             let stats = time_block(1, 3, || {
                 trimed_with_opts(&xm, &TrimedOpts { seed: 9, slack: 1e-4 * n as f64, ..Default::default() })
             });
-            println!("trimed xla    N={n} d=2  : {} per full medoid search", fmt_ns(stats.median_ns));
+            println!("trimed xla    N={n} d=2   : {} per full medoid search", fmt_ns(stats.median_ns));
         }
     }
 
-    println!("\nBENCH_PR1 records:\n{}", json(&records));
+    println!("\nBENCH_PR2 records:\n{}", json(&records));
     if let Ok(path) = std::env::var("TRIMED_BENCH_JSON") {
         std::fs::write(&path, json(&records)).expect("write TRIMED_BENCH_JSON");
         println!("wrote {path}");

@@ -33,6 +33,13 @@ pub struct TopRankOpts {
     /// One-to-all passes per batched backend call (anchor rounds and the
     /// survivors' exact pass); results are identical for every value.
     pub batch: usize,
+    /// Accepted for configuration parity with the engine-backed
+    /// algorithms (`--batch auto` plumbs through every opt struct), but a
+    /// no-op here: the anchor and exact passes compute *every* selected
+    /// element regardless of batching, so there is no blind-round waste
+    /// for an adaptive schedule to save — the fixed `batch` width is
+    /// used as-is.
+    pub batch_auto: bool,
     /// Parallelism hint forwarded to the metric backend before the run;
     /// `0` leaves the backend's current setting untouched.
     pub threads: usize,
@@ -40,7 +47,15 @@ pub struct TopRankOpts {
 
 impl Default for TopRankOpts {
     fn default() -> Self {
-        TopRankOpts { alpha_prime: 1.0, q_scale: 1.0, k: 1, seed: 0, batch: 1, threads: 0 }
+        TopRankOpts {
+            alpha_prime: 1.0,
+            q_scale: 1.0,
+            k: 1,
+            seed: 0,
+            batch: 1,
+            batch_auto: false,
+            threads: 0,
+        }
     }
 }
 

@@ -52,7 +52,14 @@ pub struct TrimedOpts {
     /// Candidates computed per engine round. `1` (the default) is the
     /// paper's sequential Algorithm 1, reproduced bit-for-bit; larger
     /// batches trade a few extra computed elements for parallel speedup.
+    /// With [`TrimedOpts::batch_auto`] this is the maximum width the
+    /// adaptive schedule grows toward.
     pub batch: usize,
+    /// Adaptive batch schedule (`--batch auto`): the engine starts each
+    /// run at width 1 and doubles toward `batch` as rounds survive,
+    /// killing the fixed-width blind first round on small N while still
+    /// reaching full parallel width at scale.
+    pub batch_auto: bool,
     /// Parallelism hint forwarded to the metric backend
     /// ([`MetricSpace::set_threads`]) before the run; `0` (the default)
     /// leaves the backend's current setting untouched.
@@ -68,6 +75,7 @@ impl Default for TrimedOpts {
             record_trace: false,
             slack: 0.0,
             batch: 1,
+            batch_auto: false,
             threads: 0,
         }
     }
@@ -122,6 +130,7 @@ pub fn trimed_with_opts<M: MetricSpace>(metric: &M, opts: &TrimedOpts) -> Trimed
         &mut rule,
         &EngineOpts {
             batch: opts.batch,
+            batch_auto: opts.batch_auto,
             eps: opts.eps,
             slack: opts.slack,
             record_trace: opts.record_trace,
@@ -186,6 +195,7 @@ pub fn trimed_topk_with_opts<M: MetricSpace>(
         &mut rule,
         &EngineOpts {
             batch: opts.batch,
+            batch_auto: opts.batch_auto,
             eps: opts.eps,
             slack: opts.slack,
             record_trace: false,
@@ -395,6 +405,55 @@ mod tests {
                 &TrimedOpts { seed: 8, batch, ..Default::default() },
             );
             assert_eq!(r.elements, seq.elements, "batch={batch}");
+        }
+    }
+
+    #[test]
+    fn adaptive_batch_finds_the_same_medoid() {
+        let pts = uniform_cube(900, 3, 51);
+        let m = VectorMetric::new(pts);
+        let exact = trimed_medoid(&m, 6);
+        let r = trimed_with_opts(
+            &m,
+            &TrimedOpts { seed: 6, batch: 64, batch_auto: true, ..Default::default() },
+        );
+        assert!((r.energy - exact.energy).abs() < 1e-12);
+        // The schedule's overhead stays within the documented bound.
+        assert!(
+            r.computed <= 2 * exact.computed + 64,
+            "adaptive computed {} vs sequential {}",
+            r.computed,
+            exact.computed
+        );
+    }
+
+    #[test]
+    fn batched_topk_matches_sequential_with_duplicates() {
+        // Duplicate points give exactly tied sums; the deterministic
+        // (sum, visit-order) tie-break must make every batch width —
+        // fixed or adaptive — return the identical ranked list.
+        let mut data = Vec::new();
+        for _ in 0..10 {
+            data.extend_from_slice(&[1.0, 1.0]);
+        }
+        for _ in 0..6 {
+            data.extend_from_slice(&[2.0, 2.0]);
+        }
+        data.extend_from_slice(&[5.0, 5.0, 0.0, 3.0]);
+        let m = VectorMetric::new(Points::new(2, data));
+        for seed in [0u64, 8, 21] {
+            let seq = trimed_topk(&m, 5, seed);
+            for batch in [2usize, 4, 32] {
+                for auto in [false, true] {
+                    let r = trimed_topk_with_opts(
+                        &m,
+                        5,
+                        &TrimedOpts { seed, batch, batch_auto: auto, ..Default::default() },
+                    );
+                    assert_eq!(r.elements, seq.elements, "seed={seed} batch={batch} auto={auto}");
+                    assert_eq!(r.energies, seq.energies, "seed={seed} batch={batch} auto={auto}");
+                }
+            }
         }
     }
 

@@ -1,6 +1,8 @@
-//! Vector datasets: storage, synthetic generators, TSV persistence.
+//! Vector datasets: storage, synthetic generators, TSV persistence, and
+//! the runtime-dispatched SIMD distance kernel ([`simd`]).
 
 pub mod io;
+pub mod simd;
 pub mod synthetic;
 
 /// A dense row-major set of `n` points in R^d.
@@ -100,25 +102,16 @@ pub fn euclidean(a: &[f64], b: &[f64]) -> f64 {
 }
 
 /// Squared Euclidean distance (the hot-loop primitive; see §Perf).
+///
+/// Delegates to the runtime-dispatched SIMD kernel layer ([`simd`]):
+/// AVX2+FMA on x86_64, NEON on aarch64, a bitwise-identical portable
+/// fallback otherwise. This is the *single* distance primitive — point
+/// queries, the sequential one-to-all scan and the cache-blocked batched
+/// scan all reach it — so every distance path agrees bitwise on every
+/// platform (the engine's batch-invariance guarantees build on this).
 #[inline]
 pub fn squared_euclidean(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    // Chunked accumulation: lets LLVM vectorise without bounds checks.
-    let mut acc = 0.0;
-    let mut ai = a.chunks_exact(4);
-    let mut bi = b.chunks_exact(4);
-    for (ca, cb) in (&mut ai).zip(&mut bi) {
-        let d0 = ca[0] - cb[0];
-        let d1 = ca[1] - cb[1];
-        let d2 = ca[2] - cb[2];
-        let d3 = ca[3] - cb[3];
-        acc += d0 * d0 + d1 * d1 + d2 * d2 + d3 * d3;
-    }
-    for (x, y) in ai.remainder().iter().zip(bi.remainder()) {
-        let d = x - y;
-        acc += d * d;
-    }
-    acc
+    simd::squared_euclidean(a, b)
 }
 
 #[cfg(test)]

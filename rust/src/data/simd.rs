@@ -1,0 +1,334 @@
+//! Runtime-dispatched SIMD kernels for the squared-Euclidean distance —
+//! the single scalar primitive every vector-distance path in the library
+//! feeds through (see DESIGN.md §SIMD kernel layer).
+//!
+//! ## The canonical kernel contract
+//!
+//! Every implementation computes the same *fixed* floating-point
+//! expression: four independent FMA accumulator lanes over the leading
+//! `4·⌊d/4⌋` components,
+//!
+//! ```text
+//!   lane_l ← fma(a[4c+l] − b[4c+l], a[4c+l] − b[4c+l], lane_l)
+//! ```
+//!
+//! a scalar FMA chain over the `d mod 4` tail elements, and the reduction
+//! `((l0 + l2) + (l1 + l3)) + tail`. Subtraction, fused multiply-add and
+//! addition are all IEEE-754 correctly-rounded f64 operations, so the
+//! AVX2, NEON and portable kernels produce **bitwise identical** results:
+//! which unit executed the kernel is unobservable from the output. That
+//! keeps the engine's "batch = 1 reproduces Algorithm 1 bit-for-bit"
+//! guarantee intact across machines and across call sites — point
+//! queries, the sequential one-to-all scan and the cache-blocked batched
+//! scan all reach this one primitive — and is pinned by the
+//! kernel-equivalence tests here and in `metric::vector` against
+//! [`squared_euclidean_portable`].
+//!
+//! Dispatch happens once per process: AVX2+FMA on x86_64, NEON on
+//! aarch64, the portable kernel elsewhere or when the CPU lacks the
+//! features. [`kernel_name`] reports the selection for logs and benches.
+//!
+//! Note the portable kernel uses [`f64::mul_add`], which is a *fused*
+//! (single-rounding) operation everywhere — hardware FMA where available,
+//! libm `fma` otherwise — which is what makes cross-implementation bit
+//! equality possible at all. On CPUs without hardware FMA the libm path
+//! is slow, but every target this library is built for in practice
+//! (x86_64 with AVX2, aarch64) takes a hardware path.
+
+use std::sync::OnceLock;
+
+/// Signature shared by all kernel implementations. `unsafe` because the
+/// SIMD variants require their target feature; the dispatcher only
+/// selects them after a runtime CPU-feature check.
+type KernelFn = unsafe fn(&[f64], &[f64]) -> f64;
+
+/// Row-scan form: distances (with `sqrt`) from one query to every row of
+/// a row-major block. Each implementation loops *inside* its
+/// target-feature context so the kernel inlines into the loop — the
+/// dispatch cost is one indirect call per block, not per row.
+/// SAFETY contract: `rows.len() == out.len() * q.len()`, plus the
+/// implementation's CPU features.
+type RowsFn = unsafe fn(&[f64], &[f64], &mut [f64]);
+
+struct Selected {
+    kernel: KernelFn,
+    rows: RowsFn,
+    name: &'static str,
+}
+
+static SELECTED: OnceLock<Selected> = OnceLock::new();
+
+#[allow(unreachable_code)] // arch blocks return early where they apply
+fn selected() -> &'static Selected {
+    SELECTED.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return Selected {
+                    kernel: avx2::squared_euclidean,
+                    rows: avx2::euclidean_rows,
+                    name: "avx2+fma",
+                };
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Selected {
+                    kernel: neon::squared_euclidean,
+                    rows: neon::euclidean_rows,
+                    name: "neon",
+                };
+            }
+        }
+        Selected { kernel: portable_kernel, rows: portable_rows, name: "portable" }
+    })
+}
+
+/// Squared Euclidean distance through the dispatched kernel.
+///
+/// Panics if the slices differ in length (the SIMD kernels read both
+/// slices up to `a.len()`).
+#[inline]
+pub fn squared_euclidean(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "kernel inputs must have equal length");
+    let sel = selected();
+    // SAFETY: `sel.kernel` was chosen after verifying the CPU features it
+    // requires (or is the portable kernel, which needs none), and the
+    // length equality the kernels rely on was just asserted.
+    unsafe { (sel.kernel)(a, b) }
+}
+
+/// Name of the kernel the dispatcher selected (`avx2+fma`, `neon`,
+/// `portable`) — for logs and bench records.
+pub fn kernel_name() -> &'static str {
+    selected().name
+}
+
+/// Euclidean distances from `q` to every `q.len()`-wide row of the
+/// row-major `rows` block: `out[r] = sqrt(kernel(q, rows[r]))`.
+///
+/// This is the scan-loop entry point: the dispatch (atomic load,
+/// indirect call, length check) happens *once* per block and the row
+/// loop runs inside the selected implementation's target-feature
+/// context, where the kernel inlines — important at small d, where a
+/// per-pair dispatch would rival the kernel itself. Rows are bitwise
+/// identical to per-pair [`squared_euclidean`]`.sqrt()` calls (same
+/// kernel, same per-row order).
+pub fn euclidean_rows(q: &[f64], rows: &[f64], out: &mut [f64]) {
+    assert_eq!(rows.len(), out.len() * q.len(), "rows must be out.len() × q.len()");
+    let sel = selected();
+    // SAFETY: CPU features were verified when the implementation was
+    // selected, and the slice-shape contract was just asserted.
+    unsafe { (sel.rows)(q, rows, out) }
+}
+
+/// The portable reference kernel: the canonical expression in scalar
+/// code. Public so tests and benches can hold the dispatched kernel to
+/// it — they must agree **bitwise** on any input.
+pub fn squared_euclidean_portable(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let base = c * 4;
+        for (lane, slot) in acc.iter_mut().enumerate() {
+            let d = a[base + lane] - b[base + lane];
+            *slot = d.mul_add(d, *slot);
+        }
+    }
+    let mut tail = 0.0f64;
+    for i in chunks * 4..a.len() {
+        let d = a[i] - b[i];
+        tail = d.mul_add(d, tail);
+    }
+    ((acc[0] + acc[2]) + (acc[1] + acc[3])) + tail
+}
+
+/// `KernelFn`-shaped wrapper for the dispatch table (which stores
+/// `unsafe fn` so it can also hold the target-feature kernels).
+unsafe fn portable_kernel(a: &[f64], b: &[f64]) -> f64 {
+    squared_euclidean_portable(a, b)
+}
+
+/// Portable row scan (see [`RowsFn`]).
+unsafe fn portable_rows(q: &[f64], rows: &[f64], out: &mut [f64]) {
+    let d = q.len();
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = squared_euclidean_portable(q, &rows[j * d..(j + 1) * d]).sqrt();
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Canonical kernel on AVX2+FMA: the four accumulator lanes live in
+    /// one 256-bit register; the reduction extracts the two halves so the
+    /// add tree is exactly `((l0 + l2) + (l1 + l3)) + tail`.
+    ///
+    /// SAFETY: caller must ensure AVX2 and FMA are available and
+    /// `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn squared_euclidean(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let va = _mm256_loadu_pd(ap.add(c * 4));
+            let vb = _mm256_loadu_pd(bp.add(c * 4));
+            let d = _mm256_sub_pd(va, vb);
+            acc = _mm256_fmadd_pd(d, d, acc);
+        }
+        let lo = _mm256_castpd256_pd128(acc); // [l0, l1]
+        let hi = _mm256_extractf128_pd::<1>(acc); // [l2, l3]
+        let pair = _mm_add_pd(lo, hi); // [l0+l2, l1+l3]
+        let upper = _mm_unpackhi_pd(pair, pair); // [l1+l3, l1+l3]
+        let head = _mm_cvtsd_f64(_mm_add_sd(pair, upper)); // (l0+l2)+(l1+l3)
+        let mut tail = 0.0f64;
+        for i in chunks * 4..n {
+            let d = *ap.add(i) - *bp.add(i);
+            tail = d.mul_add(d, tail);
+        }
+        head + tail
+    }
+
+    /// Row scan inside the AVX2+FMA context so the kernel inlines into
+    /// the loop (see `RowsFn`). SAFETY: as for the kernel, plus
+    /// `rows.len() == out.len() * q.len()`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn euclidean_rows(q: &[f64], rows: &[f64], out: &mut [f64]) {
+        let d = q.len();
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = squared_euclidean(q, &rows[j * d..(j + 1) * d]).sqrt();
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Canonical kernel on NEON: f64x2 registers, so lanes {0,1} and
+    /// {2,3} live in two accumulators; the reduction adds them pairwise
+    /// into `[l0+l2, l1+l3]` and then lane 0 + lane 1 — the same add tree
+    /// as the portable and AVX2 kernels.
+    ///
+    /// SAFETY: caller must ensure NEON is available and
+    /// `a.len() == b.len()`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn squared_euclidean(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 4;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        for c in 0..chunks {
+            let base = c * 4;
+            let d01 = vsubq_f64(vld1q_f64(ap.add(base)), vld1q_f64(bp.add(base)));
+            let d23 = vsubq_f64(vld1q_f64(ap.add(base + 2)), vld1q_f64(bp.add(base + 2)));
+            acc01 = vfmaq_f64(acc01, d01, d01);
+            acc23 = vfmaq_f64(acc23, d23, d23);
+        }
+        let pair = vaddq_f64(acc01, acc23); // [l0+l2, l1+l3]
+        let head = vgetq_lane_f64::<0>(pair) + vgetq_lane_f64::<1>(pair);
+        let mut tail = 0.0f64;
+        for i in chunks * 4..n {
+            let d = *ap.add(i) - *bp.add(i);
+            tail = d.mul_add(d, tail);
+        }
+        head + tail
+    }
+
+    /// Row scan inside the NEON context so the kernel inlines into the
+    /// loop (see `RowsFn`). SAFETY: as for the kernel, plus
+    /// `rows.len() == out.len() * q.len()`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn euclidean_rows(q: &[f64], rows: &[f64], out: &mut [f64]) {
+        let d = q.len();
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = squared_euclidean(q, &rows[j * d..(j + 1) * d]).sqrt();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(d: usize) -> (Vec<f64>, Vec<f64>) {
+        let a: Vec<f64> = (0..d).map(|i| (i as f64 * 0.7).sin() * 3.0).collect();
+        let b: Vec<f64> = (0..d).map(|i| (i as f64 * 1.3).cos() * 2.0).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn dispatched_matches_portable_bitwise() {
+        // Lengths cover empty, pure-tail, exact-chunk and chunk+tail
+        // shapes, plus the dimensionalities the benches exercise.
+        for d in [0usize, 1, 2, 3, 4, 5, 7, 8, 10, 16, 100, 101, 784] {
+            let (a, b) = vecs(d);
+            let x = squared_euclidean(&a, &b);
+            let y = squared_euclidean_portable(&a, &b);
+            assert!(x == y, "d={d} kernel={}: {x} vs portable {y}", kernel_name());
+        }
+    }
+
+    #[test]
+    fn matches_naive_within_tolerance() {
+        for d in [1usize, 3, 4, 5, 8, 17, 64] {
+            let (a, b) = vecs(d);
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            let got = squared_euclidean(&a, &b);
+            assert!(
+                (got - naive).abs() <= 1e-12 * naive.max(1.0),
+                "d={d}: {got} vs naive {naive}"
+            );
+        }
+    }
+
+    #[test]
+    fn euclidean_rows_matches_per_pair_calls() {
+        for d in [1usize, 2, 3, 4, 7, 10] {
+            let (q, _) = vecs(d);
+            let n = 9;
+            let rows: Vec<f64> =
+                (0..n * d).map(|i| ((i * 37 % 101) as f64) * 0.13 - 5.0).collect();
+            let mut out = vec![0.0; n];
+            euclidean_rows(&q, &rows, &mut out);
+            for j in 0..n {
+                let expect = squared_euclidean(&q, &rows[j * d..(j + 1) * d]).sqrt();
+                assert!(out[j] == expect, "d={d} j={j}: {} vs {expect}", out[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_for_identical_inputs_and_named_kernel() {
+        let (a, _) = vecs(9);
+        assert_eq!(squared_euclidean(&a, &a), 0.0);
+        assert!(["avx2+fma", "neon", "portable"].contains(&kernel_name()));
+    }
+
+    #[test]
+    fn large_magnitude_inputs_agree_bitwise() {
+        let a: Vec<f64> = (0..13).map(|i| 1e12 + i as f64 * 3.5e5).collect();
+        let b: Vec<f64> = (0..13).map(|i| -1e12 + i as f64 * 1.1e5).collect();
+        let x = squared_euclidean(&a, &b);
+        assert!(x.is_finite());
+        assert!(x == squared_euclidean_portable(&a, &b));
+    }
+
+    #[test]
+    #[should_panic(expected = "equal length")]
+    fn length_mismatch_panics() {
+        let _ = squared_euclidean(&[1.0, 2.0], &[1.0]);
+    }
+}

@@ -22,6 +22,22 @@
 //!   few extra elements (bounds inside a round are one round stale) in
 //!   exchange for near-linear wall-clock speedup on a threaded backend.
 //!
+//! With [`EngineOpts::batch_auto`] the round width follows an **adaptive
+//! schedule**: it starts at 1 — so the very first round establishes a
+//! threshold instead of blindly computing a full batch — and doubles
+//! every round up to `batch`. On small inputs (or subset universes like
+//! trikmeds clusters) this removes the fixed-width blind-round overhead;
+//! at scale it reaches full parallel width within a handful of rounds.
+//!
+//! Float hygiene: a computed element's bound is its *exact* sum. The
+//! propagation pass therefore skips computed elements — mathematically
+//! `|S(i) − N·d(i,j)| ≤ S(j)` so the skip changes nothing, but in floats
+//! the left side can exceed the rounded `S(j)` by an ulp, and without the
+//! skip an exact bound could be raised above its own sum (breaking the
+//! soundness of the returned bounds at adversarial coordinate scales).
+//! Selection is unaffected either way: each candidate is bound-tested
+//! once, at its visit, before it is ever computed.
+//!
 //! Directed (quasi-metric) spaces use the one-sided bounds of the seed
 //! implementation: a computed element also does a reverse pass, giving
 //! `S_out(j) ≥ S_out(i) − N·d(i,j)` and `S_out(j) ≥ N·d(j,i) − S_in(i)`.
@@ -38,7 +54,16 @@ use crate::metric::MetricSpace;
 #[derive(Clone, Debug)]
 pub struct EngineOpts {
     /// Candidates computed per round (1 = the paper's sequential loop).
+    /// With [`EngineOpts::batch_auto`] this is the *maximum* width the
+    /// adaptive schedule grows toward.
     pub batch: usize,
+    /// Adaptive batch schedule: start each run at width 1 and double the
+    /// round width as rounds survive, up to `batch`. Kills the
+    /// first-round blind-compute overhead of a fixed width on small
+    /// universes while reaching full parallel width within
+    /// `log2(batch)` rounds. `batch_auto` with `batch = 1` is exactly
+    /// the sequential loop.
+    pub batch_auto: bool,
     /// Relaxation factor on the bound test: a candidate is computed only if
     /// `lb·(1+eps) < threshold` (paper §4; 0 = exact).
     pub eps: f64,
@@ -52,7 +77,7 @@ pub struct EngineOpts {
 
 impl Default for EngineOpts {
     fn default() -> Self {
-        EngineOpts { batch: 1, eps: 0.0, slack: 0.0, record_trace: false }
+        EngineOpts { batch: 1, batch_auto: false, eps: 0.0, slack: 0.0, record_trace: false }
     }
 }
 
@@ -88,26 +113,34 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
     // Clamp to the visit count: a batch can never exceed the candidates
     // left, and the clamp keeps a huge user-supplied --batch from sizing
     // the round buffers at batch × n.
-    let b = opts.batch.max(1).min(order.len().max(1));
+    let b_max = opts.batch.max(1).min(order.len().max(1));
+    // Adaptive schedule: start at 1 so round 1 establishes a threshold,
+    // then double toward b_max as rounds survive. Buffers grow lazily
+    // with the width, so small universes never allocate b_max × n.
+    let mut b_cur = if opts.batch_auto { 1 } else { b_max };
 
     let mut computed = 0u64;
     let mut rounds = 0u64;
     let mut trace = opts.record_trace.then(Vec::new);
 
-    let mut d_out = vec![0.0f64; b * n];
-    let mut d_in = if symmetric { Vec::new() } else { vec![0.0f64; b * n] };
-    let mut sums_out = vec![0.0f64; b];
-    let mut sums_in = vec![0.0f64; b];
-    let mut batch: Vec<(usize, usize)> = Vec::with_capacity(b); // (visit pos, item)
-    let mut ids: Vec<usize> = Vec::with_capacity(b);
+    let mut d_out: Vec<f64> = Vec::new();
+    let mut d_in: Vec<f64> = Vec::new();
+    let mut sums_out = vec![0.0f64; b_max];
+    let mut sums_in = vec![0.0f64; b_max];
+    let mut batch: Vec<(usize, usize)> = Vec::with_capacity(b_cur); // (visit pos, item)
+    let mut ids: Vec<usize> = Vec::with_capacity(b_cur);
+    // Items whose bound is already their exact sum (computed this run).
+    // The propagation pass skips them — see the module docs (an ulp of
+    // rounding in |S(i) − N·d| must not raise an exact bound).
+    let mut tight = vec![false; n];
 
     let mut cursor = 0usize;
     while cursor < order.len() {
-        // Select up to `b` survivors against the current bounds (paper
-        // line 4, with the §4 relaxation and the f32-backend slack).
+        // Select up to `b_cur` survivors against the current bounds
+        // (paper line 4, with the §4 relaxation and the backend slack).
         batch.clear();
         ids.clear();
-        while cursor < order.len() && batch.len() < b {
+        while cursor < order.len() && batch.len() < b_cur {
             let i = order[cursor];
             let pos = cursor;
             cursor += 1;
@@ -121,6 +154,12 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
             break; // order exhausted with nothing left to compute
         }
         let k = batch.len();
+        if d_out.len() < k * n {
+            d_out.resize(k * n, 0.0);
+        }
+        if !symmetric && d_in.len() < k * n {
+            d_in.resize(k * n, 0.0);
+        }
 
         // Compute the round in one batched call (lines 5-8).
         space.compute_batch(&ids, &mut d_out[..k * n]);
@@ -135,7 +174,8 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
             let row = &d_out[q * n..(q + 1) * n];
             let s_out: f64 = row.iter().sum();
             sums_out[q] = s_out;
-            lb[i] = s_out; // tight
+            lb[i] = s_out; // exact from here on
+            tight[i] = true;
             rule.observe(i, s_out, row);
             if !symmetric {
                 sums_in[q] = d_in[q * n..(q + 1) * n].iter().sum();
@@ -150,14 +190,19 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
         // the whole round. Row-major streaming over d_out keeps the pass
         // cache-friendly at any batch width, and the q-then-j order is a
         // left fold of maxes — bitwise identical to folding per j — so
-        // k = 1 reproduces the sequential update exactly; tight bounds of
-        // computed items are never raised because the summed triangle
-        // inequality is sound.
+        // k = 1 reproduces the sequential update exactly. Computed items
+        // are skipped: their bounds are exact, and float rounding in the
+        // propagated bound could otherwise raise one past its own sum.
         if symmetric {
             for q in 0..k {
                 let s_out = sums_out[q];
                 let row = &d_out[q * n..(q + 1) * n];
-                for (l, &d) in lb.iter_mut().zip(row.iter()) {
+                for ((l, &d), &is_tight) in
+                    lb.iter_mut().zip(row.iter()).zip(tight.iter())
+                {
+                    if is_tight {
+                        continue;
+                    }
                     let bound = (s_out - nf * d).abs();
                     if bound > *l {
                         *l = bound;
@@ -169,9 +214,12 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
                 let (s_out, s_in) = (sums_out[q], sums_in[q]);
                 let row_out = &d_out[q * n..(q + 1) * n];
                 let row_in = &d_in[q * n..(q + 1) * n];
-                for ((l, &dout), &din) in
-                    lb.iter_mut().zip(row_out.iter()).zip(row_in.iter())
+                for (((l, &dout), &din), &is_tight) in
+                    lb.iter_mut().zip(row_out.iter()).zip(row_in.iter()).zip(tight.iter())
                 {
+                    if is_tight {
+                        continue;
+                    }
                     // S_out(j) >= S_out(i) - N*d(i,j) and >= N*d(j,i) - S_in(i)
                     let bound = (s_out - nf * dout).max(nf * din - s_in);
                     if bound > *l {
@@ -179,6 +227,10 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
                     }
                 }
             }
+        }
+
+        if opts.batch_auto {
+            b_cur = (b_cur * 2).min(b_max);
         }
     }
 
@@ -246,5 +298,86 @@ mod tests {
         );
         assert!(run.computed >= 8);
         assert!(run.rounds >= 1);
+    }
+
+    #[test]
+    fn adaptive_schedule_skips_blind_first_round() {
+        // With a fixed B = N every element is selected before the first
+        // threshold exists, so the whole space is computed blind. The
+        // adaptive schedule starts at width 1, has a threshold from round
+        // 2 on, and eliminates normally — same best sum, far fewer
+        // computes.
+        let n = 1000usize;
+        let m = VectorMetric::new(uniform_cube(n, 2, 7));
+        let order: Vec<usize> = (0..n).collect();
+        let run = |auto: bool| {
+            let mut lb = vec![0.0; n];
+            let mut rule = BestSumRule::new();
+            let r = run_elimination(
+                &FullSpace::new(&m),
+                &order,
+                &mut lb,
+                &mut rule,
+                &EngineOpts { batch: n, batch_auto: auto, ..Default::default() },
+            );
+            (r, rule.best_sum, rule.best_item)
+        };
+        let (fixed, fixed_best, _) = run(false);
+        assert_eq!(fixed.computed, n as u64, "B=N computes everything blind");
+        let (auto, auto_best, _) = run(true);
+        assert!(auto.computed < n as u64 / 2, "adaptive computed {}", auto.computed);
+        assert!(auto.rounds > 3, "schedule should take several rounds");
+        assert!(auto_best == fixed_best, "best sum must agree bitwise");
+    }
+
+    #[test]
+    fn adaptive_with_batch_one_is_sequential() {
+        let n = 200usize;
+        let m = VectorMetric::new(uniform_cube(n, 3, 11));
+        let order: Vec<usize> = (0..n).collect();
+        let run = |auto: bool| {
+            let mut lb = vec![0.0; n];
+            let mut rule = BestSumRule::new();
+            let r = run_elimination(
+                &FullSpace::new(&m),
+                &order,
+                &mut lb,
+                &mut rule,
+                &EngineOpts { batch: 1, batch_auto: auto, ..Default::default() },
+            );
+            (r.computed, rule.best_item, rule.best_sum, lb)
+        };
+        let (ca, ia, sa, lba) = run(true);
+        let (cb, ib, sb, lbb) = run(false);
+        assert_eq!(ca, cb);
+        assert_eq!(ia, ib);
+        assert!(sa == sb);
+        assert!(lba.iter().zip(&lbb).all(|(x, y)| x == y));
+    }
+
+    #[test]
+    fn computed_bounds_are_exact_sums() {
+        // The propagation pass must never move a computed item's bound
+        // off its exact sum (the tight-skip float fix).
+        let n = 400usize;
+        let m = VectorMetric::new(uniform_cube(n, 3, 9));
+        let order: Vec<usize> = (0..n).collect();
+        for (batch, auto) in [(1usize, false), (8, false), (64, true)] {
+            let mut lb = vec![0.0; n];
+            let mut rule = BestSumRule::new();
+            let r = run_elimination(
+                &FullSpace::new(&m),
+                &order,
+                &mut lb,
+                &mut rule,
+                &EngineOpts { batch, batch_auto: auto, record_trace: true, ..Default::default() },
+            );
+            let mut row = vec![0.0; n];
+            for &(_, i) in r.trace.as_ref().unwrap() {
+                m.one_to_all(i, &mut row);
+                let s: f64 = row.iter().sum();
+                assert!(lb[i] == s, "batch={batch} auto={auto} item {i}: {} vs {s}", lb[i]);
+            }
+        }
     }
 }

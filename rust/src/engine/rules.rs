@@ -51,26 +51,40 @@ impl EliminationRule for BestSumRule {
 }
 
 /// Track the `k` lowest sums — the top-k ranking rule (paper §6).
+///
+/// Ties are broken deterministically by **visit order**: among equal
+/// sums the earliest-observed item is kept, and [`into_ranked`] orders
+/// equal sums by visit position. This matters on data with duplicate
+/// points (exactly tied sums): the heap's internal layout and the items'
+/// indices must not leak into the result, or batched runs — which
+/// observe a superset of the sequential run's items, in the same visit
+/// order — could return a differently-ordered (or different) top-k set.
+///
+/// [`into_ranked`]: TopKSumRule::into_ranked
 #[derive(Clone, Debug)]
 pub struct TopKSumRule {
     k: usize,
-    /// Max-heap of the k best (sum, item) pairs seen so far.
-    heap: std::collections::BinaryHeap<(OrdF64, usize)>,
+    /// Observations so far: the visit sequence number used for ties.
+    seq: usize,
+    /// Max-heap of the k best (sum, visit seq, item) triples seen so
+    /// far; among tied sums the latest-visited is evicted first.
+    heap: std::collections::BinaryHeap<(OrdF64, usize, usize)>,
 }
 
 impl TopKSumRule {
     /// Rule keeping the `k` lowest sums (`k >= 1`).
     pub fn new(k: usize) -> Self {
         assert!(k >= 1);
-        TopKSumRule { k, heap: std::collections::BinaryHeap::with_capacity(k + 1) }
+        TopKSumRule { k, seq: 0, heap: std::collections::BinaryHeap::with_capacity(k + 1) }
     }
 
-    /// The kept items as `(sum, item)`, ascending by sum.
+    /// The kept items as `(sum, item)`, ascending by sum; equal sums
+    /// keep their visit order (earliest first).
     pub fn into_ranked(self) -> Vec<(f64, usize)> {
-        let mut ranked: Vec<(f64, usize)> =
-            self.heap.into_iter().map(|(s, i)| (s.0, i)).collect();
-        ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        ranked
+        let mut ranked: Vec<(f64, usize, usize)> =
+            self.heap.into_iter().map(|(s, seq, i)| (s.0, seq, i)).collect();
+        ranked.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+        ranked.into_iter().map(|(s, _, i)| (s, i)).collect()
     }
 }
 
@@ -84,11 +98,19 @@ impl EliminationRule for TopKSumRule {
     }
 
     fn observe(&mut self, item: usize, sum: f64, _dists: &[f64]) {
+        let seq = self.seq;
+        self.seq += 1;
         if self.heap.len() < self.k {
-            self.heap.push((OrdF64(sum), item));
-        } else if sum < self.heap.peek().unwrap().0 .0 {
+            self.heap.push((OrdF64(sum), seq, item));
+            return;
+        }
+        let &(top_sum, top_seq, _) = self.heap.peek().unwrap();
+        // `seq` exceeds every stored sequence number, so on a sum tie the
+        // incumbent wins — later equal-sum observations are rejected in
+        // every execution mode.
+        if (OrdF64(sum), seq) < (top_sum, top_seq) {
             self.heap.pop();
-            self.heap.push((OrdF64(sum), item));
+            self.heap.push((OrdF64(sum), seq, item));
         }
     }
 }
@@ -172,6 +194,28 @@ mod tests {
         }
         assert_eq!(r.threshold(), 4.0);
         assert_eq!(r.into_ranked(), vec![(3.0, 1), (4.0, 3)]);
+    }
+
+    #[test]
+    fn topk_ties_keep_earliest_visited_in_visit_order() {
+        // Three exactly tied sums, visited 9 → 4 → 7: the first two stay,
+        // ranked in visit order regardless of item indices.
+        let mut r = TopKSumRule::new(2);
+        r.observe(9, 5.0, &[]);
+        r.observe(4, 5.0, &[]);
+        r.observe(7, 5.0, &[]);
+        assert_eq!(r.into_ranked(), vec![(5.0, 9), (5.0, 4)]);
+    }
+
+    #[test]
+    fn topk_eviction_drops_latest_tied_keeper() {
+        // Tied keepers 8 (visited first) and 3; a strictly better item
+        // evicts the *latest-visited* tie, not the largest index.
+        let mut r = TopKSumRule::new(2);
+        r.observe(8, 7.0, &[]);
+        r.observe(3, 7.0, &[]);
+        r.observe(1, 2.0, &[]);
+        assert_eq!(r.into_ranked(), vec![(2.0, 1), (7.0, 8)]);
     }
 
     #[test]

@@ -68,6 +68,37 @@ impl Scale {
     }
 }
 
+/// Engine batch-width specification: a fixed width, or the adaptive
+/// schedule (`--batch auto` / `TRIMED_BATCH=auto`) under which the
+/// engine grows each run's round width geometrically from 1 up to
+/// [`ExecConfig::AUTO_BATCH_MAX`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchSpec {
+    /// Fixed engine batch width.
+    Fixed(usize),
+    /// Adaptive schedule: 1 → [`ExecConfig::AUTO_BATCH_MAX`], doubling as
+    /// rounds survive.
+    Auto,
+}
+
+impl BatchSpec {
+    /// Parse `"auto"` or a positive integer; anything else is `None`.
+    pub fn parse(s: &str) -> Option<BatchSpec> {
+        if s == "auto" {
+            return Some(BatchSpec::Auto);
+        }
+        s.parse::<usize>().ok().filter(|&v| v > 0).map(BatchSpec::Fixed)
+    }
+
+    /// The `(batch, batch_auto)` pair the algorithm opt structs consume.
+    pub fn resolve(self) -> (usize, bool) {
+        match self {
+            BatchSpec::Fixed(b) => (b, false),
+            BatchSpec::Auto => (ExecConfig::AUTO_BATCH_MAX, true),
+        }
+    }
+}
+
 /// Execution configuration for the batched elimination engine, shared by
 /// the CLI (`--threads` / `--batch`) and the benches.
 ///
@@ -78,23 +109,35 @@ impl Scale {
 pub struct ExecConfig {
     /// OS threads per batched metric pass (1 = sequential).
     pub threads: usize,
-    /// Candidates per engine round (1 = the paper's sequential loops).
+    /// Candidates per engine round (1 = the paper's sequential loops);
+    /// the schedule's maximum width when `batch_auto` is set.
     pub batch: usize,
+    /// Adaptive engine batch schedule (`--batch auto`): round width grows
+    /// geometrically from 1 toward `batch`.
+    pub batch_auto: bool,
 }
 
 impl Default for ExecConfig {
     fn default() -> Self {
-        ExecConfig { threads: 1, batch: 1 }
+        ExecConfig { threads: 1, batch: 1, batch_auto: false }
     }
 }
 
 impl ExecConfig {
+    /// Maximum round width the adaptive schedule grows toward: deep
+    /// enough to feed every thread of a wide machine several queries per
+    /// round; the schedule itself keeps small runs narrow.
+    pub const AUTO_BATCH_MAX: usize = 64;
+
     /// From `TRIMED_THREADS` / `TRIMED_BATCH`, defaulting to sequential.
+    /// `TRIMED_BATCH=auto` selects the adaptive schedule.
     pub fn from_env() -> ExecConfig {
-        ExecConfig {
-            threads: Self::env_threads().unwrap_or(1),
-            batch: Self::env_batch().unwrap_or(1),
-        }
+        let threads = Self::env_threads().unwrap_or(1);
+        let (batch, batch_auto) = match Self::env_batch_spec() {
+            Some(spec) => spec.resolve(),
+            None => (1, false),
+        };
+        ExecConfig { threads, batch, batch_auto }
     }
 
     /// `TRIMED_THREADS`, if set to a positive integer.
@@ -102,11 +145,12 @@ impl ExecConfig {
         env_usize("TRIMED_THREADS")
     }
 
-    /// `TRIMED_BATCH`, if set to a positive integer. Callers that apply a
-    /// batch heuristic (the CLI's `--threads`-only default) check this so
-    /// an explicit `TRIMED_BATCH=1` is honoured, not treated as unset.
-    pub fn env_batch() -> Option<usize> {
-        env_usize("TRIMED_BATCH")
+    /// `TRIMED_BATCH`, if set to a positive integer or `auto`. Callers
+    /// that apply a batch heuristic (the CLI's `--threads`-only default)
+    /// check this so an explicit `TRIMED_BATCH=1` — or `auto` — is
+    /// honoured, not treated as unset.
+    pub fn env_batch_spec() -> Option<BatchSpec> {
+        std::env::var("TRIMED_BATCH").ok().and_then(|v| BatchSpec::parse(&v))
     }
 
     /// Default engine batch for a thread count: deep enough that every
@@ -148,10 +192,20 @@ mod tests {
     #[test]
     fn exec_config_defaults_sequential() {
         let c = ExecConfig::default();
-        assert_eq!(c, ExecConfig { threads: 1, batch: 1 });
+        assert_eq!(c, ExecConfig { threads: 1, batch: 1, batch_auto: false });
         assert_eq!(ExecConfig::batch_for(1), 8);
         assert_eq!(ExecConfig::batch_for(4), 32);
         assert_eq!(ExecConfig::batch_for(100), 64);
         assert!(available_threads() >= 1);
+    }
+
+    #[test]
+    fn batch_spec_parses_auto_and_integers() {
+        assert_eq!(BatchSpec::parse("auto"), Some(BatchSpec::Auto));
+        assert_eq!(BatchSpec::parse("64"), Some(BatchSpec::Fixed(64)));
+        assert_eq!(BatchSpec::parse("0"), None);
+        assert_eq!(BatchSpec::parse("sixty"), None);
+        assert_eq!(BatchSpec::Auto.resolve(), (ExecConfig::AUTO_BATCH_MAX, true));
+        assert_eq!(BatchSpec::Fixed(8).resolve(), (8, false));
     }
 }

@@ -52,6 +52,11 @@ pub struct TrikmedsOpts {
     /// batch-invariance testing; a threaded subset backend is an open
     /// ROADMAP item.
     pub batch: usize,
+    /// Adaptive engine schedule for the update step (`--batch auto`):
+    /// round width starts at 1 and doubles toward `batch` per cluster.
+    /// Cluster universes are small, so this keeps the stale-bound
+    /// overhead of a wide fixed batch away from tiny clusters.
+    pub batch_auto: bool,
     /// Parallelism hint forwarded to the metric backend; 0 leaves the
     /// backend's current setting untouched.
     pub threads: usize,
@@ -76,6 +81,7 @@ impl TrikmedsOpts {
             eps: 0.0,
             max_iters: 100,
             batch: 1,
+            batch_auto: false,
             threads: 0,
         }
     }
@@ -107,6 +113,12 @@ struct State {
 
 /// Run trikmeds over any metric space.
 pub fn trikmeds<M: MetricSpace>(metric: &M, opts: &TrikmedsOpts) -> ClusteringResult {
+    trikmeds_impl(metric, opts).0
+}
+
+/// Implementation that also returns the final bound state, so the unit
+/// tests can audit the `l_s` soundness invariant (Alg. 10) directly.
+fn trikmeds_impl<M: MetricSpace>(metric: &M, opts: &TrikmedsOpts) -> (ClusteringResult, State) {
     let n = metric.len();
     let k = opts.k;
     assert!(k >= 1 && k <= n);
@@ -161,7 +173,8 @@ pub fn trikmeds<M: MetricSpace>(metric: &M, opts: &TrikmedsOpts) -> ClusteringRe
     let mut converged = false;
     for _ in 0..opts.max_iters {
         iterations += 1;
-        let medoids_changed = update_medoids(metric, &mut st, opts.eps, opts.batch);
+        let medoids_changed =
+            update_medoids(metric, &mut st, opts.eps, opts.batch, opts.batch_auto);
         let assignments_changed = assign_to_clusters(metric, &mut st, opts.eps);
         update_sum_bounds(&mut st);
         if !medoids_changed && !assignments_changed {
@@ -171,20 +184,27 @@ pub fn trikmeds<M: MetricSpace>(metric: &M, opts: &TrikmedsOpts) -> ClusteringRe
     }
 
     let loss: f64 = st.d.iter().sum();
-    ClusteringResult {
-        medoids: st.medoids,
-        assignments: st.assign,
+    let result = ClusteringResult {
+        medoids: st.medoids.clone(),
+        assignments: st.assign.clone(),
         loss,
         iterations,
         converged,
-    }
+    };
+    (result, st)
 }
 
 /// Alg. 8, as an engine run per cluster: the member list is the universe
 /// ([`SubsetSpace`]), the incumbent medoid's exact sum is the threshold,
 /// and bound propagation `S(j) >= |S(i) - v·dist(i,j)|` is the engine's
 /// shared pass. Returns true if any medoid moved.
-fn update_medoids<M: MetricSpace>(metric: &M, st: &mut State, eps: f64, batch: usize) -> bool {
+fn update_medoids<M: MetricSpace>(
+    metric: &M,
+    st: &mut State,
+    eps: f64,
+    batch: usize,
+    batch_auto: bool,
+) -> bool {
     let mut any_moved = false;
     let mut lb: Vec<f64> = Vec::new();
     let mut order: Vec<usize> = Vec::new();
@@ -205,7 +225,7 @@ fn update_medoids<M: MetricSpace>(metric: &M, st: &mut State, eps: f64, batch: u
             &order,
             &mut lb,
             &mut rule,
-            &EngineOpts { batch, eps, ..Default::default() },
+            &EngineOpts { batch, batch_auto, eps, ..Default::default() },
         );
         for (pos, &j) in mem.iter().enumerate() {
             st.ls[j] = lb[pos];
@@ -218,6 +238,15 @@ fn update_medoids<M: MetricSpace>(metric: &M, st: &mut State, eps: f64, batch: u
                 st.d[j] = dd;
             }
         }
+        // Re-pin the incumbent's bound to its known-exact sum: the engine
+        // only freezes bounds it computed *this run*, so the warm-started
+        // exact bound of a never-recomputed incumbent can come back an
+        // ulp high from the propagation pass (same float mode the
+        // engine's tight-skip guards against). An ex-medoid that just
+        // lost the seat keeps its propagated bound — that value can sit
+        // at most an ulp above its (no longer tracked) exact sum, within
+        // the tolerance of every bound use.
+        st.ls[st.medoids[c]] = st.s[c];
         if st.medoids[c] != old_medoid {
             any_moved = true;
             st.p[c] = metric.dist(old_medoid, st.medoids[c]);
@@ -292,6 +321,31 @@ fn assign_to_clusters<M: MetricSpace>(metric: &M, st: &mut State, eps: f64) -> b
 
 /// Alg. 10: adjust in-cluster sum bounds for membership churn, and refresh
 /// the exact medoid sums `s(k)` with the net flux.
+///
+/// Soundness of the decay (audited for PR 2 — the `min` orientation is
+/// correct, and tighter than either term alone): write `I`/`O` for the
+/// elements that entered/left cluster `c`, `d(j)` for each one's distance
+/// to the *current* medoid (what `ds_in`/`ds_out` accumulate), and
+/// `di = d(i)`. `l_s(i)` must keep lower-bounding the in-cluster sum
+/// after the membership change, i.e. `decay` must upper-bound
+///
+/// ```text
+///   Σ_{j∈O} d(j,i) − Σ_{j∈I} d(j,i)
+/// ```
+///
+/// The triangle inequality through the medoid gives, per element,
+/// `d(j,i) ≤ d(j) + di` (used on `O`) and both `d(j,i) ≥ d(j) − di` and
+/// `d(j,i) ≥ di − d(j)` (used on `I`). Summing the two pairings:
+///
+/// ```text
+///   decay_A = (ds_out + dn_out·di) − (ds_in − dn_in·di) = jn_abs·di − js_net
+///   decay_B = (ds_out + dn_out·di) − (dn_in·di − ds_in) = js_abs − jn_net·di
+/// ```
+///
+/// Both are valid upper bounds simultaneously, so their `min` is the
+/// tightest sound decay. (A negative decay means the in-flux provably
+/// exceeds the out-flux and *raising* `l_s` is sound.) The property test
+/// `ls_bounds_sound_under_churn` pins this against churn-heavy runs.
 fn update_sum_bounds(st: &mut State) {
     for c in 0..st.k {
         let js_abs = st.ds_in[c] + st.ds_out[c];
@@ -353,34 +407,64 @@ mod tests {
 
     #[test]
     fn batched_update_reaches_same_fixpoint() {
-        // Elimination is sound at any batch width, so the per-iteration
-        // medoid choice — and hence the whole exact (ε = 0) trajectory —
-        // is batch-invariant; only the distance count may differ.
+        // Elimination is sound at any batch width — fixed or adaptive —
+        // so the per-iteration medoid choice, and hence the whole exact
+        // (ε = 0) trajectory, is batch-invariant; only the distance count
+        // may differ.
         for seed in 0..3u64 {
             let pts = gauss_mix(220, 2, 5, 0.05, seed + 40);
             let m = VectorMetric::new(pts);
             let init = init::uniform_init(m.len(), 5, seed);
-            let run = |batch: usize| {
+            let run = |batch: usize, batch_auto: bool| {
                 trikmeds(
                     &m,
                     &TrikmedsOpts {
                         init: TrikmedsInit::Given(init.clone()),
                         batch,
+                        batch_auto,
                         ..TrikmedsOpts::new(5)
                     },
                 )
             };
-            let seq = run(1);
-            for batch in [4usize, 16] {
-                let b = run(batch);
+            let seq = run(1, false);
+            for (batch, auto) in [(4usize, false), (16, false), (16, true)] {
+                let b = run(batch, auto);
                 assert!(
                     (b.loss - seq.loss).abs() < 1e-9,
-                    "seed {seed} batch {batch}: {} vs {}",
+                    "seed {seed} batch {batch} auto {auto}: {} vs {}",
                     b.loss,
                     seq.loss
                 );
-                assert_eq!(b.medoids, seq.medoids, "seed {seed} batch {batch}");
-                assert_eq!(b.iterations, seq.iterations, "seed {seed} batch {batch}");
+                assert_eq!(b.medoids, seq.medoids, "seed {seed} batch {batch} auto {auto}");
+                assert_eq!(b.iterations, seq.iterations, "seed {seed} batch {batch} auto {auto}");
+            }
+        }
+    }
+
+    #[test]
+    fn ls_bounds_sound_under_churn() {
+        // Alg. 10 soundness: after churn-heavy iterations every l_s(i)
+        // must still lower-bound i's true in-cluster distance sum. Large
+        // sigma makes the mixture components overlap heavily, so
+        // assignments churn for several iterations before the fixpoint.
+        for seed in 0..3u64 {
+            let pts = gauss_mix(240, 2, 6, 0.25, seed + 7);
+            let m = VectorMetric::new(pts);
+            let (r, st) = trikmeds_impl(
+                &m,
+                &TrikmedsOpts { init: TrikmedsInit::Uniform(seed), ..TrikmedsOpts::new(6) },
+            );
+            assert!(r.iterations >= 2, "seed {seed}: no churn to audit");
+            let n = m.len();
+            for i in 0..n {
+                let c = r.assignments[i];
+                let true_sum: f64 = st.members[c].iter().map(|&j| m.dist(j, i)).sum();
+                assert!(
+                    st.ls[i] <= true_sum + 1e-7,
+                    "seed {seed} element {i}: l_s {} exceeds true in-cluster sum {}",
+                    st.ls[i],
+                    true_sum
+                );
             }
         }
     }

@@ -17,7 +17,7 @@ use trimed::cli::Args;
 use trimed::data::synthetic as syn;
 use trimed::data::{io as data_io, Points};
 use trimed::harness::experiments;
-use trimed::harness::{ExecConfig, Scale};
+use trimed::harness::{BatchSpec, ExecConfig, Scale};
 use trimed::kmedoids::{kmeds, trikmeds, KmedsOpts, TrikmedsOpts};
 use trimed::kmedoids::trikmeds::TrikmedsInit;
 use trimed::metric::{Counted, MetricSpace, VectorMetric, XlaVectorMetric};
@@ -52,6 +52,10 @@ PARALLELISM:
                unless set explicitly: the update step runs point queries,
                so B > 1 there only trades extra distances for determinism
                experiments, not speed
+  --batch auto adaptive schedule: each engine run starts at B=1 (so the
+               first round establishes a threshold instead of computing a
+               full batch blind) and doubles toward 64 as rounds survive.
+               Also accepted as TRIMED_BATCH=auto
 ";
 
 fn load_data(args: &Args) -> Result<Points> {
@@ -84,13 +88,17 @@ fn load_data(args: &Args) -> Result<Points> {
 fn exec_config(args: &Args, batch_heuristic: bool) -> Result<ExecConfig> {
     let env = ExecConfig::from_env();
     let threads = args.get_parsed("threads", env.threads)?.max(1);
-    let default_batch = if batch_heuristic && threads > 1 && ExecConfig::env_batch().is_none() {
-        ExecConfig::batch_for(threads)
-    } else {
-        env.batch
-    };
-    let batch = args.get_parsed("batch", default_batch)?.max(1);
-    Ok(ExecConfig { threads, batch })
+    let (mut batch, mut batch_auto) = (env.batch, env.batch_auto);
+    if batch_heuristic && threads > 1 && ExecConfig::env_batch_spec().is_none() {
+        batch = ExecConfig::batch_for(threads);
+    }
+    if let Some(v) = args.get("batch") {
+        match BatchSpec::parse(v) {
+            Some(spec) => (batch, batch_auto) = spec.resolve(),
+            None => bail!("--batch expects a positive integer or `auto`, got {v:?}"),
+        }
+    }
+    Ok(ExecConfig { threads, batch: batch.max(1), batch_auto })
 }
 
 fn cmd_medoid(args: &Args) -> Result<()> {
@@ -104,9 +112,10 @@ fn cmd_medoid(args: &Args) -> Result<()> {
     let exec = exec_config(args, !args.flag("xla"))?;
     let (n, d) = (pts.len(), pts.dim());
     println!(
-        "dataset: N={n} d={d} algo={algo} threads={} batch={} xla={}",
+        "dataset: N={n} d={d} algo={algo} threads={} batch={}{} xla={}",
         exec.threads,
         exec.batch,
+        if exec.batch_auto { " (auto)" } else { "" },
         args.flag("xla")
     );
 
@@ -122,6 +131,7 @@ fn cmd_medoid(args: &Args) -> Result<()> {
                         eps,
                         slack,
                         batch: exec.batch,
+                        batch_auto: exec.batch_auto,
                         threads: exec.threads,
                         ..Default::default()
                     },
@@ -134,6 +144,7 @@ fn cmd_medoid(args: &Args) -> Result<()> {
                     &TopRankOpts {
                         seed,
                         batch: exec.batch,
+                        batch_auto: exec.batch_auto,
                         threads: exec.threads,
                         ..Default::default()
                     },
@@ -146,6 +157,7 @@ fn cmd_medoid(args: &Args) -> Result<()> {
                     &TopRankOpts {
                         seed,
                         batch: exec.batch,
+                        batch_auto: exec.batch_auto,
                         threads: exec.threads,
                         ..Default::default()
                     },
@@ -209,6 +221,7 @@ fn cmd_kmedoids(args: &Args) -> Result<()> {
                 init: TrikmedsInit::Uniform(seed),
                 eps,
                 batch: exec.batch,
+                batch_auto: exec.batch_auto,
                 threads: exec.threads,
                 ..TrikmedsOpts::new(k)
             },

@@ -1,7 +1,7 @@
 //! Native Euclidean metric over dense vector data.
 
 use super::MetricSpace;
-use crate::data::{squared_euclidean, Points};
+use crate::data::{simd, Points};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Rows per cache block of the multi-query scan: 256 rows × d × 8 bytes
@@ -61,10 +61,11 @@ impl VectorMetric {
         while block_start < n {
             let block_end = (block_start + SCAN_BLOCK_ROWS).min(n);
             for (q, row_out) in queries.chunks_exact(d).zip(out.chunks_mut(n)) {
-                for j in block_start..block_end {
-                    let row = &flat[j * d..(j + 1) * d];
-                    row_out[j] = squared_euclidean(q, row).sqrt();
-                }
+                simd::euclidean_rows(
+                    q,
+                    &flat[block_start * d..block_end * d],
+                    &mut row_out[block_start..block_end],
+                );
             }
             block_start = block_end;
         }
@@ -84,13 +85,8 @@ impl MetricSpace for VectorMetric {
     fn one_to_all(&self, i: usize, out: &mut [f64]) {
         let n = self.points.len();
         assert_eq!(out.len(), n);
-        let d = self.points.dim();
         let q = self.points.row(i).to_vec(); // detach from the scan borrow
-        let flat = self.points.flat();
-        for (j, o) in out.iter_mut().enumerate() {
-            let row = &flat[j * d..(j + 1) * d];
-            *o = squared_euclidean(&q, row).sqrt();
-        }
+        simd::euclidean_rows(&q, self.points.flat(), out);
     }
 
     fn many_to_all(&self, ids: &[usize], out: &mut [f64]) {
@@ -158,6 +154,32 @@ mod tests {
                     &batched[q * n..(q + 1) * n],
                     single.as_slice(),
                     "threads={threads} query={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn one_to_all_rows_match_portable_kernel_bitwise() {
+        // Kernel-equivalence invariant: the dispatched SIMD kernel behind
+        // the metric's scans must agree *bitwise* with the portable
+        // reference kernel, row by row, at every dimensionality shape
+        // (pure tail, exact chunks, chunks + tail).
+        use crate::data::simd::squared_euclidean_portable;
+        for d in [1usize, 2, 3, 4, 5, 8, 10, 100] {
+            let pts = crate::data::synthetic::uniform_cube(120, d, 7 + d as u64);
+            let m = VectorMetric::new(pts);
+            let n = m.len();
+            let mut out = vec![0.0; n];
+            m.one_to_all(17, &mut out);
+            let q = m.points().row(17).to_vec();
+            for j in 0..n {
+                let reference = squared_euclidean_portable(&q, m.points().row(j)).sqrt();
+                assert!(
+                    out[j] == reference,
+                    "d={d} j={j} kernel={}: {} vs portable {reference}",
+                    crate::data::simd::kernel_name(),
+                    out[j]
                 );
             }
         }

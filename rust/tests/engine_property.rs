@@ -5,20 +5,29 @@
 //!   pre-refactor sequential implementation, which is kept here as a
 //!   frozen reference copy: same medoid, same computed count, identical
 //!   energies and lower-bound vectors.
-//! * **Batched soundness** — for `B ∈ {2, 8, 64}` and `threads ∈ {1, 4}`
-//!   the batched runs return the same medoid energy and sound lower
-//!   bounds, on uniform-cube vectors and on a directed
-//!   preferential-attachment graph (the quasi-metric bound family).
+//! * **Batched soundness** — for `B ∈ {2, 8, 64}` (fixed and adaptive)
+//!   and `threads ∈ {1, 4}` the batched runs return the same medoid
+//!   energy and sound lower bounds, on uniform-cube vectors and on a
+//!   directed preferential-attachment graph (the quasi-metric bounds).
+//! * **Computed-bound exactness** — a computed element's returned bound
+//!   is exactly its distance sum, even at adversarial coordinate scales
+//!   where the propagated `|S(i) − N·d|` rounds above it (the PR 2
+//!   tight-skip fix, mirrored in the reference below).
 
 use trimed::algo::{scan_medoid, trimed_with_opts, TrimedOpts};
 use trimed::data::synthetic::uniform_cube;
+use trimed::data::Points;
 use trimed::graph::generators::preferential_attachment;
 use trimed::graph::GraphMetric;
+use trimed::harness::ExecConfig;
 use trimed::metric::{Counted, MetricSpace, VectorMetric};
 use trimed::rng::Rng;
 
-/// Frozen copy of the pre-engine sequential trimed (paper Alg. 1), exactly
-/// as the seed implemented it. Do not "improve" this: it is the bit-level
+/// Frozen copy of the sequential trimed (paper Alg. 1), as the seed
+/// implemented it with one PR 2 amendment mirrored from the engine: a
+/// computed element's bound is final (exact), so the propagation pass
+/// skips it — float rounding in `|S(i) − N·d|` must not raise an exact
+/// bound by an ulp. Do not "improve" this otherwise: it is the bit-level
 /// reference the engine's `batch = 1` path is held to.
 fn reference_trimed<M: MetricSpace>(
     metric: &M,
@@ -33,6 +42,7 @@ fn reference_trimed<M: MetricSpace>(
     let order: Vec<usize> = Rng::new(seed).permutation(n);
 
     let mut lb = vec![0.0f64; n];
+    let mut tight = vec![false; n];
     let mut best_idx = usize::MAX;
     let mut best_sum = f64::INFINITY;
     let mut computed: u64 = 0;
@@ -47,12 +57,16 @@ fn reference_trimed<M: MetricSpace>(
         computed += 1;
         let s_out: f64 = d_out.iter().sum();
         lb[i] = s_out;
+        tight[i] = true;
         if s_out < best_sum {
             best_sum = s_out;
             best_idx = i;
         }
         if symmetric {
-            for (l, &d) in lb.iter_mut().zip(d_out.iter()) {
+            for ((l, &d), &is_tight) in lb.iter_mut().zip(d_out.iter()).zip(tight.iter()) {
+                if is_tight {
+                    continue;
+                }
                 let b = (s_out - nf * d).abs();
                 if b > *l {
                     *l = b;
@@ -61,7 +75,12 @@ fn reference_trimed<M: MetricSpace>(
         } else {
             metric.all_to_one(i, &mut d_in);
             let s_in: f64 = d_in.iter().sum();
-            for ((l, &dout), &din) in lb.iter_mut().zip(d_out.iter()).zip(d_in.iter()) {
+            for (((l, &dout), &din), &is_tight) in
+                lb.iter_mut().zip(d_out.iter()).zip(d_in.iter()).zip(tight.iter())
+            {
+                if is_tight {
+                    continue;
+                }
                 let b = (s_out - nf * dout).max(nf * din - s_in);
                 if b > *l {
                     *l = b;
@@ -214,7 +233,9 @@ fn prop_batched_trimed_exact_and_sound_on_directed_graph() {
 fn batched_overhead_stays_moderate() {
     // The documented trade: B > 1 may compute extra elements (bounds are
     // one round stale) but must stay within a small factor plus the
-    // unavoidable first blind round.
+    // unavoidable first blind round. The adaptive schedule removes that
+    // blind round, so it is held to the same bound without the additive
+    // batch term.
     let pts = uniform_cube(4000, 3, 23);
     let m = VectorMetric::new(pts);
     let seq = trimed_with_opts(&m, &TrimedOpts { seed: 4, ..Default::default() });
@@ -227,4 +248,121 @@ fn batched_overhead_stays_moderate() {
             seq.computed
         );
     }
+    let auto = trimed_with_opts(
+        &m,
+        &TrimedOpts { seed: 4, batch: 64, batch_auto: true, ..Default::default() },
+    );
+    assert!(
+        auto.computed <= 2 * seq.computed,
+        "adaptive: computed {} vs sequential {}",
+        auto.computed,
+        seq.computed
+    );
+}
+
+#[test]
+fn prop_adaptive_batch_exact_and_sound() {
+    // The adaptive schedule is still exact elimination: same medoid
+    // energy, sound bounds, across thread counts.
+    let pts = uniform_cube(700, 3, 40);
+    let m = VectorMetric::new(pts);
+    let s = scan_medoid(&m);
+    let sums = true_sums(&m);
+    let n = m.len();
+    for threads in [1usize, 4] {
+        let r = trimed_with_opts(
+            &m,
+            &TrimedOpts { seed: 9, batch: 64, batch_auto: true, threads, ..Default::default() },
+        );
+        assert!(
+            (r.energy - s.energy).abs() < 1e-9
+                && (s.energies[r.medoid] - s.energy).abs() < 1e-9,
+            "t={threads}: energy {} vs scan {}",
+            r.energy,
+            s.energy
+        );
+        for j in 0..n {
+            assert!(
+                r.lower_bounds[j] <= sums[j] + 1e-7,
+                "t={threads}: bound {} > sum {} at {j}",
+                r.lower_bounds[j],
+                sums[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn computed_bounds_exact_at_adversarial_scale() {
+    // Regression for the float-level bound raise: at coordinate scale
+    // ~1e12 the propagated |S(i) − N·d(i,j)| can round a few ulps above
+    // the computed S(j). Computed elements' bounds must stay *bit-equal*
+    // to their sums, and every bound must stay sound up to a relative
+    // epsilon far below the old failure size.
+    let base = uniform_cube(400, 3, 31);
+    let data: Vec<f64> = base.flat().iter().map(|v| 1e12 * (v + 1.0)).collect();
+    let m = VectorMetric::new(Points::new(3, data));
+    let n = m.len();
+    let mut row = vec![0.0; n];
+    for (batch, auto) in [(1usize, false), (8, false), (64, true)] {
+        let r = trimed_with_opts(
+            &m,
+            &TrimedOpts {
+                seed: 3,
+                batch,
+                batch_auto: auto,
+                record_trace: true,
+                ..Default::default()
+            },
+        );
+        for &(_, i) in r.trace.as_ref().unwrap() {
+            m.one_to_all(i, &mut row);
+            let s: f64 = row.iter().sum();
+            assert!(
+                r.lower_bounds[i] == s,
+                "batch={batch} auto={auto}: computed bound {} != sum {s} at {i}",
+                r.lower_bounds[i]
+            );
+        }
+        for j in 0..n {
+            m.one_to_all(j, &mut row);
+            let s: f64 = row.iter().sum();
+            assert!(
+                r.lower_bounds[j] <= s * (1.0 + 1e-12),
+                "batch={batch} auto={auto}: bound {} unsound vs sum {s} at {j}",
+                r.lower_bounds[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn env_exec_config_paths_stay_exact() {
+    // Run under the TRIMED_THREADS / TRIMED_BATCH environment the CI
+    // matrix sets, so `cargo test` exercises the parallel and batched
+    // paths there while staying sequential (and cheap) by default.
+    let exec = ExecConfig::from_env();
+    let pts = uniform_cube(600, 3, 3);
+    let m = VectorMetric::new(pts);
+    let seq = trimed_with_opts(&m, &TrimedOpts { seed: 11, ..Default::default() });
+    let r = trimed_with_opts(
+        &m,
+        &TrimedOpts {
+            seed: 11,
+            batch: exec.batch,
+            batch_auto: exec.batch_auto,
+            threads: exec.threads,
+            ..Default::default()
+        },
+    );
+    assert!(
+        (r.energy - seq.energy).abs() < 1e-12,
+        "threads={} batch={} auto={}: {} vs {}",
+        exec.threads,
+        exec.batch,
+        exec.batch_auto,
+        r.energy,
+        seq.energy
+    );
+    assert!(r.computed > 0 && r.computed <= m.len() as u64);
 }
