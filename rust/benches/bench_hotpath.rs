@@ -8,21 +8,28 @@
 //!   SIMD-vs-scalar comparison BENCH_PR2.json tracks, and the rows are
 //!   asserted bitwise-identical before timing (kernel equivalence);
 //! * batched many_to_all throughput across thread counts (the engine's
-//!   parallel backend);
+//!   parallel backend), per-query canonical scan **and** the norm-cached
+//!   panel kernel (`many_to_all_panel` records) — the PR 5 comparison:
+//!   the panel path must beat the per-query scan at d=100, and its rows
+//!   are asserted within the guard bound of the canonical rows before
+//!   timing;
 //! * XLA/PJRT one-to-all dispatch (the AOT JAX+Pallas kernel) across d;
 //! * Dijkstra one-to-all on a road network (graph hot loop), sequential
 //!   and fanned out across threads;
 //! * end-to-end trimed wall time: sequential vs fixed-batch vs adaptive
-//!   (`--batch auto`) engine rounds at several thread counts.
+//!   (`--batch auto`) engine rounds at several thread counts, fast
+//!   (default) and exact kernels.
 //!
 //! Run: cargo bench --bench bench_hotpath
 //! Set TRIMED_BENCH_JSON=path to also write the records as JSON
-//! (BENCH_PR2.json schema). Set TRIMED_BENCH_N to shrink the point count
-//! (CI smoke runs use 4000; the default 50000 is the acceptance size).
+//! (BENCH_PR5.json schema, a superset of BENCH_PR2's). Set
+//! TRIMED_BENCH_N to shrink the point count (CI smoke runs use 4000; the
+//! default 50000 is the acceptance size).
 
 use trimed::algo::{trimed_medoid, trimed_with_opts, TrimedOpts};
 use trimed::data::simd::{kernel_name, squared_euclidean_portable};
 use trimed::data::synthetic::uniform_cube;
+use trimed::engine::Kernel;
 use trimed::graph::dijkstra::dijkstra_all;
 use trimed::graph::generators::road_network;
 use trimed::harness::available_threads;
@@ -42,8 +49,8 @@ struct Record {
     kernel: &'static str,
 }
 
-/// Serialise as `{"records": [...]}` — the shape BENCH_PR2.json's
-/// regeneration recipe commits verbatim.
+/// Serialise as `{"records": [...]}` — the shape BENCH_PR5.json's
+/// regeneration recipe commits verbatim (superset of BENCH_PR2's).
 fn json(records: &[Record]) -> String {
     let mut s = String::from("{\"records\": [\n");
     for (i, r) in records.iter().enumerate() {
@@ -141,7 +148,8 @@ fn main() {
         });
     }
 
-    // Batched many_to_all: the engine's parallel backend.
+    // Batched many_to_all: the engine's parallel backend — the PR 2
+    // per-query canonical scan vs the PR 5 norm-cached panel kernel.
     println!();
     for d in [2usize, 10, 100] {
         let pts = uniform_cube(n, d, 1);
@@ -149,11 +157,26 @@ fn main() {
         let batch = 64usize;
         let ids: Vec<usize> = (0..batch).map(|q| (q * 701) % n).collect();
         let mut out = vec![0.0; batch * n];
+        let mut fast = vec![0.0; batch * n];
+        let mut guard = vec![0.0; batch];
+        let mut scratch = Vec::new();
+        // Guard-soundness check before timing: every panel row entry
+        // must sit within sqrt(guard) of the canonical entry.
+        m.set_threads(1);
+        m.many_to_all(&ids, &mut out);
+        assert!(m.many_to_all_fast(&ids, &mut fast, &mut guard, &mut scratch));
+        for q in 0..batch {
+            let g = guard[q].sqrt();
+            for j in 0..n {
+                let gap = (fast[q * n + j] - out[q * n + j]).abs();
+                assert!(gap <= g, "panel guard violated at d={d} q={q} j={j}: {gap} > {g}");
+            }
+        }
         for threads in [1usize, max_threads] {
             m.set_threads(threads);
             let stats = time_block(2, 10, || m.many_to_all(&ids, &mut out));
             println!(
-                "many_to_all d={d:<3} B={batch} t={threads}: {}  ({:.1} Mdist/s)",
+                "many_to_all       d={d:<3} B={batch} t={threads}: {}  ({:.1} Mdist/s)",
                 stats.summary(),
                 (batch * n) as f64 / stats.median_ns * 1e3
             );
@@ -165,6 +188,25 @@ fn main() {
                 batch,
                 computed: batch as u64,
                 wall_ns: stats.median_ns,
+                kernel: kernel_name(),
+            });
+            let stats_p = time_block(2, 10, || {
+                let _ = m.many_to_all_fast(&ids, &mut fast, &mut guard, &mut scratch);
+            });
+            println!(
+                "many_to_all_panel d={d:<3} B={batch} t={threads}: {}  ({:.1} Mdist/s, {:.2}x of per-query)",
+                stats_p.summary(),
+                (batch * n) as f64 / stats_p.median_ns * 1e3,
+                stats.median_ns / stats_p.median_ns
+            );
+            records.push(Record {
+                name: "many_to_all_panel",
+                n,
+                d,
+                threads,
+                batch,
+                computed: batch as u64,
+                wall_ns: stats_p.median_ns,
                 kernel: kernel_name(),
             });
             if max_threads == 1 {
@@ -241,9 +283,10 @@ fn main() {
         let seq = trimed_medoid(&m, 9);
         let stats = time_block(1, 5, || trimed_medoid(&m, 9));
         println!(
-            "trimed native N={n} d=3 B=1    t=1: {} per medoid (computed {})",
+            "trimed native N={n} d=3 B=1    t=1: {} per medoid (computed {}, refined {})",
             fmt_ns(stats.median_ns),
-            seq.computed
+            seq.computed,
+            seq.refined
         );
         records.push(Record {
             name: "trimed",
@@ -253,6 +296,29 @@ fn main() {
             batch: 1,
             computed: seq.computed,
             wall_ns: stats.median_ns,
+            kernel: kernel_name(),
+        });
+        // Same run on the canonical kernel: the end-to-end fast-vs-exact
+        // comparison (results are identical by contract; only wall time
+        // and backend passes differ).
+        let opts_exact = TrimedOpts { seed: 9, kernel: Kernel::Exact, ..Default::default() };
+        let seq_exact = trimed_with_opts(&m, &opts_exact);
+        assert_eq!(seq_exact.medoid, seq.medoid, "kernels must agree on the medoid");
+        assert!(seq_exact.energy == seq.energy, "kernels must agree on energy bits");
+        let stats_exact = time_block(1, 5, || trimed_with_opts(&m, &opts_exact));
+        println!(
+            "trimed native N={n} d=3 B=1    t=1 [exact kernel]: {} per medoid ({:.2}x of fast)",
+            fmt_ns(stats_exact.median_ns),
+            stats_exact.median_ns / stats.median_ns
+        );
+        records.push(Record {
+            name: "trimed_exact_kernel",
+            n,
+            d: 3,
+            threads: 1,
+            batch: 1,
+            computed: seq_exact.computed,
+            wall_ns: stats_exact.median_ns,
             kernel: kernel_name(),
         });
         // Oversubscribing cores is fine — the acceptance point (t=8) stays
@@ -318,7 +384,7 @@ fn main() {
         }
     }
 
-    println!("\nBENCH_PR2 records:\n{}", json(&records));
+    println!("\nBENCH_PR5 records:\n{}", json(&records));
     if let Ok(path) = std::env::var("TRIMED_BENCH_JSON") {
         std::fs::write(&path, json(&records)).expect("write TRIMED_BENCH_JSON");
         println!("wrote {path}");

@@ -43,6 +43,14 @@ pub struct TopRankOpts {
     /// Parallelism hint forwarded to the metric backend before the run;
     /// `0` leaves the backend's current setting untouched.
     pub threads: usize,
+    /// Accepted for configuration parity with the engine-backed
+    /// algorithms (`--kernel` plumbs through every opt struct), but a
+    /// no-op here — and deliberately so: TOPRANK's anchor and exact
+    /// passes *report* the sums they compute (estimates, survivor
+    /// energies), so they must stay on the canonical kernel for the
+    /// results to be well-defined; there is no elimination threshold for
+    /// a guard band to protect.
+    pub kernel: crate::engine::Kernel,
 }
 
 impl Default for TopRankOpts {
@@ -55,6 +63,7 @@ impl Default for TopRankOpts {
             batch: 1,
             batch_auto: false,
             threads: 0,
+            kernel: crate::engine::Kernel::Fast,
         }
     }
 }

@@ -16,6 +16,15 @@
 //! one batched (optionally thread-parallel) `many_to_all` pass each — a
 //! few extra computed elements for near-linear wall-clock speedup.
 //!
+//! By default the rounds run through the fast norm-trick panel kernel
+//! with guard-band exact refinement ([`TrimedOpts::kernel`], engine
+//! module docs): for exact runs (`eps == 0`) the returned medoid and
+//! energy are identical — bit for bit — to the canonical kernel's,
+//! because every sum that can decide the result is recomputed exactly,
+//! while the bulk of the scan work runs on the much faster dot-product
+//! formulation. (`eps > 0` keeps the `(1+eps)` guarantee under either
+//! kernel, but the two may pick different eps-valid elements.)
+//!
 //! Internally we work with sums over all `N` elements (self-distance 0),
 //! for which the bound is exact; reported energies use the paper's
 //! `E = S/(N−1)` normalisation.
@@ -25,7 +34,7 @@
 //! `S_out(j) ≥ S_out(i) − N·d(i,j)` and `S_out(j) ≥ N·d(j,i) − S_in(i)`.
 
 use super::sum_to_energy;
-use crate::engine::{run_elimination, BestSumRule, EngineOpts, FullSpace, TopKSumRule};
+use crate::engine::{run_elimination, BestSumRule, EngineOpts, FullSpace, Kernel, TopKSumRule};
 use crate::metric::MetricSpace;
 use crate::rng::Rng;
 
@@ -64,6 +73,20 @@ pub struct TrimedOpts {
     /// ([`MetricSpace::set_threads`]) before the run; `0` (the default)
     /// leaves the backend's current setting untouched.
     pub threads: usize,
+    /// Compute kernel (`--kernel exact|fast`). Defaults to
+    /// [`Kernel::Fast`]: on vector metrics the rounds run through the
+    /// norm-trick panel kernel with guard-band exact refinement — for
+    /// exact runs (`eps == 0`) the identical medoid and bit-identical
+    /// reported energy/sums as [`Kernel::Exact`], at a fraction of the
+    /// scan cost — and on metrics without a fast path (graphs, XLA) it
+    /// transparently falls back to the canonical kernel. With `eps > 0`
+    /// both kernels honour the same `(1+eps)` quality guarantee, but may
+    /// return *different* eps-valid elements (the fast path's deflated
+    /// bounds eliminate slightly less). Pin [`Kernel::Exact`] for
+    /// bit-level reproduction of the sequential reference (computed
+    /// counts and all lower-bound bits included), or on data whose huge
+    /// coordinate norms degenerate the guard band (see DESIGN.md).
+    pub kernel: Kernel,
 }
 
 impl Default for TrimedOpts {
@@ -77,6 +100,7 @@ impl Default for TrimedOpts {
             batch: 1,
             batch_auto: false,
             threads: 0,
+            kernel: Kernel::Fast,
         }
     }
 }
@@ -90,6 +114,12 @@ pub struct TrimedResult {
     pub energy: f64,
     /// Number of computed elements (one-to-all passes; the paper's n̂).
     pub computed: u64,
+    /// Guard-band refinements under [`Kernel::Fast`]: computed elements
+    /// re-run through the canonical kernel because their sum landed
+    /// within the guard of a threshold. Each is one extra backend
+    /// one-to-all pass (`computed + refined` matches a `Counted`
+    /// wrapper's `one_to_all`); 0 under [`Kernel::Exact`].
+    pub refined: u64,
     /// Final lower bounds on each element's distance *sum* S(j).
     pub lower_bounds: Vec<f64>,
     /// If requested: (loop iteration, element) for each compute, in order.
@@ -134,6 +164,7 @@ pub fn trimed_with_opts<M: MetricSpace>(metric: &M, opts: &TrimedOpts) -> Trimed
             eps: opts.eps,
             slack: opts.slack,
             record_trace: opts.record_trace,
+            kernel: opts.kernel,
         },
     );
 
@@ -141,6 +172,7 @@ pub fn trimed_with_opts<M: MetricSpace>(metric: &M, opts: &TrimedOpts) -> Trimed
         medoid: rule.best_item,
         energy: sum_to_energy(rule.best_sum, n),
         computed: run.computed,
+        refined: run.refined,
         lower_bounds: lb,
         trace: run.trace,
     }
@@ -155,6 +187,8 @@ pub struct TopKResult {
     pub energies: Vec<f64>,
     /// Number of computed elements.
     pub computed: u64,
+    /// Guard-band refinements (see [`TrimedResult::refined`]).
+    pub refined: u64,
 }
 
 /// Exact k lowest-energy elements ("closeness-centrality top-k"), using the
@@ -199,6 +233,7 @@ pub fn trimed_topk_with_opts<M: MetricSpace>(
             eps: opts.eps,
             slack: opts.slack,
             record_trace: false,
+            kernel: opts.kernel,
         },
     );
 
@@ -207,6 +242,7 @@ pub fn trimed_topk_with_opts<M: MetricSpace>(
         elements: ranked.iter().map(|&(_, i)| i).collect(),
         energies: ranked.iter().map(|&(s, _)| sum_to_energy(s, n)).collect(),
         computed: run.computed,
+        refined: run.refined,
     }
 }
 
@@ -255,7 +291,10 @@ mod tests {
         let n = 4000;
         let m = Counted::new(VectorMetric::new(uniform_cube(n, 2, 5)));
         let t = trimed_medoid(&m, 0);
-        assert_eq!(t.computed, m.counts().one_to_all);
+        // Every backend pass is either a computed element or a guard-band
+        // refinement of one (the default kernel is fast).
+        assert_eq!(t.computed + t.refined, m.counts().one_to_all);
+        assert!(t.refined <= t.computed);
         // Thm 3.2: O(sqrt(N)); allow a wide constant.
         assert!(
             t.computed < (20.0 * (n as f64).sqrt()) as u64,

@@ -11,10 +11,31 @@ pub mod synthetic;
 /// native metric, the XLA metric, generators and loaders all speak
 /// `Points`. Stored as `f64` for exact paper-metric accounting; the XLA
 /// path down-converts to `f32` at the artifact boundary.
+///
+/// Every point's squared norm is cached at construction (and maintained
+/// by [`Points::push`]): the norm-trick panel kernels
+/// ([`simd::panel_rows`]) expand `‖x−y‖² = ‖x‖² + ‖y‖² − 2⟨x,y⟩` and
+/// would otherwise recompute `Θ(N)` norms on every batched scan. The
+/// cache is a pure function of the data (fixed summation chain), so
+/// derived equality and cloning stay consistent.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Points {
     d: usize,
     data: Vec<f64>,
+    /// `‖x_i‖²` per row, computed once by [`row_sq_norm`].
+    sq_norms: Vec<f64>,
+    /// Running maximum of `sq_norms` (0 when empty), folded in on push —
+    /// the panel error bounds query it once per batched scan, so it must
+    /// not cost an O(N) pass there.
+    max_sq_norm: f64,
+}
+
+/// Squared norm of one row: a fixed sequential `mul_add` chain, so the
+/// cache is deterministic across platforms (the panel-kernel error bound
+/// only needs *some* `O(d·ε)`-accurate value; determinism keeps batched
+/// runs reproducible).
+fn row_sq_norm(row: &[f64]) -> f64 {
+    row.iter().fold(0.0f64, |acc, &v| v.mul_add(v, acc))
 }
 
 impl Points {
@@ -22,13 +43,20 @@ impl Points {
     pub fn new(d: usize, data: Vec<f64>) -> Self {
         assert!(d > 0, "dimension must be positive");
         assert_eq!(data.len() % d, 0, "data length {} not a multiple of d={}", data.len(), d);
-        Points { d, data }
+        let sq_norms: Vec<f64> = data.chunks_exact(d).map(row_sq_norm).collect();
+        let max_sq_norm = sq_norms.iter().fold(0.0f64, |a, &b| a.max(b));
+        Points { d, data, sq_norms, max_sq_norm }
     }
 
     /// Empty set with capacity for `n` points.
     pub fn with_capacity(d: usize, n: usize) -> Self {
         assert!(d > 0);
-        Points { d, data: Vec::with_capacity(d * n) }
+        Points {
+            d,
+            data: Vec::with_capacity(d * n),
+            sq_norms: Vec::with_capacity(n),
+            max_sq_norm: 0.0,
+        }
     }
 
     /// Number of points.
@@ -56,11 +84,34 @@ impl Points {
     pub fn push(&mut self, p: &[f64]) {
         assert_eq!(p.len(), self.d);
         self.data.extend_from_slice(p);
+        let n = row_sq_norm(p);
+        self.sq_norms.push(n);
+        self.max_sq_norm = self.max_sq_norm.max(n);
     }
 
     /// Flat row-major storage.
     pub fn flat(&self) -> &[f64] {
         &self.data
+    }
+
+    /// Cached squared norm `‖x_i‖²` of row `i`.
+    #[inline]
+    pub fn sq_norm(&self, i: usize) -> f64 {
+        self.sq_norms[i]
+    }
+
+    /// The whole squared-norm cache, one entry per row.
+    pub fn sq_norms(&self) -> &[f64] {
+        &self.sq_norms
+    }
+
+    /// Largest cached squared norm (0 for an empty set) — the panel
+    /// kernels' per-scan error bounds are monotone in the row norm, so
+    /// this single cached value bounds every row of a scan at O(1) per
+    /// call (the fast path queries it every batched round).
+    #[inline]
+    pub fn max_sq_norm(&self) -> f64 {
+        self.max_sq_norm
     }
 
     /// Euclidean distance between rows i and j.
@@ -156,5 +207,36 @@ mod tests {
     fn push_wrong_dim_panics() {
         let mut p = Points::with_capacity(3, 1);
         p.push(&[1.0, 2.0]);
+    }
+
+    #[test]
+    fn sq_norm_cache_tracks_rows() {
+        let mut p = Points::new(2, vec![3.0, 4.0, 0.0, 0.0]);
+        assert_eq!(p.sq_norm(0), 25.0);
+        assert_eq!(p.sq_norm(1), 0.0);
+        assert_eq!(p.max_sq_norm(), 25.0);
+        p.push(&[6.0, 8.0]);
+        assert_eq!(p.sq_norm(2), 100.0);
+        assert_eq!(p.max_sq_norm(), 100.0);
+        assert_eq!(p.sq_norms().len(), p.len());
+        // select/project go through push, so their caches stay in sync.
+        let q = p.select(&[2, 0]);
+        assert_eq!(q.sq_norms(), &[100.0, 25.0]);
+    }
+
+    #[test]
+    fn sq_norm_matches_naive_within_tolerance() {
+        for d in [1usize, 3, 4, 7, 33] {
+            let data: Vec<f64> = (0..3 * d).map(|i| (i as f64 * 0.37).sin() * 2.0).collect();
+            let p = Points::new(d, data);
+            for i in 0..3 {
+                let naive: f64 = p.row(i).iter().map(|v| v * v).sum();
+                assert!(
+                    (p.sq_norm(i) - naive).abs() <= 1e-12 * naive.max(1.0),
+                    "d={d} i={i}: {} vs {naive}",
+                    p.sq_norm(i)
+                );
+            }
+        }
     }
 }

@@ -50,9 +50,16 @@ type KernelFn = unsafe fn(&[f64], &[f64]) -> f64;
 /// implementation's CPU features.
 type RowsFn = unsafe fn(&[f64], &[f64], &mut [f64]);
 
+/// Panel-scan form (the fast norm-trick path, see [`panel_rows`]):
+/// `(queries, q_sq_norms, rows, row_sq_norms, d, out, out_stride)`.
+/// SAFETY contract: shape invariants asserted by [`panel_rows`], plus
+/// the implementation's CPU features.
+type PanelFn = unsafe fn(&[f64], &[f64], &[f64], &[f64], usize, &mut [f64], usize);
+
 struct Selected {
     kernel: KernelFn,
     rows: RowsFn,
+    panel: PanelFn,
     name: &'static str,
 }
 
@@ -67,6 +74,7 @@ fn selected() -> &'static Selected {
                 return Selected {
                     kernel: avx2::squared_euclidean,
                     rows: avx2::euclidean_rows,
+                    panel: avx2::panel_rows,
                     name: "avx2+fma",
                 };
             }
@@ -77,11 +85,17 @@ fn selected() -> &'static Selected {
                 return Selected {
                     kernel: neon::squared_euclidean,
                     rows: neon::euclidean_rows,
+                    panel: neon::panel_rows,
                     name: "neon",
                 };
             }
         }
-        Selected { kernel: portable_kernel, rows: portable_rows, name: "portable" }
+        Selected {
+            kernel: portable_kernel,
+            rows: portable_rows,
+            panel: portable_panel,
+            name: "portable",
+        }
     })
 }
 
@@ -121,6 +135,151 @@ pub fn euclidean_rows(q: &[f64], rows: &[f64], out: &mut [f64]) {
     // SAFETY: CPU features were verified when the implementation was
     // selected, and the slice-shape contract was just asserted.
     unsafe { (sel.rows)(q, rows, out) }
+}
+
+/// Fast-path panel scan through the norm identity
+/// `‖x−y‖² = ‖x‖² + ‖y‖² − 2⟨x,y⟩`.
+///
+/// Writes `out[q·out_stride + j] = sqrt(max(q_sq_norms[q] +
+/// row_sq_norms[j] − 2·⟨queries[q], rows[j]⟩, 0))` for every query `q`
+/// and row `j`. The SIMD implementations process queries in panels of
+/// four, so each row block is loaded from cache **once per four
+/// queries** instead of once per query — the GEMM-style register
+/// blocking that makes the batched scan compute-bound (only the dot
+/// product is O(d); norms come from the [`crate::data::Points`] cache).
+///
+/// **Not** bitwise-equal to the canonical difference-form kernel: the
+/// dot-product form commits rounding at the scale of the *norms*, which
+/// can dwarf a small distance (catastrophic cancellation). Callers that
+/// need exactness must pair every use with [`panel_error_bound`] — a
+/// rigorous bound on the squared-distance discrepancy — and re-verify
+/// anything decision-relevant through the canonical kernel (the
+/// engine's guard band, see `DESIGN.md`).
+///
+/// Within that caveat the panel kernels are still *deterministic*: all
+/// three implementations accumulate the dot product on the same four
+/// lanes with the same `((l0+l2)+(l1+l3))+tail` reduction as the
+/// canonical kernel, so AVX2, NEON and portable agree **bitwise** with
+/// [`panel_rows_portable`], and results are independent of panel
+/// grouping, block boundaries and thread splits.
+///
+/// Shape contract: `queries.len() == q_sq_norms.len()·d`, `rows.len()
+/// == row_sq_norms.len()·d`, `out_stride ≥ row_sq_norms.len()`, and
+/// `out` must cover `(q_sq_norms.len()−1)·out_stride +
+/// row_sq_norms.len()` entries.
+pub fn panel_rows(
+    queries: &[f64],
+    q_sq_norms: &[f64],
+    rows: &[f64],
+    row_sq_norms: &[f64],
+    d: usize,
+    out: &mut [f64],
+    out_stride: usize,
+) {
+    let (nq, nr) = (q_sq_norms.len(), row_sq_norms.len());
+    assert_eq!(queries.len(), nq * d, "queries must be q_sq_norms.len() × d");
+    assert_eq!(rows.len(), nr * d, "rows must be row_sq_norms.len() × d");
+    if nq == 0 || nr == 0 {
+        return;
+    }
+    assert!(out_stride >= nr, "out_stride {out_stride} narrower than row count {nr}");
+    assert!(
+        out.len() >= (nq - 1) * out_stride + nr,
+        "out too short for {nq} query rows at stride {out_stride}"
+    );
+    let sel = selected();
+    // SAFETY: CPU features were verified at selection; the shape
+    // invariants the implementations index by were just asserted.
+    unsafe { (sel.panel)(queries, q_sq_norms, rows, row_sq_norms, d, out, out_stride) }
+}
+
+/// Rigorous bound on `|panel squared distance − canonical squared
+/// distance|` for any pair whose cached squared norms are at most `nx`
+/// and `ny`.
+///
+/// Derivation (ε = unit roundoff, γ_k = kε/(1−kε) ≈ kε): the fused
+/// four-lane dot product errs by at most `γ_{⌈d/4⌉+3}·Σ|x_i·y_i| ≤
+/// γ_d·(nx+ny)/2` (AM–GM per term); each cached norm carries `≤ γ_d`
+/// relative error; the `(nx+ny) − 2·dot` combination adds 3 rounding
+/// steps on operands bounded by `3(nx+ny)`; and the canonical kernel
+/// itself sits within `γ_{d+2}·‖x−y‖² ≤ γ_{d+2}·2(nx+ny)` of the real
+/// value. Summing: `< (7/2·d + O(1))·ε·(nx+ny)`; the `4d+8` constant
+/// covers it with slack for every `d·ε ≪ 1`. The
+/// `panel_error_bound_dominates_observed_gap` test pins the bound
+/// against measured gaps across scales.
+///
+/// The bound on the *distance* (after `sqrt`) is `e.sqrt()`: for
+/// `a, b ≥ 0`, `|√a − √b| ≤ √|a−b|`, and the panel kernel's clamp to 0
+/// only moves its value toward the true root.
+pub fn panel_error_bound(d: usize, nx: f64, ny: f64) -> f64 {
+    (4.0 * d as f64 + 8.0) * f64::EPSILON * (nx + ny)
+}
+
+/// Portable reference implementation of the panel scan. Public so tests
+/// can hold the dispatched panel to it — unlike the canonical kernel's
+/// exactness contract this equality is a *determinism* pin, not an
+/// accuracy one (see [`panel_rows`]).
+pub fn panel_rows_portable(
+    queries: &[f64],
+    q_sq_norms: &[f64],
+    rows: &[f64],
+    row_sq_norms: &[f64],
+    d: usize,
+    out: &mut [f64],
+    out_stride: usize,
+) {
+    // SAFETY: no CPU features required; shape contract is the caller's
+    // (tests call with the same shapes they hand panel_rows).
+    unsafe { portable_panel(queries, q_sq_norms, rows, row_sq_norms, d, out, out_stride) }
+}
+
+/// Four-lane fused dot product: the panel kernels' shared accumulation
+/// chain (lane `l` owns elements `4c+l`, reduction
+/// `((l0+l2)+(l1+l3))+tail`) — the same chain the SIMD panels execute,
+/// which is what makes them bitwise-reproducible.
+fn dot_portable(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let base = c * 4;
+        for (lane, slot) in acc.iter_mut().enumerate() {
+            *slot = a[base + lane].mul_add(b[base + lane], *slot);
+        }
+    }
+    let mut tail = 0.0f64;
+    for i in chunks * 4..a.len() {
+        tail = a[i].mul_add(b[i], tail);
+    }
+    ((acc[0] + acc[2]) + (acc[1] + acc[3])) + tail
+}
+
+/// Norm-identity combine step shared by every panel implementation:
+/// correctly-rounded scalar ops only (`2.0·dot` is exact), so the
+/// combine never contributes cross-implementation divergence.
+#[inline]
+fn panel_combine(qn: f64, rn: f64, dot: f64) -> f64 {
+    ((qn + rn) - 2.0 * dot).max(0.0).sqrt()
+}
+
+/// Portable panel scan (see [`PanelFn`]).
+unsafe fn portable_panel(
+    queries: &[f64],
+    q_sq_norms: &[f64],
+    rows: &[f64],
+    row_sq_norms: &[f64],
+    d: usize,
+    out: &mut [f64],
+    out_stride: usize,
+) {
+    for (qi, &qn) in q_sq_norms.iter().enumerate() {
+        let q = &queries[qi * d..(qi + 1) * d];
+        let base = qi * out_stride;
+        for (j, &rn) in row_sq_norms.iter().enumerate() {
+            let dot = dot_portable(q, &rows[j * d..(j + 1) * d]);
+            out[base + j] = panel_combine(qn, rn, dot);
+        }
+    }
 }
 
 /// The portable reference kernel: the canonical expression in scalar
@@ -208,6 +367,103 @@ mod avx2 {
             *o = squared_euclidean(q, &rows[j * d..(j + 1) * d]).sqrt();
         }
     }
+
+    /// `((l0+l2)+(l1+l3))` reduction of a 4-lane accumulator — the same
+    /// tree as the canonical kernel's. Carries the caller's features so
+    /// it inlines into the panel loops.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn hsum(acc: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(acc); // [l0, l1]
+        let hi = _mm256_extractf128_pd::<1>(acc); // [l2, l3]
+        let pair = _mm_add_pd(lo, hi); // [l0+l2, l1+l3]
+        let upper = _mm_unpackhi_pd(pair, pair);
+        _mm_cvtsd_f64(_mm_add_sd(pair, upper))
+    }
+
+    /// Panel scan on AVX2+FMA (see `PanelFn` / `panel_rows`): queries in
+    /// groups of four, each with its own 4-lane accumulator, so every
+    /// row-block load from cache feeds four FMAs. The per-query chain
+    /// (4-lane FMA dot, canonical reduce, scalar FMA tail) is identical
+    /// in the 4-panel and the remainder loop — results do not depend on
+    /// how queries were grouped, and match `dot_portable` bitwise.
+    ///
+    /// SAFETY: AVX2+FMA available, plus the `panel_rows` shape contract.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn panel_rows(
+        queries: &[f64],
+        q_sq_norms: &[f64],
+        rows: &[f64],
+        row_sq_norms: &[f64],
+        d: usize,
+        out: &mut [f64],
+        out_stride: usize,
+    ) {
+        let nq = q_sq_norms.len();
+        let chunks = d / 4;
+        let qp = queries.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut qi = 0usize;
+        while qi + 4 <= nq {
+            let q0 = qp.add(qi * d);
+            let q1 = qp.add((qi + 1) * d);
+            let q2 = qp.add((qi + 2) * d);
+            let q3 = qp.add((qi + 3) * d);
+            for (j, &rn) in row_sq_norms.iter().enumerate() {
+                let r = rows.as_ptr().add(j * d);
+                let mut a0 = _mm256_setzero_pd();
+                let mut a1 = _mm256_setzero_pd();
+                let mut a2 = _mm256_setzero_pd();
+                let mut a3 = _mm256_setzero_pd();
+                for c in 0..chunks {
+                    let vr = _mm256_loadu_pd(r.add(c * 4));
+                    a0 = _mm256_fmadd_pd(_mm256_loadu_pd(q0.add(c * 4)), vr, a0);
+                    a1 = _mm256_fmadd_pd(_mm256_loadu_pd(q1.add(c * 4)), vr, a1);
+                    a2 = _mm256_fmadd_pd(_mm256_loadu_pd(q2.add(c * 4)), vr, a2);
+                    a3 = _mm256_fmadd_pd(_mm256_loadu_pd(q3.add(c * 4)), vr, a3);
+                }
+                let (mut t0, mut t1, mut t2, mut t3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                for i in chunks * 4..d {
+                    let rv = *r.add(i);
+                    t0 = (*q0.add(i)).mul_add(rv, t0);
+                    t1 = (*q1.add(i)).mul_add(rv, t1);
+                    t2 = (*q2.add(i)).mul_add(rv, t2);
+                    t3 = (*q3.add(i)).mul_add(rv, t3);
+                }
+                *op.add(qi * out_stride + j) = super::panel_combine(q_sq_norms[qi], rn, hsum(a0) + t0);
+                *op.add((qi + 1) * out_stride + j) =
+                    super::panel_combine(q_sq_norms[qi + 1], rn, hsum(a1) + t1);
+                *op.add((qi + 2) * out_stride + j) =
+                    super::panel_combine(q_sq_norms[qi + 2], rn, hsum(a2) + t2);
+                *op.add((qi + 3) * out_stride + j) =
+                    super::panel_combine(q_sq_norms[qi + 3], rn, hsum(a3) + t3);
+            }
+            qi += 4;
+        }
+        while qi < nq {
+            let q = qp.add(qi * d);
+            for (j, &rn) in row_sq_norms.iter().enumerate() {
+                let r = rows.as_ptr().add(j * d);
+                let mut acc = _mm256_setzero_pd();
+                for c in 0..chunks {
+                    acc = _mm256_fmadd_pd(
+                        _mm256_loadu_pd(q.add(c * 4)),
+                        _mm256_loadu_pd(r.add(c * 4)),
+                        acc,
+                    );
+                }
+                let mut tail = 0.0f64;
+                for i in chunks * 4..d {
+                    tail = (*q.add(i)).mul_add(*r.add(i), tail);
+                }
+                *op.add(qi * out_stride + j) =
+                    super::panel_combine(q_sq_norms[qi], rn, hsum(acc) + tail);
+            }
+            qi += 1;
+        }
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -255,6 +511,115 @@ mod neon {
         let d = q.len();
         for (j, o) in out.iter_mut().enumerate() {
             *o = squared_euclidean(q, &rows[j * d..(j + 1) * d]).sqrt();
+        }
+    }
+
+    /// Single-query fused dot on the canonical four lanes (acc01 holds
+    /// lanes {0,1}, acc23 lanes {2,3}), reduction
+    /// `((l0+l2)+(l1+l3))+tail` — bitwise the portable chain.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn dot(q: *const f64, r: *const f64, d: usize) -> f64 {
+        let chunks = d / 4;
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        for c in 0..chunks {
+            let base = c * 4;
+            acc01 = vfmaq_f64(acc01, vld1q_f64(q.add(base)), vld1q_f64(r.add(base)));
+            acc23 = vfmaq_f64(acc23, vld1q_f64(q.add(base + 2)), vld1q_f64(r.add(base + 2)));
+        }
+        let pair = vaddq_f64(acc01, acc23); // [l0+l2, l1+l3]
+        let head = vgetq_lane_f64::<0>(pair) + vgetq_lane_f64::<1>(pair);
+        let mut tail = 0.0f64;
+        for i in chunks * 4..d {
+            tail = (*q.add(i)).mul_add(*r.add(i), tail);
+        }
+        head + tail
+    }
+
+    /// Panel scan on NEON (see `PanelFn` / `panel_rows`): queries in
+    /// groups of four, eight f64x2 accumulators, each row-block load
+    /// shared by four FMAs per register pair. Per-query chains match
+    /// [`dot`] (and `dot_portable`) bitwise, so grouping is
+    /// unobservable.
+    ///
+    /// SAFETY: NEON available, plus the `panel_rows` shape contract.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn panel_rows(
+        queries: &[f64],
+        q_sq_norms: &[f64],
+        rows: &[f64],
+        row_sq_norms: &[f64],
+        d: usize,
+        out: &mut [f64],
+        out_stride: usize,
+    ) {
+        let nq = q_sq_norms.len();
+        let chunks = d / 4;
+        let qp = queries.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut qi = 0usize;
+        while qi + 4 <= nq {
+            let q0 = qp.add(qi * d);
+            let q1 = qp.add((qi + 1) * d);
+            let q2 = qp.add((qi + 2) * d);
+            let q3 = qp.add((qi + 3) * d);
+            for (j, &rn) in row_sq_norms.iter().enumerate() {
+                let r = rows.as_ptr().add(j * d);
+                let mut a0_01 = vdupq_n_f64(0.0);
+                let mut a0_23 = vdupq_n_f64(0.0);
+                let mut a1_01 = vdupq_n_f64(0.0);
+                let mut a1_23 = vdupq_n_f64(0.0);
+                let mut a2_01 = vdupq_n_f64(0.0);
+                let mut a2_23 = vdupq_n_f64(0.0);
+                let mut a3_01 = vdupq_n_f64(0.0);
+                let mut a3_23 = vdupq_n_f64(0.0);
+                for c in 0..chunks {
+                    let base = c * 4;
+                    let r01 = vld1q_f64(r.add(base));
+                    let r23 = vld1q_f64(r.add(base + 2));
+                    a0_01 = vfmaq_f64(a0_01, vld1q_f64(q0.add(base)), r01);
+                    a0_23 = vfmaq_f64(a0_23, vld1q_f64(q0.add(base + 2)), r23);
+                    a1_01 = vfmaq_f64(a1_01, vld1q_f64(q1.add(base)), r01);
+                    a1_23 = vfmaq_f64(a1_23, vld1q_f64(q1.add(base + 2)), r23);
+                    a2_01 = vfmaq_f64(a2_01, vld1q_f64(q2.add(base)), r01);
+                    a2_23 = vfmaq_f64(a2_23, vld1q_f64(q2.add(base + 2)), r23);
+                    a3_01 = vfmaq_f64(a3_01, vld1q_f64(q3.add(base)), r01);
+                    a3_23 = vfmaq_f64(a3_23, vld1q_f64(q3.add(base + 2)), r23);
+                }
+                let (mut t0, mut t1, mut t2, mut t3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                for i in chunks * 4..d {
+                    let rv = *r.add(i);
+                    t0 = (*q0.add(i)).mul_add(rv, t0);
+                    t1 = (*q1.add(i)).mul_add(rv, t1);
+                    t2 = (*q2.add(i)).mul_add(rv, t2);
+                    t3 = (*q3.add(i)).mul_add(rv, t3);
+                }
+                let p0 = vaddq_f64(a0_01, a0_23);
+                let p1 = vaddq_f64(a1_01, a1_23);
+                let p2 = vaddq_f64(a2_01, a2_23);
+                let p3 = vaddq_f64(a3_01, a3_23);
+                let d0 = (vgetq_lane_f64::<0>(p0) + vgetq_lane_f64::<1>(p0)) + t0;
+                let d1 = (vgetq_lane_f64::<0>(p1) + vgetq_lane_f64::<1>(p1)) + t1;
+                let d2 = (vgetq_lane_f64::<0>(p2) + vgetq_lane_f64::<1>(p2)) + t2;
+                let d3 = (vgetq_lane_f64::<0>(p3) + vgetq_lane_f64::<1>(p3)) + t3;
+                *op.add(qi * out_stride + j) = super::panel_combine(q_sq_norms[qi], rn, d0);
+                *op.add((qi + 1) * out_stride + j) =
+                    super::panel_combine(q_sq_norms[qi + 1], rn, d1);
+                *op.add((qi + 2) * out_stride + j) =
+                    super::panel_combine(q_sq_norms[qi + 2], rn, d2);
+                *op.add((qi + 3) * out_stride + j) =
+                    super::panel_combine(q_sq_norms[qi + 3], rn, d3);
+            }
+            qi += 4;
+        }
+        while qi < nq {
+            let q = qp.add(qi * d);
+            for (j, &rn) in row_sq_norms.iter().enumerate() {
+                let dp = dot(q, rows.as_ptr().add(j * d), d);
+                *op.add(qi * out_stride + j) = super::panel_combine(q_sq_norms[qi], rn, dp);
+            }
+            qi += 1;
         }
     }
 }
@@ -330,5 +695,149 @@ mod tests {
     #[should_panic(expected = "equal length")]
     fn length_mismatch_panics() {
         let _ = squared_euclidean(&[1.0, 2.0], &[1.0]);
+    }
+
+    /// Pseudo-random panel fixture: `nq` queries and `nr` rows at
+    /// dimension `d`, coordinates scaled by `scale`, plus both caches.
+    fn panel_fixture(
+        nq: usize,
+        nr: usize,
+        d: usize,
+        scale: f64,
+        seed: u64,
+    ) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let coord = |i: usize| ((i as f64 + seed as f64 * 0.61).sin() * 1.7 + 0.3) * scale;
+        let queries: Vec<f64> = (0..nq * d).map(coord).collect();
+        let rows: Vec<f64> = (0..nr * d).map(|i| coord(i + 1_000_003)).collect();
+        let sq = |v: &[f64]| -> Vec<f64> {
+            v.chunks_exact(d)
+                .map(|r| r.iter().fold(0.0f64, |a, &x| x.mul_add(x, a)))
+                .collect()
+        };
+        let qn = sq(&queries);
+        let rn = sq(&rows);
+        (queries, qn, rows, rn)
+    }
+
+    #[test]
+    fn panel_matches_portable_panel_bitwise() {
+        // Determinism pin: the dispatched panel, the portable panel, and
+        // every query-grouping (the remainder loop handles nq mod 4)
+        // agree bitwise — so thread splits and panel widths are
+        // unobservable in fast-path output.
+        for d in [1usize, 2, 3, 4, 5, 7, 10, 100, 101] {
+            for nq in [1usize, 2, 3, 4, 5, 6, 9] {
+                let (q, qn, r, rn) = panel_fixture(nq, 11, d, 1.0, d as u64 + nq as u64);
+                let mut got = vec![-1.0; nq * 11];
+                panel_rows(&q, &qn, &r, &rn, d, &mut got, 11);
+                let mut reference = vec![-1.0; nq * 11];
+                panel_rows_portable(&q, &qn, &r, &rn, d, &mut reference, 11);
+                assert!(
+                    got == reference,
+                    "d={d} nq={nq} kernel={}: dispatched panel diverged from portable",
+                    kernel_name()
+                );
+                // Splitting the query set must reproduce the joint run.
+                for split in 1..nq {
+                    let mut parts = vec![-1.0; nq * 11];
+                    panel_rows(&q[..split * d], &qn[..split], &r, &rn, d, &mut parts, 11);
+                    panel_rows(
+                        &q[split * d..],
+                        &qn[split..],
+                        &r,
+                        &rn,
+                        d,
+                        &mut parts[split * 11..],
+                        11,
+                    );
+                    assert!(parts == got, "d={d} nq={nq} split={split}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_error_bound_dominates_observed_gap() {
+        // The guard-band exactness argument rests on this: the *measured*
+        // |panel − canonical| gap — squared and after sqrt — must stay
+        // inside panel_error_bound at every scale, including the 1e12
+        // adversarial coordinate scale and near-duplicate rows where the
+        // norm trick cancels catastrophically.
+        for &scale in &[1.0, 1e-6, 1e6, 1e12] {
+            for d in [1usize, 2, 3, 5, 10, 100] {
+                let (q, qn, r, rn) = panel_fixture(5, 23, d, scale, d as u64);
+                let mut fast = vec![0.0; 5 * 23];
+                panel_rows(&q, &qn, &r, &rn, d, &mut fast, 23);
+                for (qi, &qnv) in qn.iter().enumerate() {
+                    for (j, &rnv) in rn.iter().enumerate() {
+                        let e = panel_error_bound(d, qnv, rnv);
+                        let canon_sq =
+                            squared_euclidean(&q[qi * d..(qi + 1) * d], &r[j * d..(j + 1) * d]);
+                        let fast_d = fast[qi * 23 + j];
+                        let gap_sq = (fast_d * fast_d - canon_sq).abs();
+                        assert!(
+                            gap_sq <= e,
+                            "scale={scale} d={d} ({qi},{j}): sq gap {gap_sq} > bound {e}"
+                        );
+                        let gap_d = (fast_d - canon_sq.sqrt()).abs();
+                        assert!(
+                            gap_d <= e.sqrt(),
+                            "scale={scale} d={d} ({qi},{j}): dist gap {gap_d} > {}",
+                            e.sqrt()
+                        );
+                    }
+                }
+            }
+        }
+        // Catastrophic cancellation: rows equal to a query up to one ulp
+        // at huge norms — the panel distance may be garbage relative to
+        // the true (tiny) distance, but must stay inside the bound.
+        let d = 8usize;
+        let q: Vec<f64> = (0..d).map(|i| 1e12 + i as f64 * 3.0e5).collect();
+        let mut r = q.clone();
+        r[3] += 1.0;
+        let qn = vec![q.iter().fold(0.0f64, |a, &x| x.mul_add(x, a))];
+        let rn = vec![r.iter().fold(0.0f64, |a, &x| x.mul_add(x, a))];
+        let mut out = vec![0.0];
+        panel_rows(&q, &qn, &r, &rn, d, &mut out, 1);
+        let canon = squared_euclidean(&q, &r).sqrt();
+        let e = panel_error_bound(d, qn[0], rn[0]);
+        assert!(
+            (out[0] - canon).abs() <= e.sqrt(),
+            "cancellation: panel {} vs canonical {canon}, bound {}",
+            out[0],
+            e.sqrt()
+        );
+    }
+
+    #[test]
+    fn panel_clamps_identical_pairs_to_zero_distance() {
+        let d = 5usize;
+        let (q, qn, _, _) = panel_fixture(1, 1, d, 1e6, 9);
+        // Row identical to the query: the norm identity can go slightly
+        // negative in floats; the clamp must return exactly 0-or-positive
+        // and the guard must cover the gap to the canonical 0.
+        let mut out = vec![-1.0];
+        panel_rows(&q, &qn, &q, &qn, d, &mut out, 1);
+        assert!(out[0] >= 0.0 && out[0] <= panel_error_bound(d, qn[0], qn[0]).sqrt());
+    }
+
+    #[test]
+    fn panel_stride_writes_only_its_columns() {
+        let d = 3usize;
+        let (q, qn, r, rn) = panel_fixture(2, 4, d, 1.0, 3);
+        // stride 10, block written at offset 0: columns 4..10 untouched.
+        let mut out = vec![f64::NAN; 2 * 10];
+        panel_rows(&q, &qn, &r, &rn, d, &mut out[..14], 10);
+        for qi in 0..2 {
+            for j in 0..4 {
+                assert!(out[qi * 10 + j].is_finite());
+            }
+            for j in 4..10 {
+                if qi * 10 + j < 14 {
+                    assert!(out[qi * 10 + j].is_nan(), "column {j} of query {qi} clobbered");
+                }
+            }
+        }
     }
 }

@@ -38,6 +38,39 @@
 //! Selection is unaffected either way: each candidate is bound-tested
 //! once, at its visit, before it is ever computed.
 //!
+//! ## The fast kernel and the guard band ([`Kernel::Fast`])
+//!
+//! With [`EngineOpts::kernel`] = [`Kernel::Fast`] each round first asks
+//! the space for an approximate batch
+//! ([`EliminationSpace::compute_batch_fast`] — on vector metrics, the
+//! norm-trick panel scan) which also reports a rigorous per-query bound
+//! `e_q` on the squared-distance error. Exactness is preserved by a
+//! **guard band** around every decision the rule makes:
+//!
+//! * A computed element whose approximate sum `Ŝ` satisfies
+//!   `Ŝ − E_q < threshold` — i.e. whose canonical sum *could* fall below
+//!   the rule's threshold (`E_q` bounds `|Ŝ − S_canonical|` via `n·√e_q`
+//!   plus both summations' rounding) — is **recomputed through the
+//!   canonical kernel** before the rule observes it. Since every rule
+//!   update requires `sum < threshold` strictly, any element that can
+//!   change rule state is observed with its exact sum; elements observed
+//!   approximately are certainly at-or-above the threshold and provably
+//!   cannot update. Hence the returned medoid / top-k set / cluster
+//!   medoid, and every sum the rule keeps, are **identical to the exact
+//!   kernel's** — all reported sums come from the canonical kernel.
+//! * Propagated bounds from an approximate row are **deflated** by the
+//!   full guard (`E_q + n·√e_q`), so they remain sound lower bounds on
+//!   canonical sums: the true medoid can never be eliminated by panel
+//!   rounding. Deflation only weakens bounds by `O(n·√(d·ε)·‖x‖)` —
+//!   orders of magnitude below the sum gaps elimination feeds on — so
+//!   in practice >99% of scan work stays on the fast path and only
+//!   near-threshold survivors pay a canonical recompute
+//!   ([`EngineRun::refined`] counts them).
+//!
+//! Spaces without a fast path (graphs, subsets, XLA) decline the fast
+//! round and the engine transparently computes through the canonical
+//! kernel — `Kernel::Fast` is then exactly `Kernel::Exact`.
+//!
 //! Directed (quasi-metric) spaces use the one-sided bounds of the seed
 //! implementation: a computed element also does a reverse pass, giving
 //! `S_out(j) ≥ S_out(i) − N·d(i,j)` and `S_out(j) ≥ N·d(j,i) − S_in(i)`.
@@ -49,6 +82,38 @@ pub use rules::{BestSumRule, ClusterMedoidRule, EliminationRule, TopKSumRule};
 pub use space::{EliminationSpace, FullSpace, SubsetSpace};
 
 use crate::metric::MetricSpace;
+
+/// Distance-kernel selection for engine compute rounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// The canonical difference-form kernel on every row: bitwise-pinned
+    /// across platforms, the reference every result is defined against.
+    Exact,
+    /// The norm-trick panel kernel with guard-band exact refinement (see
+    /// the module docs): identical medoids and bit-identical reported
+    /// sums, most scan work on a much faster GEMM-style path. Falls back
+    /// to `Exact` wherever the space offers no fast compute.
+    Fast,
+}
+
+impl Kernel {
+    /// Parse `"exact"` or `"fast"`; anything else is `None`.
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s {
+            "exact" => Some(Kernel::Exact),
+            "fast" => Some(Kernel::Fast),
+            _ => None,
+        }
+    }
+
+    /// The CLI/env token for this kernel.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Exact => "exact",
+            Kernel::Fast => "fast",
+        }
+    }
+}
 
 /// Options for [`run_elimination`].
 #[derive(Clone, Debug)]
@@ -73,11 +138,23 @@ pub struct EngineOpts {
     pub slack: f64,
     /// Record `(visit position, item)` for every compute (paper Fig. 7).
     pub record_trace: bool,
+    /// Compute kernel for the rounds. The engine-level default is
+    /// [`Kernel::Exact`] — the bit-for-bit reproduction contract — and
+    /// the algorithm opt structs opt into [`Kernel::Fast`] (their
+    /// default for vector workloads).
+    pub kernel: Kernel,
 }
 
 impl Default for EngineOpts {
     fn default() -> Self {
-        EngineOpts { batch: 1, batch_auto: false, eps: 0.0, slack: 0.0, record_trace: false }
+        EngineOpts {
+            batch: 1,
+            batch_auto: false,
+            eps: 0.0,
+            slack: 0.0,
+            record_trace: false,
+            kernel: Kernel::Exact,
+        }
     }
 }
 
@@ -87,6 +164,12 @@ impl Default for EngineOpts {
 pub struct EngineRun {
     /// Elements computed (one-to-all passes per element; the paper's n̂).
     pub computed: u64,
+    /// Fast-path elements recomputed through the canonical kernel by the
+    /// guard band (each is one extra one-to-all pass on the backend, so
+    /// `computed + refined` matches a `Counted` wrapper's `one_to_all`).
+    /// Always 0 under [`Kernel::Exact`] or when the space has no fast
+    /// path; structurally `refined ≤ computed`.
+    pub refined: u64,
     /// Batched compute rounds issued.
     pub rounds: u64,
     /// If requested: (visit position, item) per compute, in order.
@@ -120,6 +203,7 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
     let mut b_cur = if opts.batch_auto { 1 } else { b_max };
 
     let mut computed = 0u64;
+    let mut refined = 0u64;
     let mut rounds = 0u64;
     let mut trace = opts.record_trace.then(Vec::new);
 
@@ -133,6 +217,15 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
     // The propagation pass skips them — see the module docs (an ulp of
     // rounding in |S(i) − N·d| must not raise an exact bound).
     let mut tight = vec![false; n];
+    // Fast-path round state (all zero on exact rounds, so the shared
+    // propagation loop below stays bit-identical to the exact path):
+    // per-query squared-error bound from the panel kernel, the derived
+    // per-distance guard g = √e, and the per-sum guard E.
+    let try_fast = opts.kernel == Kernel::Fast && symmetric;
+    let mut guards = vec![0.0f64; b_max];
+    let mut g_dist = vec![0.0f64; b_max];
+    let mut e_sum = vec![0.0f64; b_max];
+    let mut scratch: Vec<f64> = Vec::new();
 
     let mut cursor = 0usize;
     while cursor < order.len() {
@@ -161,20 +254,54 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
             d_in.resize(k * n, 0.0);
         }
 
-        // Compute the round in one batched call (lines 5-8).
-        space.compute_batch(&ids, &mut d_out[..k * n]);
-        if !symmetric {
-            space.compute_batch_rev(&ids, &mut d_in[..k * n]);
+        // Compute the round in one batched call (lines 5-8) — through
+        // the fast panel kernel when selected and available, else the
+        // canonical kernel.
+        let fast = try_fast
+            && space.compute_batch_fast(
+                &ids,
+                &mut d_out[..k * n],
+                &mut guards[..k],
+                &mut scratch,
+            );
+        if !fast {
+            space.compute_batch(&ids, &mut d_out[..k * n]);
+            if !symmetric {
+                space.compute_batch_rev(&ids, &mut d_in[..k * n]);
+            }
         }
         rounds += 1;
 
-        // Exact sums: tighten the computed items and feed the rule, in
-        // visit order (so acceptance ties break exactly as sequentially).
+        // Sums: tighten the computed items and feed the rule, in visit
+        // order (so acceptance ties break exactly as sequentially). On a
+        // fast round, any element whose canonical sum could fall below
+        // the rule's current threshold is first recomputed through the
+        // canonical kernel (the guard band): every rule update requires
+        // `sum < threshold` strictly, so rule state — and hence the
+        // returned result — only ever absorbs canonical-exact sums.
         for (q, &(pos, i)) in batch.iter().enumerate() {
-            let row = &d_out[q * n..(q + 1) * n];
-            let s_out: f64 = row.iter().sum();
+            let row = &mut d_out[q * n..(q + 1) * n];
+            let mut s_out: f64 = row.iter().sum();
+            let (mut g, mut e) = (0.0f64, 0.0f64);
+            if fast {
+                // |Ŝ − S_canonical| ≤ n·√e_q (per-distance guard) plus
+                // the two n-term summations' own rounding.
+                g = guards[q].sqrt();
+                e = nf * g + 2.0 * nf * f64::EPSILON * (s_out.abs() + nf * g);
+                if s_out - e < rule.threshold() {
+                    space.compute_batch(std::slice::from_ref(&ids[q]), row);
+                    s_out = row.iter().sum();
+                    refined += 1;
+                    g = 0.0;
+                    e = 0.0;
+                }
+            }
             sums_out[q] = s_out;
-            lb[i] = s_out; // exact from here on
+            g_dist[q] = g;
+            e_sum[q] = e;
+            // Exact elements keep their canonical sum as the final bound;
+            // approximate ones get the deflated (provably sound) value.
+            lb[i] = (s_out - e).max(0.0);
             tight[i] = true;
             rule.observe(i, s_out, row);
             if !symmetric {
@@ -193,9 +320,16 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
         // k = 1 reproduces the sequential update exactly. Computed items
         // are skipped: their bounds are exact, and float rounding in the
         // propagated bound could otherwise raise one past its own sum.
+        // Bounds propagated from an approximate (fast, unrefined) row
+        // are deflated by its full guard — sum error plus N times the
+        // per-distance error — so they stay sound lower bounds on
+        // canonical sums; on exact rows the deflation is exactly 0.0 and
+        // the arithmetic (x.abs() − 0.0) is bit-identical to the exact
+        // path's.
         if symmetric {
             for q in 0..k {
                 let s_out = sums_out[q];
+                let defl = e_sum[q] + nf * g_dist[q];
                 let row = &d_out[q * n..(q + 1) * n];
                 for ((l, &d), &is_tight) in
                     lb.iter_mut().zip(row.iter()).zip(tight.iter())
@@ -203,7 +337,7 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
                     if is_tight {
                         continue;
                     }
-                    let bound = (s_out - nf * d).abs();
+                    let bound = (s_out - nf * d).abs() - defl;
                     if bound > *l {
                         *l = bound;
                     }
@@ -234,7 +368,7 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
         }
     }
 
-    EngineRun { computed, rounds, trace }
+    EngineRun { computed, refined, rounds, trace }
 }
 
 /// Exact distance sums of `ids`, computed `batch` elements per
@@ -353,6 +487,81 @@ mod tests {
         assert_eq!(ia, ib);
         assert!(sa == sb);
         assert!(lba.iter().zip(&lbb).all(|(x, y)| x == y));
+    }
+
+    #[test]
+    fn fast_kernel_same_best_sum_bitwise_and_counts_refines() {
+        let n = 600usize;
+        let m = VectorMetric::new(uniform_cube(n, 3, 21));
+        let order: Vec<usize> = (0..n).collect();
+        let run = |kernel: Kernel| {
+            let mut lb = vec![0.0; n];
+            let mut rule = BestSumRule::new();
+            let r = run_elimination(
+                &FullSpace::new(&m),
+                &order,
+                &mut lb,
+                &mut rule,
+                &EngineOpts { batch: 16, kernel, ..Default::default() },
+            );
+            (r, rule.best_item, rule.best_sum, lb)
+        };
+        let (re, ie, se, lbe) = run(Kernel::Exact);
+        let (rf, i_f, sf, lbf) = run(Kernel::Fast);
+        assert_eq!(re.refined, 0, "exact rounds must not refine");
+        assert_eq!(i_f, ie, "fast kernel must find the identical medoid");
+        assert!(sf == se, "best sum must be bit-identical: {sf} vs {se}");
+        // The guard band engaged (round 1 always refines against the
+        // infinite threshold) and stayed a band, not a full recompute.
+        assert!(rf.refined >= 1 && rf.refined <= rf.computed);
+        // Fast-path bounds are deflated but must remain sound.
+        let mut row = vec![0.0; n];
+        for j in 0..n {
+            m.one_to_all(j, &mut row);
+            let s: f64 = row.iter().sum();
+            assert!(lbf[j] <= s + 1e-7, "fast bound {} > sum {s} at {j}", lbf[j]);
+            assert!(lbe[j] <= s + 1e-7);
+        }
+    }
+
+    #[test]
+    fn fast_kernel_without_fast_path_is_exact_kernel() {
+        // A space that declines compute_batch_fast (here: the default
+        // trait impl over a graph metric) must make Kernel::Fast
+        // reproduce Kernel::Exact bit-for-bit, refined == 0.
+        use crate::graph::generators::sensor_net;
+        use crate::graph::GraphMetric;
+        let sg = sensor_net(200, 1.8, false, 13);
+        let gm = GraphMetric::new(sg.graph);
+        let n = gm.len();
+        let order: Vec<usize> = (0..n).collect();
+        let run = |kernel: Kernel| {
+            let mut lb = vec![0.0; n];
+            let mut rule = BestSumRule::new();
+            let r = run_elimination(
+                &FullSpace::new(&gm),
+                &order,
+                &mut lb,
+                &mut rule,
+                &EngineOpts { batch: 8, kernel, ..Default::default() },
+            );
+            (r.computed, r.refined, rule.best_item, rule.best_sum, lb)
+        };
+        let (ce, _, ie, se, lbe) = run(Kernel::Exact);
+        let (cf, rf, i_f, sf, lbf) = run(Kernel::Fast);
+        assert_eq!(rf, 0);
+        assert_eq!((cf, i_f), (ce, ie));
+        assert!(sf == se);
+        assert!(lbf.iter().zip(&lbe).all(|(a, b)| a == b));
+    }
+
+    #[test]
+    fn kernel_parses_cli_tokens() {
+        assert_eq!(Kernel::parse("exact"), Some(Kernel::Exact));
+        assert_eq!(Kernel::parse("fast"), Some(Kernel::Fast));
+        assert_eq!(Kernel::parse("panel"), None);
+        assert_eq!(Kernel::Fast.name(), "fast");
+        assert_eq!(Kernel::Exact.name(), "exact");
     }
 
     #[test]

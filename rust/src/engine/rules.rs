@@ -10,8 +10,19 @@ pub trait EliminationRule {
     /// bound reaches it (after relaxation/slack) are skipped.
     fn threshold(&self) -> f64;
 
-    /// A computed item's exact out-sum and its distance row over the
-    /// universe. Called in visit order, immediately after the compute.
+    /// A computed item's out-sum and its distance row over the universe.
+    /// Called in visit order, immediately after the compute.
+    ///
+    /// **Exactness contract under the fast kernel** (see the engine
+    /// module docs): the engine guarantees `sum`/`dists` are
+    /// canonical-exact whenever `sum < threshold()` could hold — any
+    /// element inside the guard band is recomputed before this call. An
+    /// observation with `sum ≥ threshold()` may carry panel-approximate
+    /// values (within the guard of the canonical ones). Rules must
+    /// therefore gate *every* state they keep on the strict
+    /// `sum < threshold` test — exactly what the built-in rules do — and
+    /// must not accumulate sums or cache rows from non-improving
+    /// observations.
     fn observe(&mut self, item: usize, sum: f64, dists: &[f64]);
 }
 

@@ -34,6 +34,23 @@ pub trait EliminationSpace {
         assert!(self.symmetric(), "asymmetric space must override compute_batch_rev");
         self.compute_batch(ids, out)
     }
+
+    /// Fast-path batched compute (mirrors
+    /// [`crate::metric::MetricSpace::many_to_all_fast`]): on `true`,
+    /// `out` holds approximate rows and `guard[q]` a rigorous bound on
+    /// `|fast² − canonical²|` for row `q`; on `false` nothing was
+    /// written and the engine falls back to
+    /// [`EliminationSpace::compute_batch`]. `scratch` is the engine's
+    /// reusable round buffer. Default: no fast path.
+    fn compute_batch_fast(
+        &self,
+        _ids: &[usize],
+        _out: &mut [f64],
+        _guard: &mut [f64],
+        _scratch: &mut Vec<f64>,
+    ) -> bool {
+        false
+    }
 }
 
 /// The whole metric space: items are elements, computes are (batched)
@@ -65,6 +82,16 @@ impl<M: MetricSpace> EliminationSpace for FullSpace<'_, M> {
     fn compute_batch_rev(&self, ids: &[usize], out: &mut [f64]) {
         self.metric.all_to_many(ids, out);
     }
+
+    fn compute_batch_fast(
+        &self,
+        ids: &[usize],
+        out: &mut [f64],
+        guard: &mut [f64],
+        scratch: &mut Vec<f64>,
+    ) -> bool {
+        self.metric.many_to_all_fast(ids, out, guard, scratch)
+    }
 }
 
 /// A subset of a metric space, addressed by *position* in a member list.
@@ -72,8 +99,14 @@ impl<M: MetricSpace> EliminationSpace for FullSpace<'_, M> {
 /// Computes are `members.len()` point-distance queries per item (not
 /// one-to-all passes), exactly as trikmeds Alg. 8 evaluates candidate
 /// medoids — so a `Counted` wrapper sees the same `dists` growth as the
-/// sequential implementation. The subset is always treated as symmetric,
-/// mirroring the sequential trikmeds.
+/// sequential implementation. The queries go through the metric's
+/// batched [`MetricSpace::many_to_many`] rectangle, which threaded
+/// backends (the `Sync` [`crate::metric::VectorMetric`]) fan out across
+/// OS threads — `kmedoids --threads` buys wall-clock in the medoid
+/// update, not just batched rounds — while the default implementation
+/// remains the sequential per-pair loop with identical distance values.
+/// The subset is always treated as symmetric, mirroring the sequential
+/// trikmeds.
 pub struct SubsetSpace<'a, M: MetricSpace> {
     metric: &'a M,
     members: &'a [usize],
@@ -94,12 +127,11 @@ impl<M: MetricSpace> EliminationSpace for SubsetSpace<'_, M> {
     fn compute_batch(&self, ids: &[usize], out: &mut [f64]) {
         let v = self.members.len();
         assert_eq!(out.len(), ids.len() * v);
-        for (&pos, row) in ids.iter().zip(out.chunks_mut(v.max(1))) {
-            let i = self.members[pos];
-            for (slot, &j) in row.iter_mut().zip(self.members.iter()) {
-                *slot = self.metric.dist(i, j);
-            }
-        }
+        // `ids` are member positions; the metric speaks global element
+        // ids. The per-round map is tiny (≤ batch entries) next to the
+        // k × v distance rectangle it unlocks.
+        let global: Vec<usize> = ids.iter().map(|&pos| self.members[pos]).collect();
+        self.metric.many_to_many(&global, self.members, out);
     }
 }
 

@@ -308,7 +308,7 @@ impl GraphMetric {
     fn multi_sssp(&self, g: &CsrGraph, ids: &[usize], out: &mut [f64]) {
         let n = g.num_nodes();
         let threads = self.threads.load(std::sync::atomic::Ordering::Relaxed);
-        crate::metric::fan_out(threads, n, ids, out, |chunk, rows| {
+        crate::metric::fan_out(threads, n, ids, out, |_off, chunk, rows| {
             for (&i, row) in chunk.iter().zip(rows.chunks_mut(n)) {
                 self.sssp(g, i, row);
             }

@@ -6,12 +6,21 @@ use super::datasets::{table1_datasets, table2_datasets, table3_datasets, AnyMetr
 use super::table::{fnum, Table};
 use super::Scale;
 use crate::algo::{
-    scan_medoid, toprank, toprank2, trimed_medoid, trimed_with_opts, TopRankOpts, TrimedOpts,
+    scan_medoid, toprank, toprank2, trimed_with_opts, TopRankOpts, TrimedOpts,
 };
+use crate::engine::Kernel;
 use crate::data::synthetic as syn;
 use crate::kmedoids::{kmeds, trikmeds, KmedsOpts, TrikmedsOpts};
 use crate::kmedoids::trikmeds::TrikmedsInit;
 use crate::metric::{Counted, MetricSpace, VectorMetric};
+
+/// Trimed options for paper-table regeneration: sequential defaults with
+/// the **exact** kernel pinned, so the n̂/N_c columns count precisely what
+/// the paper counts (the fast kernel's guard-band refinements would
+/// otherwise add a few extra one-to-all passes to `Counted`).
+fn paper_trimed(seed: u64) -> TrimedOpts {
+    TrimedOpts { seed, kernel: Kernel::Exact, ..Default::default() }
+}
 
 /// Mean one-to-all count ("computed elements", n̂) of a medoid algorithm
 /// over `reps` seeds; also sanity-checks that every run agrees with the
@@ -66,7 +75,7 @@ pub fn fig3(scale: Scale, seed: u64) -> Table {
                 let pts = pts_for(n, seed + rep as u64 * 131 + d as u64);
                 let m = VectorMetric::new(pts);
                 let cm = Counted::new(&m);
-                let _ = trimed_medoid(&cm, seed + rep as u64);
+                let _ = trimed_with_opts(&cm, &paper_trimed(seed + rep as u64));
                 tm += cm.counts().one_to_all as f64;
                 let ct = Counted::new(&m);
                 let _ = toprank(&ct, &TopRankOpts { seed: seed + rep as u64, ..Default::default() });
@@ -138,7 +147,7 @@ pub fn table1(scale: Scale, seed: u64) -> Table {
             &m,
             reps,
             |cm, s| {
-                let r = trimed_medoid(cm, s);
+                let r = trimed_with_opts(cm, &paper_trimed(s));
                 (r.medoid, r.energy, r.computed)
             },
             ref_energy,
@@ -286,7 +295,7 @@ pub fn fig4(scale: Scale, seed: u64) -> Table {
                         syn::ball_shell_biased(n, d, inner_keep, s)
                     };
                     let m = Counted::new(VectorMetric::new(pts));
-                    let _ = trimed_medoid(&m, s);
+                    let _ = trimed_with_opts(&m, &paper_trimed(s));
                     total += m.counts().one_to_all as f64;
                 }
                 let nhat = total / reps as f64;
@@ -321,7 +330,7 @@ pub fn fig7(scale: Scale, seed: u64) -> Table {
     let m = VectorMetric::new(pts);
     let r = trimed_with_opts(
         &m,
-        &TrimedOpts { seed, record_trace: true, ..Default::default() },
+        &TrimedOpts { record_trace: true, ..paper_trimed(seed) },
     );
     let trace = r.trace.expect("trace requested");
     let mut t = Table::new(
@@ -416,7 +425,7 @@ pub fn ablation_rand_quality(scale: Scale, seed: u64) -> Table {
         let s = scan_medoid(&m);
         let rel_err = (s.energies[est_best] - s.energy) / s.energy;
         let cm = Counted::new(&m);
-        let tri = trimed_medoid(&cm, seed);
+        let tri = trimed_with_opts(&cm, &paper_trimed(seed));
         let _ = tri;
         t.push_row(vec![
             n.to_string(),
@@ -480,7 +489,7 @@ pub fn ablation_order(scale: Scale, seed: u64) -> Table {
         let cm = Counted::new(&m);
         let _ = trimed_with_opts(
             &cm,
-            &TrimedOpts { seed, order, ..Default::default() },
+            &TrimedOpts { order, ..paper_trimed(seed) },
         );
         cm.counts().one_to_all
     };

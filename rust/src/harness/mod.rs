@@ -14,6 +14,8 @@ pub mod table;
 pub use bench::{time_block, BenchStats};
 pub use table::Table;
 
+use crate::engine::Kernel;
+
 /// Workload scale for experiment regeneration.
 ///
 /// The paper's exact sizes (N up to 1.1e6 graph nodes with ~2e5 Dijkstra
@@ -115,11 +117,18 @@ pub struct ExecConfig {
     /// Adaptive engine batch schedule (`--batch auto`): round width grows
     /// geometrically from 1 toward `batch`.
     pub batch_auto: bool,
+    /// Engine compute kernel (`--kernel` / `TRIMED_KERNEL`). Defaults to
+    /// [`Kernel::Fast`] — the norm-cached panel scan with guard-band
+    /// exact refinement on vector metrics, a transparent no-op
+    /// elsewhere. Results are identical either way; `exact` exists for
+    /// bit-level reproduction runs and for data whose coordinate norms
+    /// degenerate the guard band (DESIGN.md §Norm-cached panel kernels).
+    pub kernel: Kernel,
 }
 
 impl Default for ExecConfig {
     fn default() -> Self {
-        ExecConfig { threads: 1, batch: 1, batch_auto: false }
+        ExecConfig { threads: 1, batch: 1, batch_auto: false, kernel: Kernel::Fast }
     }
 }
 
@@ -129,7 +138,8 @@ impl ExecConfig {
     /// round; the schedule itself keeps small runs narrow.
     pub const AUTO_BATCH_MAX: usize = 64;
 
-    /// From `TRIMED_THREADS` / `TRIMED_BATCH`, defaulting to sequential.
+    /// From `TRIMED_THREADS` / `TRIMED_BATCH` / `TRIMED_KERNEL`,
+    /// defaulting to sequential rounds on the fast kernel.
     /// `TRIMED_BATCH=auto` selects the adaptive schedule.
     pub fn from_env() -> ExecConfig {
         let threads = Self::env_threads().unwrap_or(1);
@@ -137,7 +147,13 @@ impl ExecConfig {
             Some(spec) => spec.resolve(),
             None => (1, false),
         };
-        ExecConfig { threads, batch, batch_auto }
+        let kernel = Self::env_kernel().unwrap_or(Kernel::Fast);
+        ExecConfig { threads, batch, batch_auto, kernel }
+    }
+
+    /// `TRIMED_KERNEL`, if set to `exact` or `fast`.
+    pub fn env_kernel() -> Option<Kernel> {
+        std::env::var("TRIMED_KERNEL").ok().and_then(|v| Kernel::parse(&v))
     }
 
     /// `TRIMED_THREADS`, if set to a positive integer.
@@ -190,9 +206,12 @@ mod tests {
     }
 
     #[test]
-    fn exec_config_defaults_sequential() {
+    fn exec_config_defaults_sequential_fast_kernel() {
         let c = ExecConfig::default();
-        assert_eq!(c, ExecConfig { threads: 1, batch: 1, batch_auto: false });
+        assert_eq!(
+            c,
+            ExecConfig { threads: 1, batch: 1, batch_auto: false, kernel: Kernel::Fast }
+        );
         assert_eq!(ExecConfig::batch_for(1), 8);
         assert_eq!(ExecConfig::batch_for(4), 32);
         assert_eq!(ExecConfig::batch_for(100), 64);

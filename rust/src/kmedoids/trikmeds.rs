@@ -30,7 +30,7 @@
 //! count.
 
 use super::{init, ClusteringResult};
-use crate::engine::{run_elimination, ClusterMedoidRule, EngineOpts, SubsetSpace};
+use crate::engine::{run_elimination, ClusterMedoidRule, EngineOpts, Kernel, SubsetSpace};
 use crate::metric::MetricSpace;
 
 /// Options for [`trikmeds`].
@@ -58,8 +58,19 @@ pub struct TrikmedsOpts {
     /// overhead of a wide fixed batch away from tiny clusters.
     pub batch_auto: bool,
     /// Parallelism hint forwarded to the metric backend; 0 leaves the
-    /// backend's current setting untouched.
+    /// backend's current setting untouched. With a threaded backend the
+    /// medoid update's candidate evaluations
+    /// ([`crate::metric::MetricSpace::many_to_many`]) fan out across OS
+    /// threads per engine round, so `--threads` buys wall-clock in both
+    /// trikmeds hot loops that batch (assignment probes remain pointwise
+    /// — a ROADMAP item).
     pub threads: usize,
+    /// Engine kernel selection, plumbed for configuration parity
+    /// (`--kernel`). A no-op today: the subset universe computes point
+    /// queries (no fast path), so the engine transparently stays on the
+    /// canonical kernel and the §5.2 KMEDS equivalence is untouched for
+    /// either value.
+    pub kernel: Kernel,
 }
 
 /// Initialisation choice for trikmeds.
@@ -83,6 +94,7 @@ impl TrikmedsOpts {
             batch: 1,
             batch_auto: false,
             threads: 0,
+            kernel: Kernel::Fast,
         }
     }
 }
@@ -173,8 +185,7 @@ fn trikmeds_impl<M: MetricSpace>(metric: &M, opts: &TrikmedsOpts) -> (Clustering
     let mut converged = false;
     for _ in 0..opts.max_iters {
         iterations += 1;
-        let medoids_changed =
-            update_medoids(metric, &mut st, opts.eps, opts.batch, opts.batch_auto);
+        let medoids_changed = update_medoids(metric, &mut st, opts);
         let assignments_changed = assign_to_clusters(metric, &mut st, opts.eps);
         update_sum_bounds(&mut st);
         if !medoids_changed && !assignments_changed {
@@ -198,13 +209,7 @@ fn trikmeds_impl<M: MetricSpace>(metric: &M, opts: &TrikmedsOpts) -> (Clustering
 /// ([`SubsetSpace`]), the incumbent medoid's exact sum is the threshold,
 /// and bound propagation `S(j) >= |S(i) - v·dist(i,j)|` is the engine's
 /// shared pass. Returns true if any medoid moved.
-fn update_medoids<M: MetricSpace>(
-    metric: &M,
-    st: &mut State,
-    eps: f64,
-    batch: usize,
-    batch_auto: bool,
-) -> bool {
+fn update_medoids<M: MetricSpace>(metric: &M, st: &mut State, opts: &TrikmedsOpts) -> bool {
     let mut any_moved = false;
     let mut lb: Vec<f64> = Vec::new();
     let mut order: Vec<usize> = Vec::new();
@@ -225,7 +230,13 @@ fn update_medoids<M: MetricSpace>(
             &order,
             &mut lb,
             &mut rule,
-            &EngineOpts { batch, batch_auto, eps, ..Default::default() },
+            &EngineOpts {
+                batch: opts.batch,
+                batch_auto: opts.batch_auto,
+                eps: opts.eps,
+                kernel: opts.kernel,
+                ..Default::default()
+            },
         );
         for (pos, &j) in mem.iter().enumerate() {
             st.ls[j] = lb[pos];

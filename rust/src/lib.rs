@@ -10,9 +10,12 @@
 //! Architecture (see DESIGN.md): one batched bound-elimination [`engine`]
 //! drives every adaptive algorithm, over a [`metric`] backend whose batched
 //! `many_to_all` pass is thread-parallel (cache-blocked multi-query scans
-//! on vectors, multi-source Dijkstra fan-out on graphs); distance hot-spots
-//! are also available as AOT-compiled JAX+Pallas HLO artifacts executed
-//! through the XLA PJRT runtime ([`runtime`], `--features xla`).
+//! on vectors, multi-source Dijkstra fan-out on graphs). On vector data
+//! the scans default to norm-cached GEMM-style panel kernels with
+//! guard-band exact refinement (`--kernel exact|fast` — identical
+//! medoids, bit-identical sums either way); distance hot-spots are also
+//! available as AOT-compiled JAX+Pallas HLO artifacts executed through
+//! the XLA PJRT runtime ([`runtime`], `--features xla`).
 //!
 //! ## Quickstart
 //!

@@ -16,6 +16,7 @@ use trimed::algo::{
 use trimed::cli::Args;
 use trimed::data::synthetic as syn;
 use trimed::data::{io as data_io, Points};
+use trimed::engine::Kernel;
 use trimed::harness::experiments;
 use trimed::harness::{BatchSpec, ExecConfig, Scale};
 use trimed::kmedoids::{kmeds, trikmeds, KmedsOpts, TrikmedsOpts};
@@ -28,9 +29,10 @@ trimed — sub-quadratic exact medoid computation (Newling & Fleuret, AISTATS 20
 
 USAGE:
   trimed medoid   [--data SPEC] [--n N] [--d D] [--seed S] [--algo A] [--eps E]
-                  [--threads T] [--batch B] [--xla]
+                  [--threads T] [--batch B] [--kernel exact|fast] [--xla]
   trimed kmedoids [--data SPEC] [--n N] [--d D] [--seed S] [--k K] [--eps E]
-                  [--threads T] [--batch B] [--algo trikmeds|kmeds]
+                  [--threads T] [--batch B] [--kernel exact|fast]
+                  [--algo trikmeds|kmeds]
   trimed exp      --id fig3|table1|table2|table3|fig4|fig7|all [--scale small|medium|full] [--seed S] [--save DIR]
   trimed artifacts [--dir DIR]
 
@@ -56,6 +58,19 @@ PARALLELISM:
                first round establishes a threshold instead of computing a
                full batch blind) and doubles toward 64 as rounds survive.
                Also accepted as TRIMED_BATCH=auto
+  --kernel K   engine distance kernel (default $TRIMED_KERNEL or `fast`):
+               `fast` runs the scans through the norm-cached panel kernel
+               with guard-band exact refinement — identical medoids and
+               bit-identical sums at eps=0 (with --eps > 0 both kernels
+               keep the (1+eps) guarantee but may pick different valid
+               elements), most work on a GEMM-style dot-product path;
+               `exact` pins the canonical difference-form kernel
+               (bit-level reproduction runs, or data whose huge
+               coordinate norms degenerate the guard band). Only trimed
+               has a fast path: toprank/rand/scan report the sums they
+               compute (always canonical), and graphs/--xla have no
+               panel backend — the dataset line prints the kernel that
+               actually runs
 ";
 
 fn load_data(args: &Args) -> Result<Points> {
@@ -98,7 +113,14 @@ fn exec_config(args: &Args, batch_heuristic: bool) -> Result<ExecConfig> {
             None => bail!("--batch expects a positive integer or `auto`, got {v:?}"),
         }
     }
-    Ok(ExecConfig { threads, batch: batch.max(1), batch_auto })
+    let mut kernel = env.kernel;
+    if let Some(v) = args.get("kernel") {
+        match Kernel::parse(v) {
+            Some(k) => kernel = k,
+            None => bail!("--kernel expects `exact` or `fast`, got {v:?}"),
+        }
+    }
+    Ok(ExecConfig { threads, batch: batch.max(1), batch_auto, kernel })
 }
 
 fn cmd_medoid(args: &Args) -> Result<()> {
@@ -111,11 +133,21 @@ fn cmd_medoid(args: &Args) -> Result<()> {
     // an explicit --batch / TRIMED_BATCH still applies.
     let exec = exec_config(args, !args.flag("xla"))?;
     let (n, d) = (pts.len(), pts.dim());
+    // Only the engine-backed trimed path actually runs the fast kernel:
+    // TOPRANK's sums *are* its results (kernel is a documented no-op)
+    // and rand/scan compute everything they report — print the kernel
+    // that will really run so bench logs attribute timings correctly.
+    let effective_kernel = if algo == "trimed" && !args.flag("xla") {
+        exec.kernel.name()
+    } else {
+        "exact"
+    };
     println!(
-        "dataset: N={n} d={d} algo={algo} threads={} batch={}{} xla={}",
+        "dataset: N={n} d={d} algo={algo} threads={} batch={}{} kernel={} xla={}",
         exec.threads,
         exec.batch,
         if exec.batch_auto { " (auto)" } else { "" },
+        effective_kernel,
         args.flag("xla")
     );
 
@@ -133,6 +165,7 @@ fn cmd_medoid(args: &Args) -> Result<()> {
                         batch: exec.batch,
                         batch_auto: exec.batch_auto,
                         threads: exec.threads,
+                        kernel: exec.kernel,
                         ..Default::default()
                     },
                 );
@@ -146,6 +179,7 @@ fn cmd_medoid(args: &Args) -> Result<()> {
                         batch: exec.batch,
                         batch_auto: exec.batch_auto,
                         threads: exec.threads,
+                        kernel: exec.kernel,
                         ..Default::default()
                     },
                 );
@@ -159,6 +193,7 @@ fn cmd_medoid(args: &Args) -> Result<()> {
                         batch: exec.batch,
                         batch_auto: exec.batch_auto,
                         threads: exec.threads,
+                        kernel: exec.kernel,
                         ..Default::default()
                     },
                 );
@@ -223,6 +258,7 @@ fn cmd_kmedoids(args: &Args) -> Result<()> {
                 batch: exec.batch,
                 batch_auto: exec.batch_auto,
                 threads: exec.threads,
+                kernel: exec.kernel,
                 ..TrikmedsOpts::new(k)
             },
         ),
@@ -299,7 +335,7 @@ fn main() {
     }
     let keys = [
         "data", "n", "d", "seed", "algo", "eps", "k", "id", "scale", "save", "dir", "threads",
-        "batch",
+        "batch", "kernel",
     ];
     let flags = ["xla"];
     let result = Args::parse(argv, &keys, &flags).and_then(|args| {

@@ -105,6 +105,55 @@ pub trait MetricSpace {
         }
     }
 
+    /// Fast-path batched compute: like [`MetricSpace::many_to_all`], but
+    /// the backend may route through an approximate kernel (the
+    /// norm-trick panel scan on vectors, see
+    /// [`crate::data::simd::panel_rows`]). On success the implementation
+    /// fills `out` with the fast-path distances, writes into `guard[q]` a
+    /// **rigorous** bound on `|fast² − canonical²|` valid for every entry
+    /// of query row `q`, and returns `true`. Returning `false` means "no
+    /// fast path" — `out`/`guard` are unspecified and the caller must
+    /// fall back to [`MetricSpace::many_to_all`].
+    ///
+    /// `scratch` is a reusable buffer owned by the caller (the engine
+    /// keeps one across rounds, so steady-state fast rounds allocate
+    /// nothing); its contents between calls are unspecified.
+    ///
+    /// The default has no fast path, which keeps every non-vector metric
+    /// (graphs, XLA, test doubles) on the canonical kernels under any
+    /// kernel selection.
+    fn many_to_all_fast(
+        &self,
+        _ids: &[usize],
+        _out: &mut [f64],
+        _guard: &mut [f64],
+        _scratch: &mut Vec<f64>,
+    ) -> bool {
+        false
+    }
+
+    /// Batched rectangle of point distances: row `q` of the row-major
+    /// `out` (`ids.len() × targets.len()`) receives
+    /// `dist(ids[q], targets[j])` for every `j`.
+    ///
+    /// This is the trikmeds medoid-update hot operation (Alg. 8
+    /// evaluates cluster members against the member list only), hoisted
+    /// into the metric so backends can thread it: the default is the
+    /// sequential point-query loop, [`VectorMetric`] fans the query rows
+    /// out across OS threads ([`MetricSpace::set_threads`]) with the
+    /// same disjoint-output scaffold as `many_to_all`. Distance values
+    /// are identical to per-pair [`MetricSpace::dist`] calls in every
+    /// backend, so batched trajectories reproduce pointwise ones.
+    fn many_to_many(&self, ids: &[usize], targets: &[usize], out: &mut [f64]) {
+        let t = targets.len();
+        assert_eq!(out.len(), ids.len() * t, "out must be ids.len() × targets.len()");
+        for (&i, row) in ids.iter().zip(out.chunks_mut(t.max(1))) {
+            for (slot, &j) in row.iter_mut().zip(targets) {
+                *slot = self.dist(i, j);
+            }
+        }
+    }
+
     /// Parallelism hint for the batched operations: ask the backend to use
     /// up to `threads` OS threads per `many_to_all` / `all_to_many` call.
     ///
@@ -117,12 +166,16 @@ pub trait MetricSpace {
 
 /// Shared scaffold of the thread-parallel batched backends: split the
 /// query ids and the row-major output into per-thread contiguous chunks
-/// (disjoint regions — no synchronisation needed) and run `work` on each
-/// under `std::thread::scope`; `threads <= 1` runs `work` inline. `n` is
-/// the row width ([`MetricSpace::len`]).
+/// (disjoint regions — no synchronisation needed) and run
+/// `work(offset, chunk, rows)` on each under `std::thread::scope`, where
+/// `offset` is the chunk's start position within `ids` (workers that
+/// carry per-query side data — gathered rows, norms, guards — index it
+/// by this offset rather than guessing from pointers); `threads <= 1`
+/// runs `work` inline with offset 0. `n` is the row width
+/// ([`MetricSpace::len`]).
 pub(crate) fn fan_out<F>(threads: usize, n: usize, ids: &[usize], out: &mut [f64], work: F)
 where
-    F: Fn(&[usize], &mut [f64]) + Sync,
+    F: Fn(usize, &[usize], &mut [f64]) + Sync,
 {
     assert_eq!(out.len(), ids.len() * n, "out must be ids.len() × len()");
     if ids.is_empty() || n == 0 {
@@ -130,7 +183,7 @@ where
     }
     let t = threads.max(1).min(ids.len());
     if t <= 1 {
-        work(ids, out);
+        work(0, ids, out);
         return;
     }
     // Balanced split: t chunks whose sizes differ by at most one, so every
@@ -142,6 +195,7 @@ where
     std::thread::scope(|scope| {
         let mut ids_rest = ids;
         let mut out_rest = out;
+        let mut offset = 0usize;
         for c in 0..t {
             let take = base + usize::from(c < extra);
             let (id_chunk, ids_tail) = ids_rest.split_at(take);
@@ -151,7 +205,9 @@ where
             // loop iteration, which the spawned thread requires).
             let (out_chunk, out_tail) = std::mem::take(&mut out_rest).split_at_mut(take * n);
             out_rest = out_tail;
-            scope.spawn(move || work(id_chunk, out_chunk));
+            let chunk_offset = offset;
+            offset += take;
+            scope.spawn(move || work(chunk_offset, id_chunk, out_chunk));
         }
     });
 }
@@ -262,6 +318,34 @@ impl<M: MetricSpace> MetricSpace for Counted<M> {
         self.inner.all_to_many(ids, out);
     }
 
+    /// Counted exactly like [`MetricSpace::many_to_all`] — the paper's n̂
+    /// counts *computed elements*, not which kernel computed them — but
+    /// only when the inner metric actually took the fast path (on `false`
+    /// the caller's fallback `many_to_all` does the counting).
+    fn many_to_all_fast(
+        &self,
+        ids: &[usize],
+        out: &mut [f64],
+        guard: &mut [f64],
+        scratch: &mut Vec<f64>,
+    ) -> bool {
+        if !self.inner.many_to_all_fast(ids, out, guard, scratch) {
+            return false;
+        }
+        let k = ids.len() as u64;
+        self.dists.set(self.dists.get() + k * self.inner.len() as u64);
+        self.one_to_all.set(self.one_to_all.get() + k);
+        self.batches.set(self.batches.get() + 1);
+        true
+    }
+
+    /// Counts `ids.len() × targets.len()` point distances — the same
+    /// total the sequential per-pair loop would have recorded.
+    fn many_to_many(&self, ids: &[usize], targets: &[usize], out: &mut [f64]) {
+        self.dists.set(self.dists.get() + (ids.len() * targets.len()) as u64);
+        self.inner.many_to_many(ids, targets, out);
+    }
+
     fn set_threads(&self, threads: usize) {
         self.inner.set_threads(threads);
     }
@@ -289,6 +373,18 @@ impl<M: MetricSpace + ?Sized> MetricSpace for &M {
     }
     fn all_to_many(&self, ids: &[usize], out: &mut [f64]) {
         (**self).all_to_many(ids, out)
+    }
+    fn many_to_all_fast(
+        &self,
+        ids: &[usize],
+        out: &mut [f64],
+        guard: &mut [f64],
+        scratch: &mut Vec<f64>,
+    ) -> bool {
+        (**self).many_to_all_fast(ids, out, guard, scratch)
+    }
+    fn many_to_many(&self, ids: &[usize], targets: &[usize], out: &mut [f64]) {
+        (**self).many_to_many(ids, targets, out)
     }
     fn set_threads(&self, threads: usize) {
         (**self).set_threads(threads)
@@ -346,6 +442,35 @@ mod tests {
         assert_eq!(c.one_to_all, 3);
         assert_eq!(c.dists, 3 * 4);
         assert_eq!(c.batches, 2);
+    }
+
+    #[test]
+    fn default_many_to_all_fast_declines() {
+        // A metric without a fast path must return false and count
+        // nothing through Counted, so engine fallbacks stay exact.
+        let m = Counted::new(Line(vec![0.0, 1.0, 3.0]));
+        let mut out = vec![0.0; 3];
+        let mut guard = vec![0.0; 1];
+        let mut scratch = Vec::new();
+        assert!(!m.many_to_all_fast(&[1], &mut out, &mut guard, &mut scratch));
+        assert_eq!(m.counts(), Counts::default());
+    }
+
+    #[test]
+    fn default_many_to_many_matches_dist_and_counts() {
+        let m = Counted::new(Line(vec![0.0, 2.0, 5.0, 9.0]));
+        let ids = [3usize, 0];
+        let targets = [1usize, 2, 3];
+        let mut out = vec![0.0; 6];
+        m.many_to_many(&ids, &targets, &mut out);
+        for (q, &i) in ids.iter().enumerate() {
+            for (j, &t) in targets.iter().enumerate() {
+                assert_eq!(out[q * 3 + j], m.inner().dist(i, t), "({i},{t})");
+            }
+        }
+        // Counted charges the full rectangle as point distances.
+        assert_eq!(m.counts().dists, 6);
+        assert_eq!(m.counts().one_to_all, 0);
     }
 
     #[test]

@@ -17,6 +17,12 @@ const SCAN_BLOCK_ROWS: usize = 256;
 /// multi-query scan, optionally split across OS threads
 /// ([`MetricSpace::set_threads`]): each thread owns a contiguous group of
 /// query rows, so no output region is shared.
+///
+/// [`MetricSpace::many_to_all_fast`] additionally offers the norm-trick
+/// panel scan (`‖x−y‖² = ‖x‖² + ‖y‖² − 2⟨x,y⟩` over the [`Points`] norm
+/// cache, four queries per row-block pass) with rigorous per-query error
+/// bounds — the engine's `--kernel fast` path (DESIGN.md §Norm-cached
+/// panel kernels).
 pub struct VectorMetric {
     points: Points,
     /// Threads per batched call (interior mutability keeps the hint usable
@@ -45,28 +51,54 @@ impl VectorMetric {
         self.points
     }
 
-    /// Cache-blocked scan of `ids` against the whole set: queries are
-    /// gathered once, then each block of point rows is streamed past every
-    /// query while it is cache-hot. Distances are bitwise identical to
+    /// Cache-blocked scan of `ids` against the whole set: each block of
+    /// point rows is streamed past every query while it is cache-hot.
+    /// Query rows are read in place from the flat storage (no gather, no
+    /// per-call allocation — they stay cache-resident by sheer access
+    /// frequency). Distances are bitwise identical to
     /// [`MetricSpace::one_to_all`] (same primitive, same per-row order).
     fn scan_multi(&self, ids: &[usize], out: &mut [f64]) {
         let n = self.points.len();
         let d = self.points.dim();
         let flat = self.points.flat();
-        let mut queries = Vec::with_capacity(ids.len() * d);
-        for &i in ids {
-            queries.extend_from_slice(self.points.row(i));
-        }
         let mut block_start = 0;
         while block_start < n {
             let block_end = (block_start + SCAN_BLOCK_ROWS).min(n);
-            for (q, row_out) in queries.chunks_exact(d).zip(out.chunks_mut(n)) {
+            for (&i, row_out) in ids.iter().zip(out.chunks_mut(n)) {
                 simd::euclidean_rows(
-                    q,
+                    self.points.row(i),
                     &flat[block_start * d..block_end * d],
                     &mut row_out[block_start..block_end],
                 );
             }
+            block_start = block_end;
+        }
+    }
+
+    /// Fast-path counterpart of [`VectorMetric::scan_multi`]: the same
+    /// cache blocking, but each block goes through the norm-trick panel
+    /// kernel ([`simd::panel_rows`]), which amortises every row load
+    /// across four queries and replaces the O(d) difference kernel with
+    /// an O(d) dot product against the cached norms — the GEMM-style
+    /// formulation that makes wide batches compute-bound. `queries` /
+    /// `q_sq_norms` are the gathered query rows and their cached norms.
+    fn scan_multi_fast(&self, queries: &[f64], q_sq_norms: &[f64], out: &mut [f64]) {
+        let n = self.points.len();
+        let d = self.points.dim();
+        let flat = self.points.flat();
+        let norms = self.points.sq_norms();
+        let mut block_start = 0;
+        while block_start < n {
+            let block_end = (block_start + SCAN_BLOCK_ROWS).min(n);
+            simd::panel_rows(
+                queries,
+                q_sq_norms,
+                &flat[block_start * d..block_end * d],
+                &norms[block_start..block_end],
+                d,
+                &mut out[block_start..],
+                n,
+            );
             block_start = block_end;
         }
     }
@@ -85,14 +117,81 @@ impl MetricSpace for VectorMetric {
     fn one_to_all(&self, i: usize, out: &mut [f64]) {
         let n = self.points.len();
         assert_eq!(out.len(), n);
-        let q = self.points.row(i).to_vec(); // detach from the scan borrow
-        simd::euclidean_rows(&q, self.points.flat(), out);
+        // The query row and the flat storage are both shared borrows of
+        // the same buffer — no copy needed (when the scan reaches row i
+        // the kernel sees a == b and yields exactly 0).
+        simd::euclidean_rows(self.points.row(i), self.points.flat(), out);
     }
 
     fn many_to_all(&self, ids: &[usize], out: &mut [f64]) {
         let threads = self.threads.load(Ordering::Relaxed);
-        super::fan_out(threads, self.points.len(), ids, out, |chunk, rows| {
+        super::fan_out(threads, self.points.len(), ids, out, |_off, chunk, rows| {
             self.scan_multi(chunk, rows)
+        });
+    }
+
+    /// Norm-trick panel scan (always available on vector data): gathers
+    /// the query rows and their cached norms into the caller's `scratch`
+    /// (the only buffer the fast path touches — steady-state rounds
+    /// allocate nothing), fans the scan out like
+    /// [`MetricSpace::many_to_all`], and reports per-query error bounds
+    /// from [`simd::panel_error_bound`] at the query's cached norm and
+    /// the set-wide maximum row norm (the bound is monotone in both).
+    fn many_to_all_fast(
+        &self,
+        ids: &[usize],
+        out: &mut [f64],
+        guard: &mut [f64],
+        scratch: &mut Vec<f64>,
+    ) -> bool {
+        let n = self.points.len();
+        let d = self.points.dim();
+        assert_eq!(out.len(), ids.len() * n, "out must be ids.len() × len()");
+        assert_eq!(guard.len(), ids.len(), "guard must have one slot per query");
+        if ids.is_empty() || n == 0 {
+            return true;
+        }
+        let max_row_norm = self.points.max_sq_norm();
+        let q_len = ids.len() * d;
+        scratch.clear();
+        scratch.reserve(q_len + ids.len());
+        for &i in ids {
+            scratch.extend_from_slice(self.points.row(i));
+        }
+        for (g, &i) in guard.iter_mut().zip(ids) {
+            let qn = self.points.sq_norm(i);
+            scratch.push(qn);
+            *g = simd::panel_error_bound(d, qn, max_row_norm);
+        }
+        let (queries, q_norms) = scratch.split_at(q_len);
+        let threads = self.threads.load(Ordering::Relaxed);
+        super::fan_out(threads, n, ids, out, |off, chunk, rows| {
+            // `off` is the chunk's start position in `ids`, which is also
+            // its position in the gathered query/norm buffers.
+            self.scan_multi_fast(
+                &queries[off * d..(off + chunk.len()) * d],
+                &q_norms[off..off + chunk.len()],
+                rows,
+            );
+        });
+        true
+    }
+
+    /// Threaded rectangle of point distances for the trikmeds medoid
+    /// update: query rows fan out across threads exactly like
+    /// [`MetricSpace::many_to_all`]; every entry is the canonical
+    /// [`MetricSpace::dist`] value, so batched and pointwise trajectories
+    /// agree bitwise at any thread count.
+    fn many_to_many(&self, ids: &[usize], targets: &[usize], out: &mut [f64]) {
+        let t = targets.len();
+        assert_eq!(out.len(), ids.len() * t, "out must be ids.len() × targets.len()");
+        let threads = self.threads.load(Ordering::Relaxed);
+        super::fan_out(threads, t, ids, out, |_off, chunk, rows| {
+            for (&i, row) in chunk.iter().zip(rows.chunks_mut(t.max(1))) {
+                for (slot, &j) in row.iter_mut().zip(targets) {
+                    *slot = self.points.dist(i, j);
+                }
+            }
         });
     }
 
@@ -194,5 +293,78 @@ mod tests {
         let mut single = vec![0.0; 50];
         m.one_to_all(3, &mut single);
         assert_eq!(out, single);
+    }
+
+    #[test]
+    fn fast_scan_within_guard_of_exact_scan() {
+        // The fast path's contract: every row entry sits within
+        // sqrt(guard[q]) of the canonical distance, at benign and
+        // adversarial coordinate scales.
+        for &scale in &[1.0f64, 1e12] {
+            let base = crate::data::synthetic::uniform_cube(2 * SCAN_BLOCK_ROWS + 9, 5, 42);
+            let data: Vec<f64> = base.flat().iter().map(|v| v * scale).collect();
+            let m = VectorMetric::new(Points::new(5, data));
+            let n = m.len();
+            let ids = vec![0usize, 7, n / 2, n - 1];
+            let mut fast = vec![0.0; ids.len() * n];
+            let mut guard = vec![0.0; ids.len()];
+            let mut scratch = Vec::new();
+            assert!(m.many_to_all_fast(&ids, &mut fast, &mut guard, &mut scratch));
+            let mut exact = vec![0.0; n];
+            for (q, &i) in ids.iter().enumerate() {
+                m.one_to_all(i, &mut exact);
+                let g = guard[q].sqrt();
+                for j in 0..n {
+                    let gap = (fast[q * n + j] - exact[j]).abs();
+                    assert!(
+                        gap <= g,
+                        "scale={scale} query {i} row {j}: gap {gap} > guard {g}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_scan_bitwise_invariant_across_threads() {
+        // Panel grouping and thread splits must be unobservable in the
+        // fast-path output (per-query chains are grouping-independent),
+        // so guard-band decisions are deterministic at any --threads.
+        let n = SCAN_BLOCK_ROWS + 31;
+        let m = VectorMetric::new(crate::data::synthetic::uniform_cube(n, 7, 3));
+        let ids: Vec<usize> = (0..9).map(|q| (q * 37) % n).collect();
+        let mut reference = vec![0.0; ids.len() * n];
+        let mut guard = vec![0.0; ids.len()];
+        let mut scratch = Vec::new();
+        m.set_threads(1);
+        assert!(m.many_to_all_fast(&ids, &mut reference, &mut guard, &mut scratch));
+        for threads in [2usize, 4, 16] {
+            m.set_threads(threads);
+            let mut out = vec![0.0; ids.len() * n];
+            assert!(m.many_to_all_fast(&ids, &mut out, &mut guard, &mut scratch));
+            assert_eq!(out, reference, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn many_to_many_matches_dist_at_any_thread_count() {
+        let n = 70usize;
+        let m = VectorMetric::new(crate::data::synthetic::uniform_cube(n, 3, 11));
+        let ids = vec![5usize, 0, 33, 69, 12];
+        let targets: Vec<usize> = (0..n).step_by(3).collect();
+        let t = targets.len();
+        for threads in [1usize, 2, 8] {
+            m.set_threads(threads);
+            let mut out = vec![0.0; ids.len() * t];
+            m.many_to_many(&ids, &targets, &mut out);
+            for (q, &i) in ids.iter().enumerate() {
+                for (j, &tgt) in targets.iter().enumerate() {
+                    assert!(
+                        out[q * t + j] == m.dist(i, tgt),
+                        "threads={threads} ({i},{tgt})"
+                    );
+                }
+            }
+        }
     }
 }

@@ -13,10 +13,15 @@
 //!   is exactly its distance sum, even at adversarial coordinate scales
 //!   where the propagated `|S(i) − N·d|` rounds above it (the PR 2
 //!   tight-skip fix, mirrored in the reference below).
+//!
+//! The bit-level guards pin `Kernel::Exact` (they define the canonical
+//! contract); the fast panel kernel's result-level equivalence to it is
+//! pinned separately in `tests/kernel_property.rs`.
 
 use trimed::algo::{scan_medoid, trimed_with_opts, TrimedOpts};
 use trimed::data::synthetic::uniform_cube;
 use trimed::data::Points;
+use trimed::engine::Kernel;
 use trimed::graph::generators::preferential_attachment;
 use trimed::graph::GraphMetric;
 use trimed::harness::ExecConfig;
@@ -93,9 +98,16 @@ fn reference_trimed<M: MetricSpace>(
 }
 
 fn assert_bit_identical<M: MetricSpace>(metric: &M, seed: u64, eps: f64, what: &str) {
+    // The bit-for-bit reproduction contract is defined against the
+    // canonical kernel, so these guards pin `Kernel::Exact`; the fast
+    // kernel's own (result-level) equivalence guarantee is pinned by
+    // tests/kernel_property.rs.
     let (ref_medoid, ref_energy, ref_computed, ref_lb) =
         reference_trimed(metric, seed, eps, 0.0);
-    let r = trimed_with_opts(metric, &TrimedOpts { seed, eps, ..Default::default() });
+    let r = trimed_with_opts(
+        metric,
+        &TrimedOpts { seed, eps, kernel: Kernel::Exact, ..Default::default() },
+    );
     assert_eq!(r.medoid, ref_medoid, "{what}: medoid diverged");
     assert_eq!(r.computed, ref_computed, "{what}: computed-count diverged");
     assert!(
@@ -141,7 +153,10 @@ fn guard_batch1_identical_under_threads() {
     let m = VectorMetric::new(pts);
     let (ref_medoid, ref_energy, ref_computed, ref_lb) = reference_trimed(&m, 3, 0.0, 0.0);
     for threads in [1usize, 4] {
-        let r = trimed_with_opts(&m, &TrimedOpts { seed: 3, threads, ..Default::default() });
+        let r = trimed_with_opts(
+            &m,
+            &TrimedOpts { seed: 3, threads, kernel: Kernel::Exact, ..Default::default() },
+        );
         assert_eq!(r.medoid, ref_medoid, "threads={threads}");
         assert_eq!(r.computed, ref_computed, "threads={threads}");
         assert!(r.energy == ref_energy, "threads={threads}");
@@ -182,7 +197,9 @@ fn prop_batched_trimed_exact_and_sound_on_vectors() {
                     r.energy,
                     s.energy
                 );
-                assert_eq!(r.computed, cm.counts().one_to_all);
+                // Default (fast) kernel: backend passes = computed
+                // elements + guard-band refinements.
+                assert_eq!(r.computed + r.refined, cm.counts().one_to_all);
                 for j in 0..n {
                     assert!(
                         r.lower_bounds[j] <= sums[j] + 1e-7,
@@ -305,6 +322,10 @@ fn computed_bounds_exact_at_adversarial_scale() {
     let n = m.len();
     let mut row = vec![0.0; n];
     for (batch, auto) in [(1usize, false), (8, false), (64, true)] {
+        // Pinned to the canonical kernel: this regression is about the
+        // exact path's tight-skip (fast-path behaviour at this scale is
+        // covered by tests/kernel_property.rs, where computed bounds are
+        // deflated rather than bit-equal).
         let r = trimed_with_opts(
             &m,
             &TrimedOpts {
@@ -312,6 +333,7 @@ fn computed_bounds_exact_at_adversarial_scale() {
                 batch,
                 batch_auto: auto,
                 record_trace: true,
+                kernel: Kernel::Exact,
                 ..Default::default()
             },
         );
@@ -338,13 +360,19 @@ fn computed_bounds_exact_at_adversarial_scale() {
 
 #[test]
 fn env_exec_config_paths_stay_exact() {
-    // Run under the TRIMED_THREADS / TRIMED_BATCH environment the CI
-    // matrix sets, so `cargo test` exercises the parallel and batched
-    // paths there while staying sequential (and cheap) by default.
+    // Run under the TRIMED_THREADS / TRIMED_BATCH / TRIMED_KERNEL
+    // environment the CI matrix sets, so `cargo test` exercises the
+    // parallel, batched and kernel paths there while staying sequential
+    // (and cheap) by default. The sequential reference pins the exact
+    // kernel, so the TRIMED_KERNEL=fast leg checks fast-vs-exact energy
+    // equality end to end.
     let exec = ExecConfig::from_env();
     let pts = uniform_cube(600, 3, 3);
     let m = VectorMetric::new(pts);
-    let seq = trimed_with_opts(&m, &TrimedOpts { seed: 11, ..Default::default() });
+    let seq = trimed_with_opts(
+        &m,
+        &TrimedOpts { seed: 11, kernel: Kernel::Exact, ..Default::default() },
+    );
     let r = trimed_with_opts(
         &m,
         &TrimedOpts {
@@ -352,17 +380,27 @@ fn env_exec_config_paths_stay_exact() {
             batch: exec.batch,
             batch_auto: exec.batch_auto,
             threads: exec.threads,
+            kernel: exec.kernel,
             ..Default::default()
         },
     );
     assert!(
         (r.energy - seq.energy).abs() < 1e-12,
-        "threads={} batch={} auto={}: {} vs {}",
+        "threads={} batch={} auto={} kernel={}: {} vs {}",
         exec.threads,
         exec.batch,
         exec.batch_auto,
+        exec.kernel.name(),
         r.energy,
         seq.energy
     );
+    if exec.kernel == Kernel::Fast {
+        assert!(
+            r.energy == seq.energy,
+            "fast kernel must report the bit-identical energy: {} vs {}",
+            r.energy,
+            seq.energy
+        );
+    }
     assert!(r.computed > 0 && r.computed <= m.len() as u64);
 }
