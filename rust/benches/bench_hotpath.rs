@@ -9,9 +9,11 @@
 //!   asserted bitwise-identical before timing (kernel equivalence);
 //! * batched many_to_all throughput across thread counts (the engine's
 //!   parallel backend), per-query canonical scan **and** the norm-cached
-//!   panel kernel (`many_to_all_panel` records) — the PR 5 comparison:
-//!   the panel path must beat the per-query scan at d=100, and its rows
-//!   are asserted within the guard bound of the canonical rows before
+//!   panel kernel at both precisions (`many_to_all_panel` /
+//!   `many_to_all_panel_f32` records) — the PR 5/PR 6 comparison: the
+//!   panel paths must beat the per-query scan at d=100, and each
+//!   precision's rows are asserted within its own guard bound (and its
+//!   row sums within the guard-sum band) of the canonical rows before
 //!   timing;
 //! * XLA/PJRT one-to-all dispatch (the AOT JAX+Pallas kernel) across d;
 //! * Dijkstra one-to-all on a road network (graph hot loop), sequential
@@ -22,19 +24,19 @@
 //!
 //! Run: cargo bench --bench bench_hotpath
 //! Set TRIMED_BENCH_JSON=path to also write the records as JSON
-//! (BENCH_PR5.json schema, a superset of BENCH_PR2's). Set
+//! (BENCH_PR6.json schema, a superset of BENCH_PR2/PR5's). Set
 //! TRIMED_BENCH_N to shrink the point count (CI smoke runs use 4000; the
 //! default 50000 is the acceptance size).
 
 use trimed::algo::{trimed_medoid, trimed_with_opts, TrimedOpts};
 use trimed::data::simd::{kernel_name, squared_euclidean_portable};
 use trimed::data::synthetic::uniform_cube;
-use trimed::engine::Kernel;
+use trimed::engine::{Kernel, Precision};
 use trimed::graph::dijkstra::dijkstra_all;
 use trimed::graph::generators::road_network;
 use trimed::harness::available_threads;
 use trimed::harness::bench::{fmt_ns, time_block};
-use trimed::metric::{MetricSpace, VectorMetric, XlaVectorMetric};
+use trimed::metric::{FastScratch, MetricSpace, VectorMetric, XlaVectorMetric};
 use trimed::runtime::{artifacts_available, Runtime};
 
 /// One benchmark record for the JSON perf trajectory.
@@ -49,8 +51,8 @@ struct Record {
     kernel: &'static str,
 }
 
-/// Serialise as `{"records": [...]}` — the shape BENCH_PR5.json's
-/// regeneration recipe commits verbatim (superset of BENCH_PR2's).
+/// Serialise as `{"records": [...]}` — the shape BENCH_PR6.json's
+/// regeneration recipe commits verbatim (superset of BENCH_PR2/PR5's).
 fn json(records: &[Record]) -> String {
     let mut s = String::from("{\"records\": [\n");
     for (i, r) in records.iter().enumerate() {
@@ -149,7 +151,8 @@ fn main() {
     }
 
     // Batched many_to_all: the engine's parallel backend — the PR 2
-    // per-query canonical scan vs the PR 5 norm-cached panel kernel.
+    // per-query canonical scan vs the norm-cached panel kernel at both
+    // panel precisions (PR 5 f64, PR 6 f32 over the mirror).
     println!();
     for d in [2usize, 10, 100] {
         let pts = uniform_cube(n, d, 1);
@@ -159,17 +162,41 @@ fn main() {
         let mut out = vec![0.0; batch * n];
         let mut fast = vec![0.0; batch * n];
         let mut guard = vec![0.0; batch];
-        let mut scratch = Vec::new();
-        // Guard-soundness check before timing: every panel row entry
-        // must sit within sqrt(guard) of the canonical entry.
+        let mut guard_sum = vec![0.0; batch];
+        let mut scratch = FastScratch::default();
+        // Guard-soundness check per precision before timing: every
+        // panel row entry must sit within sqrt(guard) of the canonical
+        // entry, and each row's summed gap within guard_sum — the exact
+        // contract the engine's refinement rule relies on.
         m.set_threads(1);
         m.many_to_all(&ids, &mut out);
-        assert!(m.many_to_all_fast(&ids, &mut fast, &mut guard, &mut scratch));
-        for q in 0..batch {
-            let g = guard[q].sqrt();
-            for j in 0..n {
-                let gap = (fast[q * n + j] - out[q * n + j]).abs();
-                assert!(gap <= g, "panel guard violated at d={d} q={q} j={j}: {gap} > {g}");
+        for precision in [Precision::F64, Precision::F32] {
+            assert!(m.many_to_all_fast(
+                &ids,
+                &mut fast,
+                &mut guard,
+                &mut guard_sum,
+                &mut scratch,
+                precision
+            ));
+            for q in 0..batch {
+                let g = guard[q].sqrt();
+                let mut sum_gap = 0.0f64;
+                for j in 0..n {
+                    let gap = (fast[q * n + j] - out[q * n + j]).abs();
+                    assert!(
+                        gap <= g,
+                        "panel guard violated at {} d={d} q={q} j={j}: {gap} > {g}",
+                        precision.name()
+                    );
+                    sum_gap += gap;
+                }
+                assert!(
+                    sum_gap <= guard_sum[q],
+                    "panel guard_sum violated at {} d={d} q={q}: {sum_gap} > {}",
+                    precision.name(),
+                    guard_sum[q]
+                );
             }
         }
         for threads in [1usize, max_threads] {
@@ -190,25 +217,38 @@ fn main() {
                 wall_ns: stats.median_ns,
                 kernel: kernel_name(),
             });
-            let stats_p = time_block(2, 10, || {
-                let _ = m.many_to_all_fast(&ids, &mut fast, &mut guard, &mut scratch);
-            });
-            println!(
-                "many_to_all_panel d={d:<3} B={batch} t={threads}: {}  ({:.1} Mdist/s, {:.2}x of per-query)",
-                stats_p.summary(),
-                (batch * n) as f64 / stats_p.median_ns * 1e3,
-                stats.median_ns / stats_p.median_ns
-            );
-            records.push(Record {
-                name: "many_to_all_panel",
-                n,
-                d,
-                threads,
-                batch,
-                computed: batch as u64,
-                wall_ns: stats_p.median_ns,
-                kernel: kernel_name(),
-            });
+            for precision in [Precision::F64, Precision::F32] {
+                let stats_p = time_block(2, 10, || {
+                    let _ = m.many_to_all_fast(
+                        &ids,
+                        &mut fast,
+                        &mut guard,
+                        &mut guard_sum,
+                        &mut scratch,
+                        precision,
+                    );
+                });
+                let rec_name = match precision {
+                    Precision::F64 => "many_to_all_panel",
+                    Precision::F32 => "many_to_all_panel_f32",
+                };
+                println!(
+                    "{rec_name:<21} d={d:<3} B={batch} t={threads}: {}  ({:.1} Mdist/s, {:.2}x of per-query)",
+                    stats_p.summary(),
+                    (batch * n) as f64 / stats_p.median_ns * 1e3,
+                    stats.median_ns / stats_p.median_ns
+                );
+                records.push(Record {
+                    name: rec_name,
+                    n,
+                    d,
+                    threads,
+                    batch,
+                    computed: batch as u64,
+                    wall_ns: stats_p.median_ns,
+                    kernel: kernel_name(),
+                });
+            }
             if max_threads == 1 {
                 break;
             }
@@ -384,7 +424,7 @@ fn main() {
         }
     }
 
-    println!("\nBENCH_PR5 records:\n{}", json(&records));
+    println!("\nBENCH_PR6 records:\n{}", json(&records));
     if let Ok(path) = std::env::var("TRIMED_BENCH_JSON") {
         std::fs::write(&path, json(&records)).expect("write TRIMED_BENCH_JSON");
         println!("wrote {path}");

@@ -51,6 +51,11 @@ pub struct TopRankOpts {
     /// results to be well-defined; there is no elimination threshold for
     /// a guard band to protect.
     pub kernel: crate::engine::Kernel,
+    /// Accepted for configuration parity (`--precision` plumbs through
+    /// every opt struct), but a no-op here for the same reason as
+    /// [`TopRankOpts::kernel`]: with no fast path there is no panel
+    /// arithmetic to select.
+    pub precision: crate::engine::Precision,
 }
 
 impl Default for TopRankOpts {
@@ -64,6 +69,7 @@ impl Default for TopRankOpts {
             batch_auto: false,
             threads: 0,
             kernel: crate::engine::Kernel::Fast,
+            precision: crate::engine::Precision::F64,
         }
     }
 }

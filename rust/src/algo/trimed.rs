@@ -34,7 +34,9 @@
 //! `S_out(j) ≥ S_out(i) − N·d(i,j)` and `S_out(j) ≥ N·d(j,i) − S_in(i)`.
 
 use super::sum_to_energy;
-use crate::engine::{run_elimination, BestSumRule, EngineOpts, FullSpace, Kernel, TopKSumRule};
+use crate::engine::{
+    run_elimination, BestSumRule, EngineOpts, FullSpace, Kernel, Precision, TopKSumRule,
+};
 use crate::metric::MetricSpace;
 use crate::rng::Rng;
 
@@ -87,6 +89,14 @@ pub struct TrimedOpts {
     /// counts and all lower-bound bits included), or on data whose huge
     /// coordinate norms degenerate the guard band (see DESIGN.md).
     pub kernel: Kernel,
+    /// Fast-panel arithmetic (`--precision f64|f32`); meaningful only
+    /// under [`Kernel::Fast`]. [`Precision::F32`] streams the f32 mirror
+    /// of the rows at double SIMD width behind the correspondingly
+    /// widened guard band — the returned medoid and energy stay
+    /// identical, bit for bit, only the refinement count (and wall
+    /// clock) moves. Backends silently fall back to f64 panels where f32
+    /// would be unsafe (norms near f32 overflow).
+    pub precision: Precision,
 }
 
 impl Default for TrimedOpts {
@@ -101,6 +111,7 @@ impl Default for TrimedOpts {
             batch_auto: false,
             threads: 0,
             kernel: Kernel::Fast,
+            precision: Precision::F64,
         }
     }
 }
@@ -165,6 +176,7 @@ pub fn trimed_with_opts<M: MetricSpace>(metric: &M, opts: &TrimedOpts) -> Trimed
             slack: opts.slack,
             record_trace: opts.record_trace,
             kernel: opts.kernel,
+            precision: opts.precision,
         },
     );
 
@@ -234,6 +246,7 @@ pub fn trimed_topk_with_opts<M: MetricSpace>(
             slack: opts.slack,
             record_trace: false,
             kernel: opts.kernel,
+            precision: opts.precision,
         },
     );
 

@@ -5,20 +5,25 @@ pub mod io;
 pub mod simd;
 pub mod synthetic;
 
+use std::sync::OnceLock;
+
 /// A dense row-major set of `n` points in R^d.
 ///
 /// This is the single vector-data container used across the library: the
 /// native metric, the XLA metric, generators and loaders all speak
 /// `Points`. Stored as `f64` for exact paper-metric accounting; the XLA
-/// path down-converts to `f32` at the artifact boundary.
+/// path down-converts to `f32` at the artifact boundary, and the fast
+/// panel path can run in f32 too via the lazily-materialized
+/// [`Points::rows_f32`] mirror (guard-band refinement keeps results
+/// bit-identical either way).
 ///
 /// Every point's squared norm is cached at construction (and maintained
 /// by [`Points::push`]): the norm-trick panel kernels
 /// ([`simd::panel_rows`]) expand `‖x−y‖² = ‖x‖² + ‖y‖² − 2⟨x,y⟩` and
 /// would otherwise recompute `Θ(N)` norms on every batched scan. The
 /// cache is a pure function of the data (fixed summation chain), so
-/// derived equality and cloning stay consistent.
-#[derive(Clone, Debug, PartialEq)]
+/// equality and cloning stay consistent.
+#[derive(Clone, Debug)]
 pub struct Points {
     d: usize,
     data: Vec<f64>,
@@ -28,6 +33,47 @@ pub struct Points {
     /// the panel error bounds query it once per batched scan, so it must
     /// not cost an O(N) pass there.
     max_sq_norm: f64,
+    /// Running sum of `sq_norms[i].sqrt()` (`Σ_j ‖x_j‖`), folded in on
+    /// push — the per-query *sum* guards of the fast path use it to
+    /// bound `Σ_j √(‖q‖² + ‖x_j‖²)` at O(1) per query instead of
+    /// inflating every row to the max norm.
+    sum_root_norms: f64,
+    /// Lazily-materialized f32 mirror for the mixed-precision panel
+    /// path. `push` extends it in place once built; bulk rebuilds
+    /// (e.g. [`Points::center`]) reset it so the next f32 scan
+    /// re-materializes from the current f64 rows.
+    f32: OnceLock<F32Mirror>,
+}
+
+/// The f32 copy of the rows plus its own norm caches, built on first
+/// use by an f32 panel scan. Norms here are computed *in f32 over the
+/// converted rows* — the exact inputs the f32 panel kernel consumes —
+/// so the norm-trick identity holds in the mirror's own arithmetic.
+/// Error bounds still use the f64 caches (upper bounds must not round
+/// down).
+#[derive(Clone, Debug)]
+struct F32Mirror {
+    data: Vec<f32>,
+    sq_norms: Vec<f32>,
+    max_sq_norm: f32,
+}
+
+impl F32Mirror {
+    fn build(d: usize, data: &[f64]) -> Self {
+        let rows: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+        let sq_norms: Vec<f32> = rows.chunks_exact(d).map(row_sq_norm_f32).collect();
+        let max_sq_norm = sq_norms.iter().fold(0.0f32, |a, &b| a.max(b));
+        F32Mirror { data: rows, sq_norms, max_sq_norm }
+    }
+}
+
+/// Caches are pure functions of `(d, data)`, so equality is equality of
+/// the rows; the lazily-built f32 mirror must not (and, holding a
+/// `OnceLock`, cannot) participate.
+impl PartialEq for Points {
+    fn eq(&self, other: &Self) -> bool {
+        self.d == other.d && self.data == other.data
+    }
 }
 
 /// Squared norm of one row: a fixed sequential `mul_add` chain, so the
@@ -38,6 +84,12 @@ fn row_sq_norm(row: &[f64]) -> f64 {
     row.iter().fold(0.0f64, |acc, &v| v.mul_add(v, acc))
 }
 
+/// f32 twin of [`row_sq_norm`]: same fixed chain, run in f32 over the
+/// mirrored rows (fused on every target via `mul_add`).
+fn row_sq_norm_f32(row: &[f32]) -> f32 {
+    row.iter().fold(0.0f32, |acc, &v| v.mul_add(v, acc))
+}
+
 impl Points {
     /// Create from row-major data; `data.len()` must be a multiple of `d`.
     pub fn new(d: usize, data: Vec<f64>) -> Self {
@@ -45,7 +97,8 @@ impl Points {
         assert_eq!(data.len() % d, 0, "data length {} not a multiple of d={}", data.len(), d);
         let sq_norms: Vec<f64> = data.chunks_exact(d).map(row_sq_norm).collect();
         let max_sq_norm = sq_norms.iter().fold(0.0f64, |a, &b| a.max(b));
-        Points { d, data, sq_norms, max_sq_norm }
+        let sum_root_norms = sq_norms.iter().fold(0.0f64, |a, &b| a + b.sqrt());
+        Points { d, data, sq_norms, max_sq_norm, sum_root_norms, f32: OnceLock::new() }
     }
 
     /// Empty set with capacity for `n` points.
@@ -56,6 +109,8 @@ impl Points {
             data: Vec::with_capacity(d * n),
             sq_norms: Vec::with_capacity(n),
             max_sq_norm: 0.0,
+            sum_root_norms: 0.0,
+            f32: OnceLock::new(),
         }
     }
 
@@ -81,12 +136,27 @@ impl Points {
     }
 
     /// Append one point (must have length `d`).
+    ///
+    /// All caches stay coherent at O(d) per push: the f64 norm caches
+    /// (`max_sq_norm` stays an O(1) incremental fold, as does the
+    /// root-norm sum), and — when an f32 scan has already materialized
+    /// the mirror — the mirror's rows and norms are extended in place
+    /// rather than invalidated, so a push between fast rounds never
+    /// triggers an O(N·d) rebuild and never leaves the mirror stale.
     pub fn push(&mut self, p: &[f64]) {
         assert_eq!(p.len(), self.d);
         self.data.extend_from_slice(p);
         let n = row_sq_norm(p);
         self.sq_norms.push(n);
         self.max_sq_norm = self.max_sq_norm.max(n);
+        self.sum_root_norms += n.sqrt();
+        if let Some(m) = self.f32.get_mut() {
+            let start = m.data.len();
+            m.data.extend(p.iter().map(|&v| v as f32));
+            let nf = row_sq_norm_f32(&m.data[start..]);
+            m.sq_norms.push(nf);
+            m.max_sq_norm = m.max_sq_norm.max(nf);
+        }
     }
 
     /// Flat row-major storage.
@@ -112,6 +182,85 @@ impl Points {
     #[inline]
     pub fn max_sq_norm(&self) -> f64 {
         self.max_sq_norm
+    }
+
+    /// `Σ_j sqrt(sq_norm(j))` — the sum of cached row norms, maintained
+    /// incrementally by `new`/`push`. The fast path's per-query *sum*
+    /// guard uses it (`Σ_j √(c(‖q‖²+‖x_j‖²)) ≤ √c·(n‖q‖ + Σ_j‖x_j‖)` by
+    /// √-subadditivity), which keeps one outlier row from inflating the
+    /// guard of every element the way a `max_sq_norm`-only bound does.
+    /// Callers must add summation-slack before relying on it as an upper
+    /// bound (the incremental fold accrues ≤ n·ε relative error).
+    #[inline]
+    pub fn sum_root_norms(&self) -> f64 {
+        self.sum_root_norms
+    }
+
+    /// Row-major f32 mirror of all rows (built on first use; kept
+    /// coherent by [`Points::push`]). This is what the f32 panel kernel
+    /// streams — half the memory traffic of the f64 rows.
+    #[inline]
+    pub fn rows_f32(&self) -> &[f32] {
+        &self.mirror().data
+    }
+
+    /// Per-row squared norms of the f32 mirror, computed in f32 over
+    /// the converted rows ([`row_sq_norm_f32`]'s fixed chain).
+    #[inline]
+    pub fn sq_norms_f32(&self) -> &[f32] {
+        &self.mirror().sq_norms
+    }
+
+    /// Largest f32-mirror squared norm (0 for an empty set).
+    #[inline]
+    pub fn max_sq_norm_f32(&self) -> f32 {
+        self.mirror().max_sq_norm
+    }
+
+    fn mirror(&self) -> &F32Mirror {
+        self.f32.get_or_init(|| F32Mirror::build(self.d, &self.data))
+    }
+
+    /// Translate every point by minus the dataset mean (computed per
+    /// coordinate in f64) and rebuild all caches. Returns the mean that
+    /// was subtracted so callers can map external queries into the
+    /// centered frame.
+    ///
+    /// Pairwise Euclidean distances are translation-invariant in exact
+    /// arithmetic, and after centering the row norms — the terms that
+    /// drive the panel error bounds — shrink to the data's spread
+    /// around its mean instead of its distance from the origin. On
+    /// norm-dominated data (tight cluster far from 0) this collapses
+    /// the guard band from "refine everything" to its normal width; see
+    /// DESIGN.md §Mixed-precision panels. In floating point the
+    /// centered distances may differ from the uncentered ones in final
+    /// ulps, so centering is a *data-loading* choice (the CLI's
+    /// `--center`), never something a kernel applies on one side of a
+    /// fast/exact comparison.
+    pub fn center(&mut self) -> Vec<f64> {
+        let n = self.len();
+        let mut mean = vec![0.0f64; self.d];
+        if n == 0 {
+            return mean;
+        }
+        for row in self.data.chunks_exact(self.d) {
+            for (m, &v) in mean.iter_mut().zip(row) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        for row in self.data.chunks_exact_mut(self.d) {
+            for (v, &m) in row.iter_mut().zip(&mean) {
+                *v -= m;
+            }
+        }
+        self.sq_norms = self.data.chunks_exact(self.d).map(row_sq_norm).collect();
+        self.max_sq_norm = self.sq_norms.iter().fold(0.0f64, |a, &b| a.max(b));
+        self.sum_root_norms = self.sq_norms.iter().fold(0.0f64, |a, &b| a + b.sqrt());
+        self.f32 = OnceLock::new();
+        mean
     }
 
     /// Euclidean distance between rows i and j.
@@ -222,6 +371,75 @@ mod tests {
         // select/project go through push, so their caches stay in sync.
         let q = p.select(&[2, 0]);
         assert_eq!(q.sq_norms(), &[100.0, 25.0]);
+    }
+
+    #[test]
+    fn f32_mirror_matches_rows_and_tracks_push() {
+        let mut p = Points::new(2, vec![3.0, 4.0, 0.5, -1.5]);
+        // Materialize, then check the mirror is the rounded rows with
+        // f32-chain norms.
+        assert_eq!(p.rows_f32(), &[3.0f32, 4.0, 0.5, -1.5]);
+        assert_eq!(p.sq_norms_f32(), &[25.0f32, 2.5]);
+        assert_eq!(p.max_sq_norm_f32(), 25.0f32);
+        // Push after materialization must extend the mirror in place.
+        p.push(&[6.0, 8.0]);
+        assert_eq!(p.rows_f32().len(), 6);
+        assert_eq!(p.rows_f32()[4..], [6.0f32, 8.0]);
+        assert_eq!(p.sq_norms_f32(), &[25.0f32, 2.5, 100.0]);
+        assert_eq!(p.max_sq_norm_f32(), 100.0f32);
+        // And the f64 caches stay coherent alongside.
+        assert_eq!(p.max_sq_norm(), 100.0);
+        assert!((p.sum_root_norms() - (5.0 + 2.5f64.sqrt() + 10.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_mirror_push_equals_bulk_build() {
+        // The push-extended mirror must be bitwise the mirror a fresh
+        // Points would build from the same rows.
+        let d = 5;
+        let data: Vec<f64> = (0..6 * d).map(|i| ((i as f64) * 0.7).sin() * 3.0).collect();
+        let mut grown = Points::new(d, data[..3 * d].to_vec());
+        let _ = grown.rows_f32(); // materialize early
+        for r in 3..6 {
+            grown.push(&data[r * d..(r + 1) * d]);
+        }
+        let fresh = Points::new(d, data);
+        assert_eq!(grown.rows_f32(), fresh.rows_f32());
+        assert_eq!(grown.sq_norms_f32(), fresh.sq_norms_f32());
+        assert_eq!(grown.max_sq_norm_f32(), fresh.max_sq_norm_f32());
+        assert_eq!(grown.sq_norms(), fresh.sq_norms());
+    }
+
+    #[test]
+    fn center_preserves_distances_and_shrinks_norms() {
+        let d = 3;
+        let data: Vec<f64> = (0..40 * d)
+            .map(|i| 1e6 + ((i as f64) * 0.37).sin()) // tight cluster far from 0
+            .collect();
+        let mut p = Points::new(d, data);
+        let _ = p.rows_f32(); // stale mirror must be dropped by center()
+        let before_max = p.max_sq_norm();
+        let d01 = p.dist(0, 1);
+        let mean = p.center();
+        assert_eq!(mean.len(), d);
+        assert!((mean[0] - 1e6).abs() < 1.0);
+        // Distances survive (up to last-ulp rounding of the translation).
+        assert!((p.dist(0, 1) - d01).abs() <= 1e-9 * d01.max(1.0));
+        // Norms collapse from ~1e12 to the cluster spread.
+        assert!(p.max_sq_norm() < 1e-6 * before_max);
+        // The rebuilt mirror reflects the centered rows.
+        assert!(p.max_sq_norm_f32() < 10.0);
+        assert_eq!(p.rows_f32().len(), p.flat().len());
+    }
+
+    #[test]
+    fn equality_ignores_lazy_mirror_state() {
+        let a = Points::new(2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Points::new(2, vec![1.0, 2.0, 3.0, 4.0]);
+        let _ = a.rows_f32(); // only one side materialized
+        assert_eq!(a, b);
+        let c = Points::new(2, vec![1.0, 2.0, 3.0, 5.0]);
+        assert_ne!(a, c);
     }
 
     #[test]

@@ -56,10 +56,19 @@ type RowsFn = unsafe fn(&[f64], &[f64], &mut [f64]);
 /// the implementation's CPU features.
 type PanelFn = unsafe fn(&[f64], &[f64], &[f64], &[f64], usize, &mut [f64], usize);
 
+/// f32 panel-scan form (the mixed-precision fast path, see
+/// [`panel_rows_f32`]): inputs are the f32 mirror rows and *its* norm
+/// caches; output distances are still f64 (the combine converts once,
+/// exactly, before the f64 sqrt).
+/// SAFETY contract: shape invariants asserted by [`panel_rows_f32`],
+/// plus the implementation's CPU features.
+type PanelF32Fn = unsafe fn(&[f32], &[f32], &[f32], &[f32], usize, &mut [f64], usize);
+
 struct Selected {
     kernel: KernelFn,
     rows: RowsFn,
     panel: PanelFn,
+    panel_f32: PanelF32Fn,
     name: &'static str,
 }
 
@@ -75,6 +84,7 @@ fn selected() -> &'static Selected {
                     kernel: avx2::squared_euclidean,
                     rows: avx2::euclidean_rows,
                     panel: avx2::panel_rows,
+                    panel_f32: avx2::panel_rows_f32,
                     name: "avx2+fma",
                 };
             }
@@ -86,6 +96,7 @@ fn selected() -> &'static Selected {
                     kernel: neon::squared_euclidean,
                     rows: neon::euclidean_rows,
                     panel: neon::panel_rows,
+                    panel_f32: neon::panel_rows_f32,
                     name: "neon",
                 };
             }
@@ -94,6 +105,7 @@ fn selected() -> &'static Selected {
             kernel: portable_kernel,
             rows: portable_rows,
             panel: portable_panel,
+            panel_f32: portable_panel_f32,
             name: "portable",
         }
     })
@@ -193,6 +205,55 @@ pub fn panel_rows(
     unsafe { (sel.panel)(queries, q_sq_norms, rows, row_sq_norms, d, out, out_stride) }
 }
 
+/// Mixed-precision panel scan: the norm-trick rectangle of
+/// [`panel_rows`], computed in **f32** over the
+/// [`crate::data::Points::rows_f32`] mirror — 8 lanes per register on
+/// AVX2/NEON and half the memory traffic, which is the whole point on
+/// compute-bound d=100 scans.
+///
+/// `queries`/`rows` are f32 mirror rows, `q_sq_norms`/`row_sq_norms`
+/// the mirror's own f32 norm caches (so the norm identity holds in the
+/// arithmetic actually performed). The combine
+/// `√(max(qn + rn − 2·dot, 0))` runs its adds in f32, converts to f64
+/// (exact) and takes the f64 sqrt — see [`panel_error_bound_f32`] for
+/// the widened discrepancy bound vs the canonical f64 kernel.
+///
+/// Determinism contract, exactly as for [`panel_rows`]: all three
+/// implementations accumulate the dot on the same **eight** lanes
+/// (lane `l` owns elements `8c+l`) with the shared reduction
+/// `(((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))) + tail`, so AVX2, NEON and
+/// portable agree bitwise with [`panel_rows_f32_portable`], and results
+/// are independent of panel grouping, block boundaries and thread
+/// splits.
+///
+/// Shape contract: identical to [`panel_rows`] (per-slice lengths in
+/// units of `d`; `out` strided by `out_stride ≥ row count`).
+pub fn panel_rows_f32(
+    queries: &[f32],
+    q_sq_norms: &[f32],
+    rows: &[f32],
+    row_sq_norms: &[f32],
+    d: usize,
+    out: &mut [f64],
+    out_stride: usize,
+) {
+    let (nq, nr) = (q_sq_norms.len(), row_sq_norms.len());
+    assert_eq!(queries.len(), nq * d, "queries must be q_sq_norms.len() × d");
+    assert_eq!(rows.len(), nr * d, "rows must be row_sq_norms.len() × d");
+    if nq == 0 || nr == 0 {
+        return;
+    }
+    assert!(out_stride >= nr, "out_stride {out_stride} narrower than row count {nr}");
+    assert!(
+        out.len() >= (nq - 1) * out_stride + nr,
+        "out too short for {nq} query rows at stride {out_stride}"
+    );
+    let sel = selected();
+    // SAFETY: CPU features were verified at selection; the shape
+    // invariants the implementations index by were just asserted.
+    unsafe { (sel.panel_f32)(queries, q_sq_norms, rows, row_sq_norms, d, out, out_stride) }
+}
+
 /// Rigorous bound on `|panel squared distance − canonical squared
 /// distance|` for any pair whose cached squared norms are at most `nx`
 /// and `ny`.
@@ -213,6 +274,46 @@ pub fn panel_rows(
 /// only moves its value toward the true root.
 pub fn panel_error_bound(d: usize, nx: f64, ny: f64) -> f64 {
     (4.0 * d as f64 + 8.0) * f64::EPSILON * (nx + ny)
+}
+
+/// f32 twin of [`panel_error_bound`]: bound on `|f32 panel squared
+/// distance − canonical f64 squared distance|` for a pair whose **f64**
+/// cached squared norms are at most `nx` and `ny` (the f64 caches are
+/// the trustworthy upper bounds; the mirror's f32 norms are the scan
+/// inputs, not the bound inputs).
+///
+/// Same structure as the f64 derivation with ε₃₂ = `f32::EPSILON` in
+/// place of ε, which yields the `4d+8` envelope for the in-f32
+/// arithmetic (8-lane fused dot, f32 norm caches, f32 combine), plus
+/// two extra sources the f64 path does not have:
+/// * the f64→f32 *input* conversion perturbs each coordinate by
+///   `≤ ε₃₂/2` relatively, shifting the true squared distance by
+///   `≤ 2‖x−y‖·‖δ‖ + ‖δ‖² ≤ 2ε₃₂(nx+ny) + O(ε₃₂²)`
+///   (`‖x−y‖² ≤ 2(nx+ny)`, `‖δ‖ ≤ (ε₃₂/2)·(‖x‖+‖y‖)`);
+/// * the f32→f64 output conversion, which is exact (every f32 is an
+///   f64) and contributes nothing.
+/// The canonical f64 kernel's own `γ_{d+2}` term is `ε/ε₃₂ ≈ 2⁻²⁹`
+/// of a unit here — absorbed. Summing: `(4d+8+2)·ε₃₂·(nx+ny)`; the
+/// `4d+16` constant covers it with slack. Pinned against measured gaps
+/// across scales 1e-6..1e12 by
+/// `panel_f32_error_bound_dominates_observed_gap`.
+///
+/// The relative-error model needs the f32 arithmetic to stay in normal
+/// range, at both ends:
+/// * **underflow**: once intermediates go subnormal, rounding error is
+///   *absolute* (`≤ 2⁻¹⁴⁹` per op), not relative — the
+///   `f32::MIN_POSITIVE` floor in the formula dominates any such sum
+///   while staying invisible at every normal scale;
+/// * **overflow**: if an intermediate hits ±∞ the gap is unbounded, so
+///   the caller must not run the f32 panel at all when `4·max‖x‖²`
+///   nears `f32::MAX` — `metric::vector` gates on
+///   `F32_SAFE_MAX_SQ_NORM` and silently stays on the f64 panel there.
+///
+/// As with the f64 bound, the bound on the *distance* after sqrt is
+/// `e.sqrt()`, since `|√a − √b| ≤ √|a−b|` for `a, b ≥ 0` and the clamp
+/// only moves the panel value toward the true root.
+pub fn panel_error_bound_f32(d: usize, nx: f64, ny: f64) -> f64 {
+    (4.0 * d as f64 + 16.0) * ((f32::EPSILON as f64) * (nx + ny) + f32::MIN_POSITIVE as f64)
 }
 
 /// Portable reference implementation of the panel scan. Public so tests
@@ -260,6 +361,81 @@ fn dot_portable(a: &[f64], b: &[f64]) -> f64 {
 #[inline]
 fn panel_combine(qn: f64, rn: f64, dot: f64) -> f64 {
     ((qn + rn) - 2.0 * dot).max(0.0).sqrt()
+}
+
+/// Portable reference implementation of the f32 panel scan — the
+/// determinism pin for [`panel_rows_f32`], as [`panel_rows_portable`]
+/// is for the f64 panel.
+pub fn panel_rows_f32_portable(
+    queries: &[f32],
+    q_sq_norms: &[f32],
+    rows: &[f32],
+    row_sq_norms: &[f32],
+    d: usize,
+    out: &mut [f64],
+    out_stride: usize,
+) {
+    // SAFETY: no CPU features required; shape contract is the caller's
+    // (tests call with the same shapes they hand panel_rows_f32).
+    unsafe { portable_panel_f32(queries, q_sq_norms, rows, row_sq_norms, d, out, out_stride) }
+}
+
+/// Eight-lane fused f32 dot product: the f32 panel kernels' shared
+/// accumulation chain (lane `l` owns elements `8c+l`, reduction
+/// `(((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))) + tail`). The pairing
+/// mirrors how an 8-wide register reduces on AVX2 (fold the two 128-bit
+/// halves, then the f64 kernel's 4-lane tree) and on NEON (two f32x4
+/// accumulators folded element-wise, then the same tree), which is what
+/// lets all three implementations agree bitwise.
+fn dot_f32_portable(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let base = c * 8;
+        for (lane, slot) in acc.iter_mut().enumerate() {
+            *slot = a[base + lane].mul_add(b[base + lane], *slot);
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..a.len() {
+        tail = a[i].mul_add(b[i], tail);
+    }
+    (((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]))) + tail
+}
+
+/// f32 combine step shared by every f32 panel implementation: the norm
+/// identity evaluated in f32 (`2.0·dot` exact, adds correctly rounded),
+/// clamped, converted to f64 (exact — every finite f32 is an f64) and
+/// rooted by the correctly-rounded f64 sqrt. Deterministic given a
+/// deterministic dot. Callers keep the inputs out of f32 overflow
+/// range (`metric::vector`'s `F32_SAFE_MAX_SQ_NORM` gate) — were an
+/// intermediate to hit ±∞ anyway, the engine's refine condition is
+/// written inf/NaN-safe as defense in depth.
+#[inline]
+fn panel_combine_f32(qn: f32, rn: f32, dot: f32) -> f64 {
+    let s = (qn + rn) - 2.0 * dot;
+    (s.max(0.0) as f64).sqrt()
+}
+
+/// Portable f32 panel scan (see [`PanelF32Fn`]).
+unsafe fn portable_panel_f32(
+    queries: &[f32],
+    q_sq_norms: &[f32],
+    rows: &[f32],
+    row_sq_norms: &[f32],
+    d: usize,
+    out: &mut [f64],
+    out_stride: usize,
+) {
+    for (qi, &qn) in q_sq_norms.iter().enumerate() {
+        let q = &queries[qi * d..(qi + 1) * d];
+        let base = qi * out_stride;
+        for (j, &rn) in row_sq_norms.iter().enumerate() {
+            let dot = dot_f32_portable(q, &rows[j * d..(j + 1) * d]);
+            out[base + j] = panel_combine_f32(qn, rn, dot);
+        }
+    }
 }
 
 /// Portable panel scan (see [`PanelFn`]).
@@ -464,6 +640,108 @@ mod avx2 {
             qi += 1;
         }
     }
+
+    /// `(((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7)))` reduction of an 8-lane
+    /// f32 accumulator: fold the two 128-bit halves into
+    /// `[l0+l4, l1+l5, l2+l6, l3+l7]`, then the f64 kernel's 4-lane
+    /// tree — the pairing `dot_f32_portable` replays in scalar code.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn hsum_ps(acc: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(acc); // [l0, l1, l2, l3]
+        let hi = _mm256_extractf128_ps::<1>(acc); // [l4, l5, l6, l7]
+        let pair = _mm_add_ps(lo, hi); // [A0, A1, A2, A3]
+        let upper = _mm_movehl_ps(pair, pair); // [A2, A3, ·, ·]
+        let sum2 = _mm_add_ps(pair, upper); // [A0+A2, A1+A3, ·, ·]
+        let s1 = _mm_shuffle_ps::<0x55>(sum2, sum2); // [A1+A3, ·, ·, ·]
+        _mm_cvtss_f32(_mm_add_ss(sum2, s1)) // (A0+A2)+(A1+A3)
+    }
+
+    /// f32 panel scan on AVX2+FMA (see `PanelF32Fn` / `panel_rows_f32`):
+    /// queries in groups of four, each with one 8-lane f32 accumulator,
+    /// so every row-block load feeds four FMAs at twice the f64 lane
+    /// width. Per-query chains (8-lane FMA dot, canonical reduce,
+    /// scalar f32 FMA tail) are identical in the 4-panel and the
+    /// remainder loop, and match `dot_f32_portable` bitwise.
+    ///
+    /// SAFETY: AVX2+FMA available, plus the `panel_rows_f32` shape
+    /// contract.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub(super) unsafe fn panel_rows_f32(
+        queries: &[f32],
+        q_sq_norms: &[f32],
+        rows: &[f32],
+        row_sq_norms: &[f32],
+        d: usize,
+        out: &mut [f64],
+        out_stride: usize,
+    ) {
+        let nq = q_sq_norms.len();
+        let chunks = d / 8;
+        let qp = queries.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut qi = 0usize;
+        while qi + 4 <= nq {
+            let q0 = qp.add(qi * d);
+            let q1 = qp.add((qi + 1) * d);
+            let q2 = qp.add((qi + 2) * d);
+            let q3 = qp.add((qi + 3) * d);
+            for (j, &rn) in row_sq_norms.iter().enumerate() {
+                let r = rows.as_ptr().add(j * d);
+                let mut a0 = _mm256_setzero_ps();
+                let mut a1 = _mm256_setzero_ps();
+                let mut a2 = _mm256_setzero_ps();
+                let mut a3 = _mm256_setzero_ps();
+                for c in 0..chunks {
+                    let vr = _mm256_loadu_ps(r.add(c * 8));
+                    a0 = _mm256_fmadd_ps(_mm256_loadu_ps(q0.add(c * 8)), vr, a0);
+                    a1 = _mm256_fmadd_ps(_mm256_loadu_ps(q1.add(c * 8)), vr, a1);
+                    a2 = _mm256_fmadd_ps(_mm256_loadu_ps(q2.add(c * 8)), vr, a2);
+                    a3 = _mm256_fmadd_ps(_mm256_loadu_ps(q3.add(c * 8)), vr, a3);
+                }
+                let (mut t0, mut t1, mut t2, mut t3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for i in chunks * 8..d {
+                    let rv = *r.add(i);
+                    t0 = (*q0.add(i)).mul_add(rv, t0);
+                    t1 = (*q1.add(i)).mul_add(rv, t1);
+                    t2 = (*q2.add(i)).mul_add(rv, t2);
+                    t3 = (*q3.add(i)).mul_add(rv, t3);
+                }
+                *op.add(qi * out_stride + j) =
+                    super::panel_combine_f32(q_sq_norms[qi], rn, hsum_ps(a0) + t0);
+                *op.add((qi + 1) * out_stride + j) =
+                    super::panel_combine_f32(q_sq_norms[qi + 1], rn, hsum_ps(a1) + t1);
+                *op.add((qi + 2) * out_stride + j) =
+                    super::panel_combine_f32(q_sq_norms[qi + 2], rn, hsum_ps(a2) + t2);
+                *op.add((qi + 3) * out_stride + j) =
+                    super::panel_combine_f32(q_sq_norms[qi + 3], rn, hsum_ps(a3) + t3);
+            }
+            qi += 4;
+        }
+        while qi < nq {
+            let q = qp.add(qi * d);
+            for (j, &rn) in row_sq_norms.iter().enumerate() {
+                let r = rows.as_ptr().add(j * d);
+                let mut acc = _mm256_setzero_ps();
+                for c in 0..chunks {
+                    acc = _mm256_fmadd_ps(
+                        _mm256_loadu_ps(q.add(c * 8)),
+                        _mm256_loadu_ps(r.add(c * 8)),
+                        acc,
+                    );
+                }
+                let mut tail = 0.0f32;
+                for i in chunks * 8..d {
+                    tail = (*q.add(i)).mul_add(*r.add(i), tail);
+                }
+                *op.add(qi * out_stride + j) =
+                    super::panel_combine_f32(q_sq_norms[qi], rn, hsum_ps(acc) + tail);
+            }
+            qi += 1;
+        }
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -618,6 +896,123 @@ mod neon {
             for (j, &rn) in row_sq_norms.iter().enumerate() {
                 let dp = dot(q, rows.as_ptr().add(j * d), d);
                 *op.add(qi * out_stride + j) = super::panel_combine(q_sq_norms[qi], rn, dp);
+            }
+            qi += 1;
+        }
+    }
+
+    /// Single-query fused f32 dot on the canonical eight lanes: `acc_a`
+    /// holds lanes {0..3} (elements `8c+0..3`), `acc_b` lanes {4..7}
+    /// (elements `8c+4..7`); element-wise fold gives
+    /// `[l0+l4, l1+l5, l2+l6, l3+l7]` and the 4-lane tree finishes
+    /// `(((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))) + tail` — bitwise the
+    /// `dot_f32_portable` chain.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_f32(q: *const f32, r: *const f32, d: usize) -> f32 {
+        let chunks = d / 8;
+        let mut acc_a = vdupq_n_f32(0.0);
+        let mut acc_b = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let base = c * 8;
+            acc_a = vfmaq_f32(acc_a, vld1q_f32(q.add(base)), vld1q_f32(r.add(base)));
+            acc_b = vfmaq_f32(acc_b, vld1q_f32(q.add(base + 4)), vld1q_f32(r.add(base + 4)));
+        }
+        let pair = vaddq_f32(acc_a, acc_b); // [A0, A1, A2, A3]
+        let p2 = vadd_f32(vget_low_f32(pair), vget_high_f32(pair)); // [A0+A2, A1+A3]
+        let head = vget_lane_f32::<0>(p2) + vget_lane_f32::<1>(p2);
+        let mut tail = 0.0f32;
+        for i in chunks * 8..d {
+            tail = (*q.add(i)).mul_add(*r.add(i), tail);
+        }
+        head + tail
+    }
+
+    /// Canonical 8-lane reduction for an a/b f32x4 accumulator pair:
+    /// `(((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))) + tail`.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn fold8(a: float32x4_t, b: float32x4_t, t: f32) -> f32 {
+        let pair = vaddq_f32(a, b); // [A0, A1, A2, A3]
+        let p2 = vadd_f32(vget_low_f32(pair), vget_high_f32(pair)); // [A0+A2, A1+A3]
+        (vget_lane_f32::<0>(p2) + vget_lane_f32::<1>(p2)) + t
+    }
+
+    /// f32 panel scan on NEON (see `PanelF32Fn` / `panel_rows_f32`):
+    /// queries in groups of four, eight f32x4 accumulators (an a/b pair
+    /// per query covering canonical lanes {0..3}/{4..7}), each
+    /// row-block load shared by four FMA pairs. Per-query chains match
+    /// [`dot_f32`] (and `dot_f32_portable`) bitwise, so grouping is
+    /// unobservable.
+    ///
+    /// SAFETY: NEON available, plus the `panel_rows_f32` shape contract.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn panel_rows_f32(
+        queries: &[f32],
+        q_sq_norms: &[f32],
+        rows: &[f32],
+        row_sq_norms: &[f32],
+        d: usize,
+        out: &mut [f64],
+        out_stride: usize,
+    ) {
+        let nq = q_sq_norms.len();
+        let chunks = d / 8;
+        let qp = queries.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut qi = 0usize;
+        while qi + 4 <= nq {
+            let q0 = qp.add(qi * d);
+            let q1 = qp.add((qi + 1) * d);
+            let q2 = qp.add((qi + 2) * d);
+            let q3 = qp.add((qi + 3) * d);
+            for (j, &rn) in row_sq_norms.iter().enumerate() {
+                let r = rows.as_ptr().add(j * d);
+                let mut a0_a = vdupq_n_f32(0.0);
+                let mut a0_b = vdupq_n_f32(0.0);
+                let mut a1_a = vdupq_n_f32(0.0);
+                let mut a1_b = vdupq_n_f32(0.0);
+                let mut a2_a = vdupq_n_f32(0.0);
+                let mut a2_b = vdupq_n_f32(0.0);
+                let mut a3_a = vdupq_n_f32(0.0);
+                let mut a3_b = vdupq_n_f32(0.0);
+                for c in 0..chunks {
+                    let base = c * 8;
+                    let r_a = vld1q_f32(r.add(base));
+                    let r_b = vld1q_f32(r.add(base + 4));
+                    a0_a = vfmaq_f32(a0_a, vld1q_f32(q0.add(base)), r_a);
+                    a0_b = vfmaq_f32(a0_b, vld1q_f32(q0.add(base + 4)), r_b);
+                    a1_a = vfmaq_f32(a1_a, vld1q_f32(q1.add(base)), r_a);
+                    a1_b = vfmaq_f32(a1_b, vld1q_f32(q1.add(base + 4)), r_b);
+                    a2_a = vfmaq_f32(a2_a, vld1q_f32(q2.add(base)), r_a);
+                    a2_b = vfmaq_f32(a2_b, vld1q_f32(q2.add(base + 4)), r_b);
+                    a3_a = vfmaq_f32(a3_a, vld1q_f32(q3.add(base)), r_a);
+                    a3_b = vfmaq_f32(a3_b, vld1q_f32(q3.add(base + 4)), r_b);
+                }
+                let (mut t0, mut t1, mut t2, mut t3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for i in chunks * 8..d {
+                    let rv = *r.add(i);
+                    t0 = (*q0.add(i)).mul_add(rv, t0);
+                    t1 = (*q1.add(i)).mul_add(rv, t1);
+                    t2 = (*q2.add(i)).mul_add(rv, t2);
+                    t3 = (*q3.add(i)).mul_add(rv, t3);
+                }
+                *op.add(qi * out_stride + j) =
+                    super::panel_combine_f32(q_sq_norms[qi], rn, fold8(a0_a, a0_b, t0));
+                *op.add((qi + 1) * out_stride + j) =
+                    super::panel_combine_f32(q_sq_norms[qi + 1], rn, fold8(a1_a, a1_b, t1));
+                *op.add((qi + 2) * out_stride + j) =
+                    super::panel_combine_f32(q_sq_norms[qi + 2], rn, fold8(a2_a, a2_b, t2));
+                *op.add((qi + 3) * out_stride + j) =
+                    super::panel_combine_f32(q_sq_norms[qi + 3], rn, fold8(a3_a, a3_b, t3));
+            }
+            qi += 4;
+        }
+        while qi < nq {
+            let q = qp.add(qi * d);
+            for (j, &rn) in row_sq_norms.iter().enumerate() {
+                let dp = dot_f32(q, rows.as_ptr().add(j * d), d);
+                *op.add(qi * out_stride + j) = super::panel_combine_f32(q_sq_norms[qi], rn, dp);
             }
             qi += 1;
         }
@@ -808,6 +1203,143 @@ mod tests {
             out[0],
             e.sqrt()
         );
+    }
+
+    /// f32 view of [`panel_fixture`]: converted rows plus the f32-chain
+    /// norms the mirror would cache (sequential `mul_add` fold, exactly
+    /// `data::row_sq_norm_f32`).
+    fn to_f32(v: &[f64], d: usize) -> (Vec<f32>, Vec<f32>) {
+        let rows: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+        let norms: Vec<f32> = rows
+            .chunks_exact(d)
+            .map(|r| r.iter().fold(0.0f32, |a, &x| x.mul_add(x, a)))
+            .collect();
+        (rows, norms)
+    }
+
+    #[test]
+    fn panel_f32_matches_portable_panel_bitwise() {
+        // Same determinism pin as the f64 panel: dispatched == portable
+        // bitwise, and query-set splits (remainder loop covers nq mod 4,
+        // chunk loop covers d mod 8) reproduce the joint run.
+        for d in [1usize, 2, 3, 7, 8, 9, 10, 16, 100, 101] {
+            for nq in [1usize, 2, 3, 4, 5, 6, 9] {
+                let (q, _, r, _) = panel_fixture(nq, 11, d, 1.0, d as u64 + nq as u64);
+                let (qf, qn) = to_f32(&q, d);
+                let (rf, rn) = to_f32(&r, d);
+                let mut got = vec![-1.0; nq * 11];
+                panel_rows_f32(&qf, &qn, &rf, &rn, d, &mut got, 11);
+                let mut reference = vec![-1.0; nq * 11];
+                panel_rows_f32_portable(&qf, &qn, &rf, &rn, d, &mut reference, 11);
+                assert!(
+                    got == reference,
+                    "d={d} nq={nq} kernel={}: dispatched f32 panel diverged from portable",
+                    kernel_name()
+                );
+                for split in 1..nq {
+                    let mut parts = vec![-1.0; nq * 11];
+                    panel_rows_f32(&qf[..split * d], &qn[..split], &rf, &rn, d, &mut parts, 11);
+                    panel_rows_f32(
+                        &qf[split * d..],
+                        &qn[split..],
+                        &rf,
+                        &rn,
+                        d,
+                        &mut parts[split * 11..],
+                        11,
+                    );
+                    assert!(parts == got, "f32 d={d} nq={nq} split={split}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_f32_error_bound_dominates_observed_gap() {
+        // The mixed-precision guard-band argument rests on this: the
+        // measured |f32 panel − canonical f64| gap — squared and after
+        // sqrt — stays inside panel_error_bound_f32 (fed the *f64*
+        // norms) at every scale, including the 1e12 adversarial scale
+        // where f32 has ~1e5 absolute coordinate rounding.
+        for &scale in &[1.0, 1e-6, 1e6, 1e12] {
+            for d in [1usize, 2, 3, 5, 8, 10, 100] {
+                let (q, qn64, r, rn64) = panel_fixture(5, 23, d, scale, d as u64);
+                let (qf, qn) = to_f32(&q, d);
+                let (rf, rn) = to_f32(&r, d);
+                let mut fast = vec![0.0; 5 * 23];
+                panel_rows_f32(&qf, &qn, &rf, &rn, d, &mut fast, 23);
+                for (qi, &qnv) in qn64.iter().enumerate() {
+                    for (j, &rnv) in rn64.iter().enumerate() {
+                        let e = panel_error_bound_f32(d, qnv, rnv);
+                        let canon_sq =
+                            squared_euclidean(&q[qi * d..(qi + 1) * d], &r[j * d..(j + 1) * d]);
+                        let fast_d = fast[qi * 23 + j];
+                        let gap_sq = (fast_d * fast_d - canon_sq).abs();
+                        assert!(
+                            gap_sq <= e,
+                            "f32 scale={scale} d={d} ({qi},{j}): sq gap {gap_sq} > bound {e}"
+                        );
+                        let gap_d = (fast_d - canon_sq.sqrt()).abs();
+                        assert!(
+                            gap_d <= e.sqrt(),
+                            "f32 scale={scale} d={d} ({qi},{j}): dist gap {gap_d} > {}",
+                            e.sqrt()
+                        );
+                    }
+                }
+            }
+        }
+        // Catastrophic cancellation at the f32 scale: rows within one
+        // f64 ulp-ish of a query at huge norms. The f32 panel value for
+        // the tiny true distance is pure noise — but bounded noise.
+        let d = 8usize;
+        let q: Vec<f64> = (0..d).map(|i| 1e12 + i as f64 * 3.0e5).collect();
+        let mut r = q.clone();
+        r[3] += 1.0;
+        let qn64 = q.iter().fold(0.0f64, |a, &x| x.mul_add(x, a));
+        let rn64 = r.iter().fold(0.0f64, |a, &x| x.mul_add(x, a));
+        let (qf, qn) = to_f32(&q, d);
+        let (rf, rn) = to_f32(&r, d);
+        let mut out = vec![0.0];
+        panel_rows_f32(&qf, &qn, &rf, &rn, d, &mut out, 1);
+        let canon = squared_euclidean(&q, &r).sqrt();
+        let e = panel_error_bound_f32(d, qn64, rn64);
+        assert!(
+            (out[0] - canon).abs() <= e.sqrt(),
+            "f32 cancellation: panel {} vs canonical {canon}, bound {}",
+            out[0],
+            e.sqrt()
+        );
+    }
+
+    #[test]
+    fn panel_f32_clamps_identical_pairs_to_zero_distance() {
+        let d = 5usize;
+        let (q, qn64, _, _) = panel_fixture(1, 1, d, 1e6, 9);
+        let (qf, qn) = to_f32(&q, d);
+        let mut out = vec![-1.0];
+        panel_rows_f32(&qf, &qn, &qf, &qn, d, &mut out, 1);
+        assert!(out[0] >= 0.0 && out[0] <= panel_error_bound_f32(d, qn64[0], qn64[0]).sqrt());
+    }
+
+    #[test]
+    fn panel_f32_stride_writes_only_its_columns() {
+        let d = 3usize;
+        let (q, _, r, _) = panel_fixture(2, 4, d, 1.0, 3);
+        let (qf, qn) = to_f32(&q, d);
+        let (rf, rn) = to_f32(&r, d);
+        let mut out = vec![f64::NAN; 2 * 10];
+        panel_rows_f32(&qf, &qn, &rf, &rn, d, &mut out[..14], 10);
+        for qi in 0..2 {
+            for j in 0..4 {
+                assert!(out[qi * 10 + j].is_finite());
+            }
+            for j in 4..10 {
+                if qi * 10 + j < 14 {
+                    assert!(out[qi * 10 + j].is_nan(), "f32 column {j} of query {qi} clobbered");
+                }
+            }
+        }
     }
 
     #[test]

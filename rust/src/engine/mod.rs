@@ -49,9 +49,11 @@
 //!
 //! * A computed element whose approximate sum `Ŝ` satisfies
 //!   `Ŝ − E_q < threshold` — i.e. whose canonical sum *could* fall below
-//!   the rule's threshold (`E_q` bounds `|Ŝ − S_canonical|` via `n·√e_q`
-//!   plus both summations' rounding) — is **recomputed through the
-//!   canonical kernel** before the rule observes it. Since every rule
+//!   the rule's threshold (`E_q` bounds `|Ŝ − S_canonical|` via the
+//!   backend's per-query *summed* guard — per-element norms, not
+//!   `n·√e_q` against the max norm — plus both summations' rounding) —
+//!   is **recomputed through the canonical kernel** before the rule
+//!   observes it. Since every rule
 //!   update requires `sum < threshold` strictly, any element that can
 //!   change rule state is observed with its exact sum; elements observed
 //!   approximately are certainly at-or-above the threshold and provably
@@ -81,7 +83,7 @@ pub mod space;
 pub use rules::{BestSumRule, ClusterMedoidRule, EliminationRule, TopKSumRule};
 pub use space::{EliminationSpace, FullSpace, SubsetSpace};
 
-use crate::metric::MetricSpace;
+use crate::metric::{FastScratch, MetricSpace};
 
 /// Distance-kernel selection for engine compute rounds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -115,6 +117,45 @@ impl Kernel {
     }
 }
 
+/// Floating-point precision of the *fast* panel path
+/// ([`Kernel::Fast`] rounds; the canonical kernel and every reported
+/// result stay f64 regardless).
+///
+/// Under [`Precision::F32`] the panel scans stream the f32 mirror of
+/// the rows at double SIMD lane width and half the memory traffic, with
+/// the correspondingly widened error bound
+/// ([`crate::data::simd::panel_error_bound_f32`]) feeding the same
+/// guard band — so results remain identical to the exact kernel's,
+/// only [`EngineRun::refined`] (and wall time) moves. A backend may
+/// fall back to f64 panels where f32 is unsafe (norms near f32
+/// overflow); the guards always describe the arithmetic actually run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// f64 panels — the default.
+    F64,
+    /// f32 panels behind the widened guard band.
+    F32,
+}
+
+impl Precision {
+    /// Parse `"f64"` or `"f32"`; anything else is `None`.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f64" => Some(Precision::F64),
+            "f32" => Some(Precision::F32),
+            _ => None,
+        }
+    }
+
+    /// The CLI/env token for this precision.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+}
+
 /// Options for [`run_elimination`].
 #[derive(Clone, Debug)]
 pub struct EngineOpts {
@@ -143,6 +184,11 @@ pub struct EngineOpts {
     /// the algorithm opt structs opt into [`Kernel::Fast`] (their
     /// default for vector workloads).
     pub kernel: Kernel,
+    /// Precision of the fast panel path (no effect under
+    /// [`Kernel::Exact`]). [`Precision::F32`] widens the guard band's
+    /// `E` — refinement and deflation logic are unchanged — so results
+    /// stay identical to the exact kernel's at either setting.
+    pub precision: Precision,
 }
 
 impl Default for EngineOpts {
@@ -154,6 +200,7 @@ impl Default for EngineOpts {
             slack: 0.0,
             record_trace: false,
             kernel: Kernel::Exact,
+            precision: Precision::F64,
         }
     }
 }
@@ -219,13 +266,15 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
     let mut tight = vec![false; n];
     // Fast-path round state (all zero on exact rounds, so the shared
     // propagation loop below stays bit-identical to the exact path):
-    // per-query squared-error bound from the panel kernel, the derived
-    // per-distance guard g = √e, and the per-sum guard E.
+    // per-query squared-error bound from the panel kernel, its summed
+    // per-row twin, the derived per-distance guard g = √e, and the
+    // per-sum guard E.
     let try_fast = opts.kernel == Kernel::Fast && symmetric;
     let mut guards = vec![0.0f64; b_max];
+    let mut guard_sums = vec![0.0f64; b_max];
     let mut g_dist = vec![0.0f64; b_max];
     let mut e_sum = vec![0.0f64; b_max];
-    let mut scratch: Vec<f64> = Vec::new();
+    let mut scratch = FastScratch::default();
 
     let mut cursor = 0usize;
     while cursor < order.len() {
@@ -262,7 +311,9 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
                 &ids,
                 &mut d_out[..k * n],
                 &mut guards[..k],
+                &mut guard_sums[..k],
                 &mut scratch,
+                opts.precision,
             );
         if !fast {
             space.compute_batch(&ids, &mut d_out[..k * n]);
@@ -284,11 +335,18 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
             let mut s_out: f64 = row.iter().sum();
             let (mut g, mut e) = (0.0f64, 0.0f64);
             if fast {
-                // |Ŝ − S_canonical| ≤ n·√e_q (per-distance guard) plus
-                // the two n-term summations' own rounding.
+                // |Ŝ − S_canonical| ≤ guard_sum (the per-row summed
+                // error bound — per-element-norm tight, always
+                // ≤ n·√e_q) plus the two n-term summations' own
+                // rounding.
                 g = guards[q].sqrt();
-                e = nf * g + 2.0 * nf * f64::EPSILON * (s_out.abs() + nf * g);
-                if s_out - e < rule.threshold() {
+                let gs = guard_sums[q];
+                e = gs + 2.0 * nf * f64::EPSILON * (s_out.abs() + gs);
+                // Written as a negated >= so that a non-finite Ŝ or
+                // guard (f32 overflow defense — NaN/inf compares false)
+                // always lands in the refine branch; for finite values
+                // this is exactly `s_out - e < threshold`.
+                if !(s_out - e >= rule.threshold()) {
                     space.compute_batch(std::slice::from_ref(&ids[q]), row);
                     s_out = row.iter().sum();
                     refined += 1;
@@ -562,6 +620,48 @@ mod tests {
         assert_eq!(Kernel::parse("panel"), None);
         assert_eq!(Kernel::Fast.name(), "fast");
         assert_eq!(Kernel::Exact.name(), "exact");
+    }
+
+    #[test]
+    fn precision_parses_cli_tokens() {
+        assert_eq!(Precision::parse("f64"), Some(Precision::F64));
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("single"), None);
+        assert_eq!(Precision::F64.name(), "f64");
+        assert_eq!(Precision::F32.name(), "f32");
+    }
+
+    #[test]
+    fn f32_fast_kernel_same_best_sum_bitwise() {
+        // The mixed-precision band: wider E, same guard-band argument,
+        // so the medoid and its sum must match the exact kernel
+        // bit-for-bit and bounds must stay sound.
+        let n = 600usize;
+        let m = VectorMetric::new(uniform_cube(n, 3, 21));
+        let order: Vec<usize> = (0..n).collect();
+        let run = |kernel: Kernel, precision: Precision| {
+            let mut lb = vec![0.0; n];
+            let mut rule = BestSumRule::new();
+            let r = run_elimination(
+                &FullSpace::new(&m),
+                &order,
+                &mut lb,
+                &mut rule,
+                &EngineOpts { batch: 16, kernel, precision, ..Default::default() },
+            );
+            (r, rule.best_item, rule.best_sum, lb)
+        };
+        let (_, ie, se, _) = run(Kernel::Exact, Precision::F64);
+        let (rf, i_f, sf, lbf) = run(Kernel::Fast, Precision::F32);
+        assert_eq!(i_f, ie, "f32 fast kernel must find the identical medoid");
+        assert!(sf == se, "best sum must be bit-identical: {sf} vs {se}");
+        assert!(rf.refined >= 1 && rf.refined <= rf.computed);
+        let mut row = vec![0.0; n];
+        for j in 0..n {
+            m.one_to_all(j, &mut row);
+            let s: f64 = row.iter().sum();
+            assert!(lbf[j] <= s + 1e-7, "f32 fast bound {} > sum {s} at {j}", lbf[j]);
+        }
     }
 
     #[test]

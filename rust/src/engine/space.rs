@@ -6,8 +6,14 @@
 //! cluster's member list (trikmeds' medoid update): a compute is the
 //! member's distances to its cluster only, evaluated as point queries so
 //! the paper's `N_c` distance accounting matches the sequential algorithm.
+//! Both spaces expose the guarded fast path — full one-to-all panels and
+//! subset rectangles respectively — so the `--kernel fast` (and
+//! `--precision f32`) machinery reaches trikmeds Alg. 8 too; the engine's
+//! guard-band refinement keeps every consumer's results bit-identical to
+//! the canonical kernel.
 
-use crate::metric::MetricSpace;
+use crate::engine::Precision;
+use crate::metric::{FastScratch, MetricSpace};
 
 /// A universe of items the engine can eliminate over.
 pub trait EliminationSpace {
@@ -37,17 +43,22 @@ pub trait EliminationSpace {
 
     /// Fast-path batched compute (mirrors
     /// [`crate::metric::MetricSpace::many_to_all_fast`]): on `true`,
-    /// `out` holds approximate rows and `guard[q]` a rigorous bound on
-    /// `|fast² − canonical²|` for row `q`; on `false` nothing was
-    /// written and the engine falls back to
-    /// [`EliminationSpace::compute_batch`]. `scratch` is the engine's
-    /// reusable round buffer. Default: no fast path.
+    /// `out` holds approximate rows, `guard[q]` a rigorous bound on
+    /// `|fast² − canonical²|` for every entry of row `q`, and
+    /// `guard_sum[q]` a rigorous bound on row `q`'s summed distance
+    /// error; on `false` nothing was written and the engine falls back
+    /// to [`EliminationSpace::compute_batch`]. `precision` selects the
+    /// panel arithmetic (backends may fall back to f64 where f32 is
+    /// unsafe); `scratch` is the engine's reusable round buffer pair.
+    /// Default: no fast path.
     fn compute_batch_fast(
         &self,
         _ids: &[usize],
         _out: &mut [f64],
         _guard: &mut [f64],
-        _scratch: &mut Vec<f64>,
+        _guard_sum: &mut [f64],
+        _scratch: &mut FastScratch,
+        _precision: Precision,
     ) -> bool {
         false
     }
@@ -88,9 +99,11 @@ impl<M: MetricSpace> EliminationSpace for FullSpace<'_, M> {
         ids: &[usize],
         out: &mut [f64],
         guard: &mut [f64],
-        scratch: &mut Vec<f64>,
+        guard_sum: &mut [f64],
+        scratch: &mut FastScratch,
+        precision: Precision,
     ) -> bool {
-        self.metric.many_to_all_fast(ids, out, guard, scratch)
+        self.metric.many_to_all_fast(ids, out, guard, guard_sum, scratch, precision)
     }
 }
 
@@ -132,6 +145,26 @@ impl<M: MetricSpace> EliminationSpace for SubsetSpace<'_, M> {
         // k × v distance rectangle it unlocks.
         let global: Vec<usize> = ids.iter().map(|&pos| self.members[pos]).collect();
         self.metric.many_to_many(&global, self.members, out);
+    }
+
+    fn compute_batch_fast(
+        &self,
+        ids: &[usize],
+        out: &mut [f64],
+        guard: &mut [f64],
+        guard_sum: &mut [f64],
+        scratch: &mut FastScratch,
+        precision: Precision,
+    ) -> bool {
+        // Same position→global map as `compute_batch`; the fast
+        // rectangle covers exactly the pairs the canonical path would
+        // touch, so `Counted` accounting matches when the backend
+        // reports the rectangle. Guard-band refinement in the engine
+        // keeps Alg. 8's medoid updates bit-identical to the
+        // sequential trajectory.
+        let global: Vec<usize> = ids.iter().map(|&pos| self.members[pos]).collect();
+        self.metric
+            .many_to_many_fast(&global, self.members, out, guard, guard_sum, scratch, precision)
     }
 }
 

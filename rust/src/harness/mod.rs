@@ -14,7 +14,7 @@ pub mod table;
 pub use bench::{time_block, BenchStats};
 pub use table::Table;
 
-use crate::engine::Kernel;
+use crate::engine::{Kernel, Precision};
 
 /// Workload scale for experiment regeneration.
 ///
@@ -124,11 +124,23 @@ pub struct ExecConfig {
     /// bit-level reproduction runs and for data whose coordinate norms
     /// degenerate the guard band (DESIGN.md §Norm-cached panel kernels).
     pub kernel: Kernel,
+    /// Fast-panel arithmetic (`--precision` / `TRIMED_PRECISION`);
+    /// meaningful only under [`Kernel::Fast`]. [`Precision::F32`] runs
+    /// the panels over the f32 mirror behind the widened guard band —
+    /// results stay identical, only refinement counts and wall clock
+    /// move (DESIGN.md §Mixed-precision panels under the guard band).
+    pub precision: Precision,
 }
 
 impl Default for ExecConfig {
     fn default() -> Self {
-        ExecConfig { threads: 1, batch: 1, batch_auto: false, kernel: Kernel::Fast }
+        ExecConfig {
+            threads: 1,
+            batch: 1,
+            batch_auto: false,
+            kernel: Kernel::Fast,
+            precision: Precision::F64,
+        }
     }
 }
 
@@ -138,9 +150,9 @@ impl ExecConfig {
     /// round; the schedule itself keeps small runs narrow.
     pub const AUTO_BATCH_MAX: usize = 64;
 
-    /// From `TRIMED_THREADS` / `TRIMED_BATCH` / `TRIMED_KERNEL`,
-    /// defaulting to sequential rounds on the fast kernel.
-    /// `TRIMED_BATCH=auto` selects the adaptive schedule.
+    /// From `TRIMED_THREADS` / `TRIMED_BATCH` / `TRIMED_KERNEL` /
+    /// `TRIMED_PRECISION`, defaulting to sequential rounds on the fast
+    /// f64 kernel. `TRIMED_BATCH=auto` selects the adaptive schedule.
     pub fn from_env() -> ExecConfig {
         let threads = Self::env_threads().unwrap_or(1);
         let (batch, batch_auto) = match Self::env_batch_spec() {
@@ -148,12 +160,18 @@ impl ExecConfig {
             None => (1, false),
         };
         let kernel = Self::env_kernel().unwrap_or(Kernel::Fast);
-        ExecConfig { threads, batch, batch_auto, kernel }
+        let precision = Self::env_precision().unwrap_or(Precision::F64);
+        ExecConfig { threads, batch, batch_auto, kernel, precision }
     }
 
     /// `TRIMED_KERNEL`, if set to `exact` or `fast`.
     pub fn env_kernel() -> Option<Kernel> {
         std::env::var("TRIMED_KERNEL").ok().and_then(|v| Kernel::parse(&v))
+    }
+
+    /// `TRIMED_PRECISION`, if set to `f64` or `f32`.
+    pub fn env_precision() -> Option<Precision> {
+        std::env::var("TRIMED_PRECISION").ok().and_then(|v| Precision::parse(&v))
     }
 
     /// `TRIMED_THREADS`, if set to a positive integer.
@@ -210,7 +228,13 @@ mod tests {
         let c = ExecConfig::default();
         assert_eq!(
             c,
-            ExecConfig { threads: 1, batch: 1, batch_auto: false, kernel: Kernel::Fast }
+            ExecConfig {
+                threads: 1,
+                batch: 1,
+                batch_auto: false,
+                kernel: Kernel::Fast,
+                precision: Precision::F64,
+            }
         );
         assert_eq!(ExecConfig::batch_for(1), 8);
         assert_eq!(ExecConfig::batch_for(4), 32);

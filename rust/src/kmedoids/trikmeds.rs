@@ -27,11 +27,26 @@
 //! hence the §5.2 KMEDS equivalence — is reproduced exactly; `batch > 1`
 //! evaluates candidate medoids in rounds, reaching the same fixpoint
 //! (elimination is sound either way) at a possibly different distance
-//! count.
+//! count. Under [`Kernel::Fast`] those rounds run as guarded panel
+//! rectangles (optionally f32, [`Precision::F32`]) that the engine
+//! refines back to exactness through the guard band.
+//!
+//! The assignment step (Alg. 9) is block-batched: probe candidates are
+//! collected per block and evaluated as per-medoid
+//! [`MetricSpace::many_to_many`] rectangles — at ε = 0 the assignment
+//! trajectory is provably identical to the sequential sweep (see
+//! [`assign_to_clusters`][self]).
 
 use super::{init, ClusteringResult};
-use crate::engine::{run_elimination, ClusterMedoidRule, EngineOpts, Kernel, SubsetSpace};
+use crate::engine::{run_elimination, ClusterMedoidRule, EngineOpts, Kernel, Precision, SubsetSpace};
 use crate::metric::MetricSpace;
+
+/// Elements per block of the batched assignment step (Alg. 9): bound
+/// decay and probe collection run over a block, then all probes against
+/// one medoid go through a single [`MetricSpace::many_to_many`]
+/// rectangle. 256 rows of `l_c` (k × 8 bytes each) stay cache-resident
+/// between the collect and fold passes.
+const ASSIGN_BLOCK_ROWS: usize = 256;
 
 /// Options for [`trikmeds`].
 #[derive(Clone, Debug)]
@@ -46,11 +61,10 @@ pub struct TrikmedsOpts {
     /// Iteration cap.
     pub max_iters: usize,
     /// Candidate medoids evaluated per engine round in the update step
-    /// (1 = the paper's sequential Alg. 8). The subset backend issues
-    /// point queries, so `batch > 1` reaches the same fixpoint with
-    /// stale-bound overhead and no parallel speedup today — useful for
-    /// batch-invariance testing; a threaded subset backend is an open
-    /// ROADMAP item.
+    /// (1 = the paper's sequential Alg. 8). `batch > 1` reaches the same
+    /// fixpoint (elimination is sound at any width) and lets the subset
+    /// backend evaluate candidates as threaded rectangles — under
+    /// [`Kernel::Fast`], guarded panel rectangles.
     pub batch: usize,
     /// Adaptive engine schedule for the update step (`--batch auto`):
     /// round width starts at 1 and doubles toward `batch` per cluster.
@@ -58,19 +72,25 @@ pub struct TrikmedsOpts {
     /// overhead of a wide fixed batch away from tiny clusters.
     pub batch_auto: bool,
     /// Parallelism hint forwarded to the metric backend; 0 leaves the
-    /// backend's current setting untouched. With a threaded backend the
-    /// medoid update's candidate evaluations
-    /// ([`crate::metric::MetricSpace::many_to_many`]) fan out across OS
-    /// threads per engine round, so `--threads` buys wall-clock in both
-    /// trikmeds hot loops that batch (assignment probes remain pointwise
-    /// — a ROADMAP item).
+    /// backend's current setting untouched. With a threaded backend both
+    /// trikmeds hot loops fan out across OS threads: the medoid update's
+    /// candidate rectangles and the assignment step's per-medoid probe
+    /// rectangles (both via
+    /// [`crate::metric::MetricSpace::many_to_many`]).
     pub threads: usize,
-    /// Engine kernel selection, plumbed for configuration parity
-    /// (`--kernel`). A no-op today: the subset universe computes point
-    /// queries (no fast path), so the engine transparently stays on the
-    /// canonical kernel and the §5.2 KMEDS equivalence is untouched for
-    /// either value.
+    /// Engine kernel for the medoid update (`--kernel`). Under
+    /// [`Kernel::Fast`] the subset universe serves candidate rounds as
+    /// guarded panel rectangles
+    /// ([`crate::metric::MetricSpace::many_to_many_fast`]); the engine's
+    /// guard band refines any sum that could cross the incumbent, so the
+    /// §5.2 KMEDS equivalence — bit for bit — is untouched for either
+    /// value.
     pub kernel: Kernel,
+    /// Fast-panel arithmetic for the medoid update (`--precision`);
+    /// meaningful only under [`Kernel::Fast`]. [`Precision::F32`]
+    /// streams the f32 mirror behind the widened guard band — same
+    /// medoids, same assignments, bit for bit.
+    pub precision: Precision,
 }
 
 /// Initialisation choice for trikmeds.
@@ -95,6 +115,7 @@ impl TrikmedsOpts {
             batch_auto: false,
             threads: 0,
             kernel: Kernel::Fast,
+            precision: Precision::F64,
         }
     }
 }
@@ -235,6 +256,7 @@ fn update_medoids<M: MetricSpace>(metric: &M, st: &mut State, opts: &TrikmedsOpt
                 batch_auto: opts.batch_auto,
                 eps: opts.eps,
                 kernel: opts.kernel,
+                precision: opts.precision,
                 ..Default::default()
             },
         );
@@ -269,7 +291,32 @@ fn update_medoids<M: MetricSpace>(metric: &M, st: &mut State, opts: &TrikmedsOpt
     any_moved
 }
 
-/// Alg. 9. Returns true if any assignment changed.
+/// Alg. 9, block-batched. Returns true if any assignment changed.
+///
+/// The paper's sequential loop probes one `(element, medoid)` pair at a
+/// time. We run three passes per [`ASSIGN_BLOCK_ROWS`]-element block:
+///
+/// 1. **collect** — decay each element's `l_c` row by the medoid
+///    movements `p(c)`, pin the incumbent entry to the exact `d(i)`, and
+///    record every pair with `l_c(i,c)·(1+ε) < d(i)` (`c ≠ a(i)`) as a
+///    probe candidate, grouped by medoid;
+/// 2. **probe** — for each medoid, evaluate all its candidates in one
+///    [`MetricSpace::many_to_many`] rectangle (threaded backends fan the
+///    rows out across OS threads) and write the exact distances back
+///    into `l_c`;
+/// 3. **fold** — re-derive each element's assignment by scanning its
+///    probes in ascending medoid order with the strict `d < d_min` test,
+///    starting from the incumbent.
+///
+/// The candidate set is a *superset* of the sequential probe set (the
+/// sequential `d_min` only shrinks below `d(i)` mid-sweep). At ε = 0
+/// extra probes can never win the strict fold — any pair the sequential
+/// sweep skipped satisfies `dist ≥ l_c ≥ d_min-at-that-point ≥ final
+/// d_min` — so assignment, `d(i)`, and the flux counters are *identical*
+/// to the sequential trajectory (§5.2 equivalence holds; only the
+/// distance count may grow, and the extra exact values tighten `l_c`).
+/// At ε > 0 batched and sequential are both valid trikmeds-ε executions
+/// and may diverge, exactly as the paper permits.
 fn assign_to_clusters<M: MetricSpace>(metric: &M, st: &mut State, eps: f64) -> bool {
     let k = st.k;
     let n = st.assign.len();
@@ -280,44 +327,77 @@ fn assign_to_clusters<M: MetricSpace>(metric: &M, st: &mut State, eps: f64) -> b
         st.dn_out[c] = 0;
     }
     let mut changed = false;
-    for i in 0..n {
-        // Decay bounds by medoid movement.
-        let row = &mut st.lc[i * k..(i + 1) * k];
-        for (c, l) in row.iter_mut().enumerate() {
-            *l = (*l - st.p[c]).max(0.0);
-        }
-        // Current assignment is exact.
-        let a_old = st.assign[i];
-        let d_old = st.d[i];
-        row[a_old] = d_old;
-        let mut a = a_old;
-        let mut dmin = d_old;
+    // Per-medoid probe lists, reused across blocks.
+    let mut cand_ids: Vec<Vec<usize>> = vec![Vec::new(); k];
+    let mut cand_d: Vec<Vec<f64>> = vec![Vec::new(); k];
+    let mut block_start = 0;
+    while block_start < n {
+        let block_end = (block_start + ASSIGN_BLOCK_ROWS).min(n);
+        // Pass 1: decay, pin the exact incumbent, collect probes.
         for c in 0..k {
-            if c == a {
-                continue;
+            cand_ids[c].clear();
+        }
+        for i in block_start..block_end {
+            let row = &mut st.lc[i * k..(i + 1) * k];
+            for (c, l) in row.iter_mut().enumerate() {
+                *l = (*l - st.p[c]).max(0.0);
             }
-            // Bound test with the trikmeds-ε relaxation: we tolerate an
-            // assignment within a factor 1+eps of the nearest medoid.
-            if st.lc[i * k + c] * (1.0 + eps) < dmin {
-                let dd = metric.dist(i, st.medoids[c]);
-                st.lc[i * k + c] = dd;
-                if dd < dmin {
-                    a = c;
-                    dmin = dd;
+            let a_old = st.assign[i];
+            let d_old = st.d[i];
+            row[a_old] = d_old;
+            for (c, l) in row.iter().enumerate() {
+                // Bound test with the trikmeds-ε relaxation, against the
+                // sweep's starting incumbent (see the superset note above).
+                if c != a_old && l * (1.0 + eps) < d_old {
+                    cand_ids[c].push(i);
                 }
             }
         }
-        if a != a_old {
-            changed = true;
-            st.assign[i] = a;
-            st.d[i] = dmin;
-            st.ls[i] = 0.0; // unknown in the new cluster
-            st.dn_in[a] += 1;
-            st.dn_out[a_old] += 1;
-            st.ds_in[a] += dmin;
-            st.ds_out[a_old] += d_old;
-            // Move between member lists lazily: rebuild below.
+        // Pass 2: one rectangle per medoid; exact values tighten l_c.
+        for c in 0..k {
+            let ids = &cand_ids[c];
+            if ids.is_empty() {
+                continue;
+            }
+            cand_d[c].clear();
+            cand_d[c].resize(ids.len(), 0.0);
+            metric.many_to_many(ids, &st.medoids[c..c + 1], &mut cand_d[c]);
+            for (&i, &dd) in ids.iter().zip(&cand_d[c]) {
+                st.lc[i * k + c] = dd;
+            }
         }
+        // Pass 3: fold probes in ascending medoid order per element.
+        // (Medoid-outer iteration visits each element's probes in
+        // ascending c, which is all the strict `<` tie-break needs.)
+        let mut best_a: Vec<usize> = st.assign[block_start..block_end].to_vec();
+        let mut best_d: Vec<f64> = st.d[block_start..block_end].to_vec();
+        for c in 0..k {
+            for (&i, &dd) in cand_ids[c].iter().zip(&cand_d[c]) {
+                let bi = i - block_start;
+                if dd < best_d[bi] {
+                    best_a[bi] = c;
+                    best_d[bi] = dd;
+                }
+            }
+        }
+        for i in block_start..block_end {
+            let bi = i - block_start;
+            let (a, dmin) = (best_a[bi], best_d[bi]);
+            let a_old = st.assign[i];
+            if a != a_old {
+                changed = true;
+                let d_old = st.d[i];
+                st.assign[i] = a;
+                st.d[i] = dmin;
+                st.ls[i] = 0.0; // unknown in the new cluster
+                st.dn_in[a] += 1;
+                st.dn_out[a_old] += 1;
+                st.ds_in[a] += dmin;
+                st.ds_out[a_old] += d_old;
+                // Move between member lists lazily: rebuild below.
+            }
+        }
+        block_start = block_end;
     }
     if changed {
         for m in st.members.iter_mut() {

@@ -16,7 +16,7 @@ use trimed::algo::{
 use trimed::cli::Args;
 use trimed::data::synthetic as syn;
 use trimed::data::{io as data_io, Points};
-use trimed::engine::Kernel;
+use trimed::engine::{Kernel, Precision};
 use trimed::harness::experiments;
 use trimed::harness::{BatchSpec, ExecConfig, Scale};
 use trimed::kmedoids::{kmeds, trikmeds, KmedsOpts, TrikmedsOpts};
@@ -29,9 +29,11 @@ trimed — sub-quadratic exact medoid computation (Newling & Fleuret, AISTATS 20
 
 USAGE:
   trimed medoid   [--data SPEC] [--n N] [--d D] [--seed S] [--algo A] [--eps E]
-                  [--threads T] [--batch B] [--kernel exact|fast] [--xla]
+                  [--threads T] [--batch B] [--kernel exact|fast]
+                  [--precision f64|f32] [--center auto|on|off] [--xla]
   trimed kmedoids [--data SPEC] [--n N] [--d D] [--seed S] [--k K] [--eps E]
                   [--threads T] [--batch B] [--kernel exact|fast]
+                  [--precision f64|f32] [--center auto|on|off]
                   [--algo trikmeds|kmeds]
   trimed exp      --id fig3|table1|table2|table3|fig4|fig7|all [--scale small|medium|full] [--seed S] [--save DIR]
   trimed artifacts [--dir DIR]
@@ -44,16 +46,14 @@ ALGORITHMS (--algo for medoid):
 
 PARALLELISM:
   --threads T  OS threads per batched distance pass (default
-               $TRIMED_THREADS or 1). Speeds up `medoid`; for `kmedoids`
-               it is currently a no-op — both trikmeds hot loops run
-               point queries (threaded subset backend is a ROADMAP item)
+               $TRIMED_THREADS or 1). Speeds up `medoid` and both
+               trikmeds hot loops (candidate rectangles in the medoid
+               update, per-medoid probe rectangles in the assignment
+               step)
   --batch B    elements computed per engine round (default $TRIMED_BATCH;
-               for `medoid` a lone --threads > 1 widens it to 8*T, capped
-               at 64); medoid algorithms stay exact for any B, at slightly
-               more computed elements when B > 1. For `kmedoids` B stays 1
-               unless set explicitly: the update step runs point queries,
-               so B > 1 there only trades extra distances for determinism
-               experiments, not speed
+               a lone --threads > 1 widens it to 8*T, capped at 64);
+               algorithms stay exact for any B, at slightly more computed
+               elements when B > 1
   --batch auto adaptive schedule: each engine run starts at B=1 (so the
                first round establishes a threshold instead of computing a
                full batch blind) and doubles toward 64 as rounds survive.
@@ -66,11 +66,25 @@ PARALLELISM:
                elements), most work on a GEMM-style dot-product path;
                `exact` pins the canonical difference-form kernel
                (bit-level reproduction runs, or data whose huge
-               coordinate norms degenerate the guard band). Only trimed
-               has a fast path: toprank/rand/scan report the sums they
-               compute (always canonical), and graphs/--xla have no
-               panel backend — the dataset line prints the kernel that
-               actually runs
+               coordinate norms degenerate the guard band). trimed and
+               the trikmeds medoid update have fast paths; toprank, rand
+               and scan report the sums they compute (always canonical),
+               and graphs/--xla have no panel backend — the dataset line
+               prints the kernel that actually runs
+  --precision P fast-panel arithmetic (default $TRIMED_PRECISION or
+               `f64`); meaningful only with --kernel fast. `f32` streams
+               an f32 mirror of the rows at double SIMD width behind a
+               correspondingly widened guard band: same medoids,
+               bit-identical sums, more guard-band refinements. Data
+               with norms near f32 overflow silently falls back to f64
+               panels. The dataset line prints the effective precision
+  --center C   subtract the per-coordinate dataset mean at load
+               (auto|on|off; default auto = center exactly when the fast
+               f32 path is selected). Centering shrinks coordinate norms
+               — tightening the panel guard bands, which is what keeps
+               f32 refinement rates low on offset data — and preserves
+               every pairwise distance up to f64 rounding, so it is a
+               data-loading choice, not an approximation toggle
 ";
 
 fn load_data(args: &Args) -> Result<Points> {
@@ -95,11 +109,12 @@ fn load_data(args: &Args) -> Result<Points> {
     })
 }
 
-/// Parse `--threads`/`--batch` over the env defaults. `batch_heuristic`
-/// widens the default batch to feed a lone `--threads` (used by `medoid`,
-/// whose hot pass is the batched backend; `kmedoids`' medoid update runs
-/// point queries, where a wider batch only adds stale-bound overhead) —
-/// an explicit `--batch` or `TRIMED_BATCH` (even `=1`) always wins.
+/// Parse `--threads`/`--batch`/`--kernel`/`--precision` over the env
+/// defaults. `batch_heuristic` widens the default batch to feed a lone
+/// `--threads` (used where the hot pass is the batched backend: `medoid`
+/// natively, and `kmedoids` trikmeds, whose update rounds and assignment
+/// probes both run threaded rectangles) — an explicit `--batch` or
+/// `TRIMED_BATCH` (even `=1`) always wins.
 fn exec_config(args: &Args, batch_heuristic: bool) -> Result<ExecConfig> {
     let env = ExecConfig::from_env();
     let threads = args.get_parsed("threads", env.threads)?.max(1);
@@ -120,11 +135,32 @@ fn exec_config(args: &Args, batch_heuristic: bool) -> Result<ExecConfig> {
             None => bail!("--kernel expects `exact` or `fast`, got {v:?}"),
         }
     }
-    Ok(ExecConfig { threads, batch: batch.max(1), batch_auto, kernel })
+    let mut precision = env.precision;
+    if let Some(v) = args.get("precision") {
+        match Precision::parse(v) {
+            Some(p) => precision = p,
+            None => bail!("--precision expects `f64` or `f32`, got {v:?}"),
+        }
+    }
+    Ok(ExecConfig { threads, batch: batch.max(1), batch_auto, kernel, precision })
+}
+
+/// Resolve `--center`: `on`/`off` are explicit; `auto` (the default)
+/// centers exactly when the guarded fast f32 path is what will run —
+/// that is where smaller norms buy tighter guard bands. Centering
+/// preserves pairwise distances (up to f64 rounding), so it never flips
+/// a result; see [`Points::center`].
+fn resolve_center(args: &Args, auto_on: bool) -> Result<bool> {
+    Ok(match args.get("center").unwrap_or("auto") {
+        "auto" => auto_on,
+        "on" => true,
+        "off" => false,
+        other => bail!("--center expects `auto`, `on` or `off`, got {other:?}"),
+    })
 }
 
 fn cmd_medoid(args: &Args) -> Result<()> {
-    let pts = load_data(args)?;
+    let mut pts = load_data(args)?;
     let seed = args.get_parsed("seed", 0u64)?;
     let eps = args.get_parsed("eps", 0.0f64)?;
     let algo = args.get("algo").unwrap_or("trimed");
@@ -132,22 +168,31 @@ fn cmd_medoid(args: &Args) -> Result<()> {
     // for a lone --threads would only add stale-bound dispatches there;
     // an explicit --batch / TRIMED_BATCH still applies.
     let exec = exec_config(args, !args.flag("xla"))?;
-    let (n, d) = (pts.len(), pts.dim());
     // Only the engine-backed trimed path actually runs the fast kernel:
     // TOPRANK's sums *are* its results (kernel is a documented no-op)
     // and rand/scan compute everything they report — print the kernel
-    // that will really run so bench logs attribute timings correctly.
-    let effective_kernel = if algo == "trimed" && !args.flag("xla") {
-        exec.kernel.name()
+    // (and panel precision) that will really run so bench logs attribute
+    // timings correctly.
+    let fast_engine = algo == "trimed" && !args.flag("xla");
+    let effective_kernel = if fast_engine { exec.kernel.name() } else { "exact" };
+    let effective_precision = if fast_engine && exec.kernel == Kernel::Fast {
+        exec.precision.name()
     } else {
-        "exact"
+        "f64"
     };
+    let center = resolve_center(args, effective_precision == "f32")?;
+    if center {
+        pts.center();
+    }
+    let (n, d) = (pts.len(), pts.dim());
     println!(
-        "dataset: N={n} d={d} algo={algo} threads={} batch={}{} kernel={} xla={}",
+        "dataset: N={n} d={d} algo={algo} threads={} batch={}{} kernel={} precision={} center={} xla={}",
         exec.threads,
         exec.batch,
         if exec.batch_auto { " (auto)" } else { "" },
         effective_kernel,
+        effective_precision,
+        center,
         args.flag("xla")
     );
 
@@ -166,6 +211,7 @@ fn cmd_medoid(args: &Args) -> Result<()> {
                         batch_auto: exec.batch_auto,
                         threads: exec.threads,
                         kernel: exec.kernel,
+                        precision: exec.precision,
                         ..Default::default()
                     },
                 );
@@ -180,6 +226,7 @@ fn cmd_medoid(args: &Args) -> Result<()> {
                         batch_auto: exec.batch_auto,
                         threads: exec.threads,
                         kernel: exec.kernel,
+                        precision: exec.precision,
                         ..Default::default()
                     },
                 );
@@ -194,6 +241,7 @@ fn cmd_medoid(args: &Args) -> Result<()> {
                         batch_auto: exec.batch_auto,
                         threads: exec.threads,
                         kernel: exec.kernel,
+                        precision: exec.precision,
                         ..Default::default()
                     },
                 );
@@ -240,13 +288,36 @@ fn cmd_medoid(args: &Args) -> Result<()> {
 }
 
 fn cmd_kmedoids(args: &Args) -> Result<()> {
-    let pts = load_data(args)?;
+    let mut pts = load_data(args)?;
     let seed = args.get_parsed("seed", 0u64)?;
     let k = args.get_parsed("k", 10usize)?;
     let eps = args.get_parsed("eps", 0.0f64)?;
     let algo = args.get("algo").unwrap_or("trikmeds");
-    let exec = exec_config(args, false)?;
-    let n = pts.len();
+    // trikmeds' hot loops are batched rectangles, so a lone --threads
+    // deserves the same widened default batch as `medoid`; KMEDS is the
+    // plain quadratic reference and takes no engine options.
+    let exec = exec_config(args, algo == "trikmeds")?;
+    let fast_engine = algo == "trikmeds";
+    let effective_kernel = if fast_engine { exec.kernel.name() } else { "exact" };
+    let effective_precision = if fast_engine && exec.kernel == Kernel::Fast {
+        exec.precision.name()
+    } else {
+        "f64"
+    };
+    let center = resolve_center(args, effective_precision == "f32")?;
+    if center {
+        pts.center();
+    }
+    let (n, d) = (pts.len(), pts.dim());
+    println!(
+        "dataset: N={n} d={d} algo={algo} K={k} threads={} batch={}{} kernel={} precision={} center={}",
+        exec.threads,
+        exec.batch,
+        if exec.batch_auto { " (auto)" } else { "" },
+        effective_kernel,
+        effective_precision,
+        center
+    );
     let m = Counted::new(VectorMetric::new(pts));
     let t0 = std::time::Instant::now();
     let r = match algo {
@@ -259,6 +330,7 @@ fn cmd_kmedoids(args: &Args) -> Result<()> {
                 batch_auto: exec.batch_auto,
                 threads: exec.threads,
                 kernel: exec.kernel,
+                precision: exec.precision,
                 ..TrikmedsOpts::new(k)
             },
         ),
@@ -335,7 +407,7 @@ fn main() {
     }
     let keys = [
         "data", "n", "d", "seed", "algo", "eps", "k", "id", "scale", "save", "dir", "threads",
-        "batch", "kernel",
+        "batch", "kernel", "precision", "center",
     ];
     let flags = ["xla"];
     let result = Args::parse(argv, &keys, &flags).and_then(|args| {

@@ -18,7 +18,23 @@ pub use crate::graph::GraphMetric;
 pub use vector::VectorMetric;
 pub use xla_vector::XlaVectorMetric;
 
+use crate::engine::Precision;
 use std::cell::Cell;
+
+/// Reusable buffers for the fast-path batched scans, owned by the
+/// caller (the engine keeps one across rounds, so steady-state fast
+/// rounds allocate nothing). Holds both precisions because the f32
+/// panel path gathers query rows / member rectangles as contiguous
+/// `f32` while per-query norms and guards stay `f64`; contents between
+/// calls are unspecified.
+#[derive(Default)]
+pub struct FastScratch {
+    /// f64 gather space (query rows + norms for the f64 panel path;
+    /// norms + guards for the f32 path).
+    pub f64buf: Vec<f64>,
+    /// f32 gather space (query rows for the f32 panel path).
+    pub f32buf: Vec<f32>,
+}
 
 /// A finite metric space over elements `0..len()`.
 ///
@@ -108,16 +124,29 @@ pub trait MetricSpace {
     /// Fast-path batched compute: like [`MetricSpace::many_to_all`], but
     /// the backend may route through an approximate kernel (the
     /// norm-trick panel scan on vectors, see
-    /// [`crate::data::simd::panel_rows`]). On success the implementation
-    /// fills `out` with the fast-path distances, writes into `guard[q]` a
-    /// **rigorous** bound on `|fast² − canonical²|` valid for every entry
-    /// of query row `q`, and returns `true`. Returning `false` means "no
-    /// fast path" — `out`/`guard` are unspecified and the caller must
-    /// fall back to [`MetricSpace::many_to_all`].
+    /// [`crate::data::simd::panel_rows`] /
+    /// [`crate::data::simd::panel_rows_f32`] — `precision` selects which;
+    /// a backend may ignore a [`Precision::F32`] request and run f64,
+    /// e.g. outside the f32-safe norm range, since guards always describe
+    /// the arithmetic actually performed). On success the implementation
+    /// fills `out` with the fast-path distances and returns `true`, with
+    /// two per-query guards:
+    /// * `guard[q]` — a **rigorous** bound on `|fast² − canonical²|`
+    ///   valid for *every entry* of query row `q` (per-distance use:
+    ///   bound propagation deflates by `guard[q].sqrt()` per distance);
+    /// * `guard_sum[q]` — a **rigorous** bound on
+    ///   `Σ_j |fast(q,j) − canonical(q,j)|`, the error of the row *sum*.
+    ///   Always `≤ len()·guard[q].sqrt()`, and on heterogeneous-norm
+    ///   data much tighter (per-element norms instead of the max norm),
+    ///   which is what keeps the f32 band useful there.
     ///
-    /// `scratch` is a reusable buffer owned by the caller (the engine
-    /// keeps one across rounds, so steady-state fast rounds allocate
-    /// nothing); its contents between calls are unspecified.
+    /// Returning `false` means "no fast path" — `out`/guards are
+    /// unspecified and the caller must fall back to
+    /// [`MetricSpace::many_to_all`].
+    ///
+    /// `scratch` is a reusable buffer pair owned by the caller (the
+    /// engine keeps one across rounds, so steady-state fast rounds
+    /// allocate nothing); its contents between calls are unspecified.
     ///
     /// The default has no fast path, which keeps every non-vector metric
     /// (graphs, XLA, test doubles) on the canonical kernels under any
@@ -127,7 +156,9 @@ pub trait MetricSpace {
         _ids: &[usize],
         _out: &mut [f64],
         _guard: &mut [f64],
-        _scratch: &mut Vec<f64>,
+        _guard_sum: &mut [f64],
+        _scratch: &mut FastScratch,
+        _precision: Precision,
     ) -> bool {
         false
     }
@@ -152,6 +183,31 @@ pub trait MetricSpace {
                 *slot = self.dist(i, j);
             }
         }
+    }
+
+    /// Fast-path rectangle: [`MetricSpace::many_to_many`] through the
+    /// panel kernels, with the same success/guard contract as
+    /// [`MetricSpace::many_to_all_fast`] — `guard[q]` bounds
+    /// `|fast² − canonical²|` over row `q` of the rectangle,
+    /// `guard_sum[q]` bounds the row's summed distance error. This is
+    /// what gives `SubsetSpace` (trikmeds' Alg. 8 cluster universes) a
+    /// fast path: the rectangle is gathered over the target members, so
+    /// its guards depend on the *members'* norms, not the whole
+    /// dataset's.
+    ///
+    /// The default has no fast path (`false`; `out`/guards unspecified)
+    /// and callers fall back to [`MetricSpace::many_to_many`].
+    fn many_to_many_fast(
+        &self,
+        _ids: &[usize],
+        _targets: &[usize],
+        _out: &mut [f64],
+        _guard: &mut [f64],
+        _guard_sum: &mut [f64],
+        _scratch: &mut FastScratch,
+        _precision: Precision,
+    ) -> bool {
+        false
     }
 
     /// Parallelism hint for the batched operations: ask the backend to use
@@ -327,9 +383,11 @@ impl<M: MetricSpace> MetricSpace for Counted<M> {
         ids: &[usize],
         out: &mut [f64],
         guard: &mut [f64],
-        scratch: &mut Vec<f64>,
+        guard_sum: &mut [f64],
+        scratch: &mut FastScratch,
+        precision: Precision,
     ) -> bool {
-        if !self.inner.many_to_all_fast(ids, out, guard, scratch) {
+        if !self.inner.many_to_all_fast(ids, out, guard, guard_sum, scratch, precision) {
             return false;
         }
         let k = ids.len() as u64;
@@ -344,6 +402,27 @@ impl<M: MetricSpace> MetricSpace for Counted<M> {
     fn many_to_many(&self, ids: &[usize], targets: &[usize], out: &mut [f64]) {
         self.dists.set(self.dists.get() + (ids.len() * targets.len()) as u64);
         self.inner.many_to_many(ids, targets, out);
+    }
+
+    /// Counted like [`MetricSpace::many_to_many`] (the full rectangle of
+    /// point distances), but only when the inner metric actually took
+    /// the fast path — the fallback rectangle does its own counting.
+    fn many_to_many_fast(
+        &self,
+        ids: &[usize],
+        targets: &[usize],
+        out: &mut [f64],
+        guard: &mut [f64],
+        guard_sum: &mut [f64],
+        scratch: &mut FastScratch,
+        precision: Precision,
+    ) -> bool {
+        if !self.inner.many_to_many_fast(ids, targets, out, guard, guard_sum, scratch, precision)
+        {
+            return false;
+        }
+        self.dists.set(self.dists.get() + (ids.len() * targets.len()) as u64);
+        true
     }
 
     fn set_threads(&self, threads: usize) {
@@ -379,12 +458,26 @@ impl<M: MetricSpace + ?Sized> MetricSpace for &M {
         ids: &[usize],
         out: &mut [f64],
         guard: &mut [f64],
-        scratch: &mut Vec<f64>,
+        guard_sum: &mut [f64],
+        scratch: &mut FastScratch,
+        precision: Precision,
     ) -> bool {
-        (**self).many_to_all_fast(ids, out, guard, scratch)
+        (**self).many_to_all_fast(ids, out, guard, guard_sum, scratch, precision)
     }
     fn many_to_many(&self, ids: &[usize], targets: &[usize], out: &mut [f64]) {
         (**self).many_to_many(ids, targets, out)
+    }
+    fn many_to_many_fast(
+        &self,
+        ids: &[usize],
+        targets: &[usize],
+        out: &mut [f64],
+        guard: &mut [f64],
+        guard_sum: &mut [f64],
+        scratch: &mut FastScratch,
+        precision: Precision,
+    ) -> bool {
+        (**self).many_to_many_fast(ids, targets, out, guard, guard_sum, scratch, precision)
     }
     fn set_threads(&self, threads: usize) {
         (**self).set_threads(threads)
@@ -445,14 +538,34 @@ mod tests {
     }
 
     #[test]
-    fn default_many_to_all_fast_declines() {
+    fn default_fast_paths_decline() {
         // A metric without a fast path must return false and count
-        // nothing through Counted, so engine fallbacks stay exact.
+        // nothing through Counted, so engine fallbacks stay exact —
+        // under either precision request.
         let m = Counted::new(Line(vec![0.0, 1.0, 3.0]));
         let mut out = vec![0.0; 3];
         let mut guard = vec![0.0; 1];
-        let mut scratch = Vec::new();
-        assert!(!m.many_to_all_fast(&[1], &mut out, &mut guard, &mut scratch));
+        let mut guard_sum = vec![0.0; 1];
+        let mut scratch = FastScratch::default();
+        for precision in [Precision::F64, Precision::F32] {
+            assert!(!m.many_to_all_fast(
+                &[1],
+                &mut out,
+                &mut guard,
+                &mut guard_sum,
+                &mut scratch,
+                precision
+            ));
+            assert!(!m.many_to_many_fast(
+                &[1],
+                &[0, 2],
+                &mut out[..2],
+                &mut guard,
+                &mut guard_sum,
+                &mut scratch,
+                precision
+            ));
+        }
         assert_eq!(m.counts(), Counts::default());
     }
 

@@ -1,13 +1,69 @@
 //! Native Euclidean metric over dense vector data.
 
-use super::MetricSpace;
+use super::{FastScratch, MetricSpace};
 use crate::data::{simd, Points};
+use crate::engine::Precision;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Rows per cache block of the multi-query scan: 256 rows × d × 8 bytes
 /// stays L1/L2-resident for the dimensionalities the paper evaluates, so a
 /// batch of queries re-reads each block from cache instead of from memory.
 const SCAN_BLOCK_ROWS: usize = 256;
+
+/// Squared-norm ceiling for the f32 panel path. Every f32 intermediate in
+/// the panel chain is bounded in magnitude by `‖q‖² + ‖r‖² + 2|⟨q,r⟩|
+/// ≤ 4·max_sq_norm` (Cauchy–Schwarz), so keeping `max_sq_norm ≤ 1e37`
+/// keeps all f32 arithmetic below `f32::MAX ≈ 3.4e38` — no overflow, no
+/// infinities, and [`simd::panel_error_bound_f32`]'s relative-error model
+/// holds. Above the ceiling an f32 request silently runs the f64 panels
+/// instead (the guards then describe the f64 arithmetic actually
+/// performed), so callers never observe unsound bounds.
+const F32_SAFE_MAX_SQ_NORM: f64 = 1e37;
+
+/// Per-query guard pair for a panel pass of one query (cached squared
+/// norm `qn`) against `nf` target rows whose squared norms are at most
+/// `max_norm` and whose root-norms sum to `sum_root` (`Σ_j √‖r_j‖²`).
+///
+/// Returns `(guard, guard_sum)`:
+///
+/// * `guard` — max per-pair bound on `|fast² − canonical²|`, straight
+///   from [`simd::panel_error_bound`] / [`simd::panel_error_bound_f32`]
+///   at the worst target norm.
+/// * `guard_sum` — bound on `Σ_j |fast_j − canonical_j|`. Each distance
+///   gap obeys `|d̂ − d| ≤ √(per-pair bound)` (because `|d̂ − d|² ≤
+///   |d̂ − d|·(d̂ + d) = |d̂² − d²|`), and `√` is subadditive, so for the
+///   f64 bound `(4d+8)·ε·(qn + n_j)`:
+///   `Σ_j |d̂ − d| ≤ √((4d+8)ε) · (nf·√qn + Σ_j √n_j)`.
+///   The f32 bound `(4d+16)·(ε₃₂(qn + n_j) + MIN_POSITIVE)` splits the
+///   same way plus a constant `nf·√((4d+16)·MIN_POSITIVE)` underflow
+///   term. This per-element form is what makes centering pay off: it
+///   scales with the *actual* norm mass `Σ√n_j`, not `nf·√max_norm`.
+///   We take the min with the flat `nf·√guard` form (never worse) and
+///   inflate by a summation-slack factor covering both the fp evaluation
+///   here and the ≤ nf·ε relative error accrued by the incremental
+///   `sum_root` fold.
+fn guard_pair(
+    d: usize,
+    qn: f64,
+    max_norm: f64,
+    nf: f64,
+    sum_root: f64,
+    f32_panels: bool,
+) -> (f64, f64) {
+    let (g, per_elem) = if f32_panels {
+        let g = simd::panel_error_bound_f32(d, qn, max_norm);
+        let a = 4.0 * d as f64 + 16.0;
+        let rel = (a * f32::EPSILON as f64).sqrt() * (nf * qn.sqrt() + sum_root);
+        let abs = nf * (a * f32::MIN_POSITIVE as f64).sqrt();
+        (g, rel + abs)
+    } else {
+        let g = simd::panel_error_bound(d, qn, max_norm);
+        let a = 4.0 * d as f64 + 8.0;
+        (g, (a * f64::EPSILON).sqrt() * (nf * qn.sqrt() + sum_root))
+    };
+    let slack = 1.0 + 8.0 * (nf + 4.0) * f64::EPSILON;
+    (g, per_elem.min(nf * g.sqrt()) * slack)
+}
 
 /// Euclidean metric over a [`Points`] set, computed natively in Rust.
 ///
@@ -21,8 +77,12 @@ const SCAN_BLOCK_ROWS: usize = 256;
 /// [`MetricSpace::many_to_all_fast`] additionally offers the norm-trick
 /// panel scan (`‖x−y‖² = ‖x‖² + ‖y‖² − 2⟨x,y⟩` over the [`Points`] norm
 /// cache, four queries per row-block pass) with rigorous per-query error
-/// bounds — the engine's `--kernel fast` path (DESIGN.md §Norm-cached
-/// panel kernels).
+/// bounds — the engine's `--kernel fast` path — and
+/// [`MetricSpace::many_to_many_fast`] the guarded rectangle that gives
+/// trikmeds' subset universes the same treatment. Both honour
+/// [`Precision::F32`] by streaming the lazily materialised f32 mirror
+/// behind correspondingly widened bounds (DESIGN.md §Norm-cached panel
+/// kernels, §Mixed-precision panels under the guard band).
 pub struct VectorMetric {
     points: Points,
     /// Threads per batched call (interior mutability keeps the hint usable
@@ -102,6 +162,32 @@ impl VectorMetric {
             block_start = block_end;
         }
     }
+
+    /// f32-mirror counterpart of [`VectorMetric::scan_multi_fast`]: the
+    /// same cache blocking over the lazily materialised f32 rows and
+    /// norms ([`Points::rows_f32`]), through [`simd::panel_rows_f32`] —
+    /// double the SIMD lane width and half the memory traffic per block.
+    /// Only called below [`F32_SAFE_MAX_SQ_NORM`].
+    fn scan_multi_fast_f32(&self, queries: &[f32], q_sq_norms: &[f32], out: &mut [f64]) {
+        let n = self.points.len();
+        let d = self.points.dim();
+        let flat = self.points.rows_f32();
+        let norms = self.points.sq_norms_f32();
+        let mut block_start = 0;
+        while block_start < n {
+            let block_end = (block_start + SCAN_BLOCK_ROWS).min(n);
+            simd::panel_rows_f32(
+                queries,
+                q_sq_norms,
+                &flat[block_start * d..block_end * d],
+                &norms[block_start..block_end],
+                d,
+                &mut out[block_start..],
+                n,
+            );
+            block_start = block_end;
+        }
+    }
 }
 
 impl MetricSpace for VectorMetric {
@@ -132,48 +218,211 @@ impl MetricSpace for VectorMetric {
 
     /// Norm-trick panel scan (always available on vector data): gathers
     /// the query rows and their cached norms into the caller's `scratch`
-    /// (the only buffer the fast path touches — steady-state rounds
+    /// (the only buffers the fast path touches — steady-state rounds
     /// allocate nothing), fans the scan out like
-    /// [`MetricSpace::many_to_all`], and reports per-query error bounds
-    /// from [`simd::panel_error_bound`] at the query's cached norm and
-    /// the set-wide maximum row norm (the bound is monotone in both).
+    /// [`MetricSpace::many_to_all`], and reports per-query guards from
+    /// [`guard_pair`] at the query's cached norm, the set-wide maximum
+    /// row norm and the cached [`Points::sum_root_norms`].
+    ///
+    /// Under [`Precision::F32`] the scan runs over the f32 mirror with
+    /// the widened f32 bounds — unless the set-wide norm exceeds
+    /// [`F32_SAFE_MAX_SQ_NORM`], in which case the f64 panels run
+    /// instead (silent, sound: guards match the arithmetic performed).
     fn many_to_all_fast(
         &self,
         ids: &[usize],
         out: &mut [f64],
         guard: &mut [f64],
-        scratch: &mut Vec<f64>,
+        guard_sum: &mut [f64],
+        scratch: &mut FastScratch,
+        precision: Precision,
     ) -> bool {
         let n = self.points.len();
         let d = self.points.dim();
         assert_eq!(out.len(), ids.len() * n, "out must be ids.len() × len()");
         assert_eq!(guard.len(), ids.len(), "guard must have one slot per query");
+        assert_eq!(guard_sum.len(), ids.len(), "guard_sum must have one slot per query");
         if ids.is_empty() || n == 0 {
             return true;
         }
         let max_row_norm = self.points.max_sq_norm();
+        let f32_panels = precision == Precision::F32 && max_row_norm <= F32_SAFE_MAX_SQ_NORM;
+        let sum_root = self.points.sum_root_norms();
+        let nf = n as f64;
         let q_len = ids.len() * d;
-        scratch.clear();
-        scratch.reserve(q_len + ids.len());
-        for &i in ids {
-            scratch.extend_from_slice(self.points.row(i));
+        for ((g, gs), &i) in guard.iter_mut().zip(guard_sum.iter_mut()).zip(ids) {
+            let (gg, ggs) =
+                guard_pair(d, self.points.sq_norm(i), max_row_norm, nf, sum_root, f32_panels);
+            *g = gg;
+            *gs = ggs;
         }
-        for (g, &i) in guard.iter_mut().zip(ids) {
-            let qn = self.points.sq_norm(i);
-            scratch.push(qn);
-            *g = simd::panel_error_bound(d, qn, max_row_norm);
-        }
-        let (queries, q_norms) = scratch.split_at(q_len);
         let threads = self.threads.load(Ordering::Relaxed);
-        super::fan_out(threads, n, ids, out, |off, chunk, rows| {
-            // `off` is the chunk's start position in `ids`, which is also
-            // its position in the gathered query/norm buffers.
-            self.scan_multi_fast(
-                &queries[off * d..(off + chunk.len()) * d],
-                &q_norms[off..off + chunk.len()],
-                rows,
-            );
-        });
+        if f32_panels {
+            let rows = self.points.rows_f32();
+            let norms = self.points.sq_norms_f32();
+            let buf = &mut scratch.f32buf;
+            buf.clear();
+            buf.reserve(q_len + ids.len());
+            for &i in ids {
+                buf.extend_from_slice(&rows[i * d..(i + 1) * d]);
+            }
+            for &i in ids {
+                buf.push(norms[i]);
+            }
+            let (queries, q_norms) = buf.split_at(q_len);
+            super::fan_out(threads, n, ids, out, |off, chunk, rows_out| {
+                // `off` is the chunk's start position in `ids`, which is
+                // also its position in the gathered query/norm buffers.
+                self.scan_multi_fast_f32(
+                    &queries[off * d..(off + chunk.len()) * d],
+                    &q_norms[off..off + chunk.len()],
+                    rows_out,
+                );
+            });
+        } else {
+            let buf = &mut scratch.f64buf;
+            buf.clear();
+            buf.reserve(q_len + ids.len());
+            for &i in ids {
+                buf.extend_from_slice(self.points.row(i));
+            }
+            for &i in ids {
+                buf.push(self.points.sq_norm(i));
+            }
+            let (queries, q_norms) = buf.split_at(q_len);
+            super::fan_out(threads, n, ids, out, |off, chunk, rows_out| {
+                self.scan_multi_fast(
+                    &queries[off * d..(off + chunk.len()) * d],
+                    &q_norms[off..off + chunk.len()],
+                    rows_out,
+                );
+            });
+        }
+        true
+    }
+
+    /// Guarded panel *rectangle* — the fast counterpart of
+    /// [`MetricSpace::many_to_many`], serving the trikmeds medoid update
+    /// ([`crate::engine::SubsetSpace`]): target member rows and norms are
+    /// gathered once into `scratch`, then every query streams the
+    /// gathered panel cache-blocked. Guards come from [`guard_pair`] at
+    /// the *targets'* own norm statistics (max and Σ√ over the gathered
+    /// members, folded during the gather), so small centered clusters get
+    /// proportionally tight bands. The f32 gate is the set-wide
+    /// [`F32_SAFE_MAX_SQ_NORM`] check, same as the one-to-all path.
+    fn many_to_many_fast(
+        &self,
+        ids: &[usize],
+        targets: &[usize],
+        out: &mut [f64],
+        guard: &mut [f64],
+        guard_sum: &mut [f64],
+        scratch: &mut FastScratch,
+        precision: Precision,
+    ) -> bool {
+        let t = targets.len();
+        let d = self.points.dim();
+        assert_eq!(out.len(), ids.len() * t, "out must be ids.len() × targets.len()");
+        assert_eq!(guard.len(), ids.len(), "guard must have one slot per query");
+        assert_eq!(guard_sum.len(), ids.len(), "guard_sum must have one slot per query");
+        if ids.is_empty() || t == 0 {
+            return true;
+        }
+        let mut max_norm = 0.0f64;
+        let mut sum_root = 0.0f64;
+        for &j in targets {
+            let nj = self.points.sq_norm(j);
+            max_norm = max_norm.max(nj);
+            sum_root += nj.sqrt();
+        }
+        let f32_panels =
+            precision == Precision::F32 && self.points.max_sq_norm() <= F32_SAFE_MAX_SQ_NORM;
+        let tf = t as f64;
+        let q_len = ids.len() * d;
+        for ((g, gs), &i) in guard.iter_mut().zip(guard_sum.iter_mut()).zip(ids) {
+            let (gg, ggs) =
+                guard_pair(d, self.points.sq_norm(i), max_norm, tf, sum_root, f32_panels);
+            *g = gg;
+            *gs = ggs;
+        }
+        let threads = self.threads.load(Ordering::Relaxed);
+        if f32_panels {
+            let rows = self.points.rows_f32();
+            let norms = self.points.sq_norms_f32();
+            let buf = &mut scratch.f32buf;
+            buf.clear();
+            buf.reserve(q_len + ids.len() + t * d + t);
+            for &i in ids {
+                buf.extend_from_slice(&rows[i * d..(i + 1) * d]);
+            }
+            for &i in ids {
+                buf.push(norms[i]);
+            }
+            for &j in targets {
+                buf.extend_from_slice(&rows[j * d..(j + 1) * d]);
+            }
+            for &j in targets {
+                buf.push(norms[j]);
+            }
+            let (queries, rest) = buf.split_at(q_len);
+            let (q_norms, rest) = rest.split_at(ids.len());
+            let (t_rows, t_norms) = rest.split_at(t * d);
+            super::fan_out(threads, t, ids, out, |off, chunk, rows_out| {
+                let q = &queries[off * d..(off + chunk.len()) * d];
+                let qn = &q_norms[off..off + chunk.len()];
+                let mut bs = 0;
+                while bs < t {
+                    let be = (bs + SCAN_BLOCK_ROWS).min(t);
+                    simd::panel_rows_f32(
+                        q,
+                        qn,
+                        &t_rows[bs * d..be * d],
+                        &t_norms[bs..be],
+                        d,
+                        &mut rows_out[bs..],
+                        t,
+                    );
+                    bs = be;
+                }
+            });
+        } else {
+            let buf = &mut scratch.f64buf;
+            buf.clear();
+            buf.reserve(q_len + ids.len() + t * d + t);
+            for &i in ids {
+                buf.extend_from_slice(self.points.row(i));
+            }
+            for &i in ids {
+                buf.push(self.points.sq_norm(i));
+            }
+            for &j in targets {
+                buf.extend_from_slice(self.points.row(j));
+            }
+            for &j in targets {
+                buf.push(self.points.sq_norm(j));
+            }
+            let (queries, rest) = buf.split_at(q_len);
+            let (q_norms, rest) = rest.split_at(ids.len());
+            let (t_rows, t_norms) = rest.split_at(t * d);
+            super::fan_out(threads, t, ids, out, |off, chunk, rows_out| {
+                let q = &queries[off * d..(off + chunk.len()) * d];
+                let qn = &q_norms[off..off + chunk.len()];
+                let mut bs = 0;
+                while bs < t {
+                    let be = (bs + SCAN_BLOCK_ROWS).min(t);
+                    simd::panel_rows(
+                        q,
+                        qn,
+                        &t_rows[bs * d..be * d],
+                        &t_norms[bs..be],
+                        d,
+                        &mut rows_out[bs..],
+                        t,
+                    );
+                    bs = be;
+                }
+            });
+        }
         true
     }
 
@@ -297,28 +546,52 @@ mod tests {
 
     #[test]
     fn fast_scan_within_guard_of_exact_scan() {
-        // The fast path's contract: every row entry sits within
-        // sqrt(guard[q]) of the canonical distance, at benign and
+        // The fast path's contract at both precisions: every row entry
+        // sits within sqrt(guard[q]) of the canonical distance, and the
+        // row's summed gap within guard_sum[q], at benign and
         // adversarial coordinate scales.
-        for &scale in &[1.0f64, 1e12] {
-            let base = crate::data::synthetic::uniform_cube(2 * SCAN_BLOCK_ROWS + 9, 5, 42);
-            let data: Vec<f64> = base.flat().iter().map(|v| v * scale).collect();
-            let m = VectorMetric::new(Points::new(5, data));
-            let n = m.len();
-            let ids = vec![0usize, 7, n / 2, n - 1];
-            let mut fast = vec![0.0; ids.len() * n];
-            let mut guard = vec![0.0; ids.len()];
-            let mut scratch = Vec::new();
-            assert!(m.many_to_all_fast(&ids, &mut fast, &mut guard, &mut scratch));
-            let mut exact = vec![0.0; n];
-            for (q, &i) in ids.iter().enumerate() {
-                m.one_to_all(i, &mut exact);
-                let g = guard[q].sqrt();
-                for j in 0..n {
-                    let gap = (fast[q * n + j] - exact[j]).abs();
+        for precision in [Precision::F64, Precision::F32] {
+            for &scale in &[1.0f64, 1e12] {
+                let base = crate::data::synthetic::uniform_cube(2 * SCAN_BLOCK_ROWS + 9, 5, 42);
+                let data: Vec<f64> = base.flat().iter().map(|v| v * scale).collect();
+                let m = VectorMetric::new(Points::new(5, data));
+                let n = m.len();
+                let ids = vec![0usize, 7, n / 2, n - 1];
+                let mut fast = vec![0.0; ids.len() * n];
+                let mut guard = vec![0.0; ids.len()];
+                let mut guard_sum = vec![0.0; ids.len()];
+                let mut scratch = FastScratch::default();
+                assert!(m.many_to_all_fast(
+                    &ids,
+                    &mut fast,
+                    &mut guard,
+                    &mut guard_sum,
+                    &mut scratch,
+                    precision
+                ));
+                let mut exact = vec![0.0; n];
+                for (q, &i) in ids.iter().enumerate() {
+                    m.one_to_all(i, &mut exact);
+                    let g = guard[q].sqrt();
+                    let mut summed_gap = 0.0f64;
+                    for j in 0..n {
+                        let gap = (fast[q * n + j] - exact[j]).abs();
+                        assert!(
+                            gap <= g,
+                            "{} scale={scale} query {i} row {j}: gap {gap} > guard {g}",
+                            precision.name()
+                        );
+                        summed_gap += gap;
+                    }
                     assert!(
-                        gap <= g,
-                        "scale={scale} query {i} row {j}: gap {gap} > guard {g}"
+                        summed_gap <= guard_sum[q],
+                        "{} scale={scale} query {i}: Σgap {summed_gap} > guard_sum {}",
+                        precision.name(),
+                        guard_sum[q]
+                    );
+                    assert!(
+                        guard_sum[q] <= (n as f64) * g * (1.0 + 1e-9),
+                        "guard_sum must never exceed the flat n·√guard form"
                     );
                 }
             }
@@ -329,21 +602,159 @@ mod tests {
     fn fast_scan_bitwise_invariant_across_threads() {
         // Panel grouping and thread splits must be unobservable in the
         // fast-path output (per-query chains are grouping-independent),
-        // so guard-band decisions are deterministic at any --threads.
+        // so guard-band decisions are deterministic at any --threads —
+        // at both precisions.
         let n = SCAN_BLOCK_ROWS + 31;
         let m = VectorMetric::new(crate::data::synthetic::uniform_cube(n, 7, 3));
         let ids: Vec<usize> = (0..9).map(|q| (q * 37) % n).collect();
-        let mut reference = vec![0.0; ids.len() * n];
-        let mut guard = vec![0.0; ids.len()];
-        let mut scratch = Vec::new();
-        m.set_threads(1);
-        assert!(m.many_to_all_fast(&ids, &mut reference, &mut guard, &mut scratch));
-        for threads in [2usize, 4, 16] {
-            m.set_threads(threads);
-            let mut out = vec![0.0; ids.len() * n];
-            assert!(m.many_to_all_fast(&ids, &mut out, &mut guard, &mut scratch));
-            assert_eq!(out, reference, "threads={threads}");
+        for precision in [Precision::F64, Precision::F32] {
+            let mut reference = vec![0.0; ids.len() * n];
+            let mut guard = vec![0.0; ids.len()];
+            let mut guard_sum = vec![0.0; ids.len()];
+            let mut scratch = FastScratch::default();
+            m.set_threads(1);
+            assert!(m.many_to_all_fast(
+                &ids,
+                &mut reference,
+                &mut guard,
+                &mut guard_sum,
+                &mut scratch,
+                precision
+            ));
+            for threads in [2usize, 4, 16] {
+                m.set_threads(threads);
+                let mut out = vec![0.0; ids.len() * n];
+                assert!(m.many_to_all_fast(
+                    &ids,
+                    &mut out,
+                    &mut guard,
+                    &mut guard_sum,
+                    &mut scratch,
+                    precision
+                ));
+                assert_eq!(out, reference, "{} threads={threads}", precision.name());
+            }
         }
+        m.set_threads(1);
+    }
+
+    #[test]
+    fn f32_request_above_safe_norm_falls_back_to_f64_panels() {
+        // Coordinates near 1e19 push squared norms past
+        // F32_SAFE_MAX_SQ_NORM (comfortably inside f64 range): an F32
+        // request must silently run the f64 panels — bitwise equal
+        // output AND the (tighter) f64 guards, so the band stays sound.
+        let base = crate::data::synthetic::uniform_cube(90, 4, 9);
+        let data: Vec<f64> = base.flat().iter().map(|v| (v + 1.0) * 1e19).collect();
+        let m = VectorMetric::new(Points::new(4, data));
+        assert!(m.points().max_sq_norm() > F32_SAFE_MAX_SQ_NORM);
+        let n = m.len();
+        let ids = vec![0usize, 3, n - 1];
+        let mut scratch = FastScratch::default();
+        let mut out64 = vec![0.0; ids.len() * n];
+        let mut g64 = vec![0.0; ids.len()];
+        let mut gs64 = vec![0.0; ids.len()];
+        assert!(m.many_to_all_fast(&ids, &mut out64, &mut g64, &mut gs64, &mut scratch, Precision::F64));
+        let mut out32 = vec![0.0; ids.len() * n];
+        let mut g32 = vec![0.0; ids.len()];
+        let mut gs32 = vec![0.0; ids.len()];
+        assert!(m.many_to_all_fast(&ids, &mut out32, &mut g32, &mut gs32, &mut scratch, Precision::F32));
+        assert_eq!(out32, out64);
+        assert_eq!(g32, g64);
+        assert_eq!(gs32, gs64);
+        assert!(out32.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn many_to_many_fast_within_guard_and_thread_invariant() {
+        // The subset rectangle's contract, both precisions: every entry
+        // within sqrt(guard) of the canonical dist, summed row gap
+        // within guard_sum, and output bitwise invariant across thread
+        // counts (the trikmeds guard band builds on all three).
+        let n = 2 * SCAN_BLOCK_ROWS + 40;
+        let m = VectorMetric::new(crate::data::synthetic::uniform_cube(n, 6, 17));
+        let ids = vec![1usize, n / 3, n - 2];
+        let targets: Vec<usize> = (0..n).step_by(2).collect();
+        let t = targets.len();
+        for precision in [Precision::F64, Precision::F32] {
+            let mut reference = vec![0.0; ids.len() * t];
+            let mut guard = vec![0.0; ids.len()];
+            let mut guard_sum = vec![0.0; ids.len()];
+            let mut scratch = FastScratch::default();
+            m.set_threads(1);
+            assert!(m.many_to_many_fast(
+                &ids,
+                &targets,
+                &mut reference,
+                &mut guard,
+                &mut guard_sum,
+                &mut scratch,
+                precision
+            ));
+            for (q, &i) in ids.iter().enumerate() {
+                let g = guard[q].sqrt();
+                let mut summed_gap = 0.0f64;
+                for (j, &tgt) in targets.iter().enumerate() {
+                    let gap = (reference[q * t + j] - m.dist(i, tgt)).abs();
+                    assert!(gap <= g, "{} ({i},{tgt}): gap {gap} > {g}", precision.name());
+                    summed_gap += gap;
+                }
+                assert!(summed_gap <= guard_sum[q], "{} query {i}", precision.name());
+            }
+            for threads in [2usize, 8] {
+                m.set_threads(threads);
+                let mut out = vec![0.0; ids.len() * t];
+                assert!(m.many_to_many_fast(
+                    &ids,
+                    &targets,
+                    &mut out,
+                    &mut guard,
+                    &mut guard_sum,
+                    &mut scratch,
+                    precision
+                ));
+                assert_eq!(out, reference, "{} threads={threads}", precision.name());
+            }
+        }
+        m.set_threads(1);
+    }
+
+    #[test]
+    fn many_to_many_fast_guards_use_target_norms_not_set_max() {
+        // A tight cluster inside a set with one far-away outlier: the
+        // rectangle's guards must reflect the *targets'* norms, so a
+        // subset band over the cluster is far tighter than the set-wide
+        // bound the one-to-all path would report.
+        let mut data = vec![0.0f64; 40 * 3];
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = (i % 7) as f64 * 0.25;
+        }
+        // Outlier row 39 at huge norm.
+        for v in data[39 * 3..].iter_mut() {
+            *v = 1e9;
+        }
+        let m = VectorMetric::new(Points::new(3, data));
+        let targets: Vec<usize> = (0..20).collect(); // cluster only
+        let ids = vec![2usize, 11];
+        let mut out = vec![0.0; ids.len() * targets.len()];
+        let mut guard = vec![0.0; ids.len()];
+        let mut guard_sum = vec![0.0; ids.len()];
+        let mut scratch = FastScratch::default();
+        assert!(m.many_to_many_fast(
+            &ids,
+            &targets,
+            &mut out,
+            &mut guard,
+            &mut guard_sum,
+            &mut scratch,
+            Precision::F64
+        ));
+        let set_wide = simd::panel_error_bound(3, m.points().sq_norm(2), m.points().max_sq_norm());
+        assert!(
+            guard[0] < set_wide * 1e-6,
+            "subset guard {} should be far below set-wide {set_wide}",
+            guard[0]
+        );
     }
 
     #[test]

@@ -360,12 +360,13 @@ fn computed_bounds_exact_at_adversarial_scale() {
 
 #[test]
 fn env_exec_config_paths_stay_exact() {
-    // Run under the TRIMED_THREADS / TRIMED_BATCH / TRIMED_KERNEL
-    // environment the CI matrix sets, so `cargo test` exercises the
-    // parallel, batched and kernel paths there while staying sequential
-    // (and cheap) by default. The sequential reference pins the exact
-    // kernel, so the TRIMED_KERNEL=fast leg checks fast-vs-exact energy
-    // equality end to end.
+    // Run under the TRIMED_THREADS / TRIMED_BATCH / TRIMED_KERNEL /
+    // TRIMED_PRECISION environment the CI matrix sets, so `cargo test`
+    // exercises the parallel, batched, kernel and f32-panel paths there
+    // while staying sequential (and cheap) by default. The sequential
+    // reference pins the exact kernel, so the TRIMED_KERNEL=fast and
+    // TRIMED_PRECISION=f32 legs check fast-vs-exact energy equality end
+    // to end.
     let exec = ExecConfig::from_env();
     let pts = uniform_cube(600, 3, 3);
     let m = VectorMetric::new(pts);
@@ -381,16 +382,18 @@ fn env_exec_config_paths_stay_exact() {
             batch_auto: exec.batch_auto,
             threads: exec.threads,
             kernel: exec.kernel,
+            precision: exec.precision,
             ..Default::default()
         },
     );
     assert!(
         (r.energy - seq.energy).abs() < 1e-12,
-        "threads={} batch={} auto={} kernel={}: {} vs {}",
+        "threads={} batch={} auto={} kernel={} precision={}: {} vs {}",
         exec.threads,
         exec.batch,
         exec.batch_auto,
         exec.kernel.name(),
+        exec.precision.name(),
         r.energy,
         seq.energy
     );

@@ -2,21 +2,25 @@
 //! contract, see `engine` module docs and DESIGN.md §Norm-cached panel
 //! kernels):
 //!
-//! * `--kernel fast` and `--kernel exact` return the **identical medoid
-//!   index** and **bit-identical** final energies/sums for trimed,
-//!   trimed_topk and trikmeds — across batch widths (fixed and
-//!   adaptive), thread counts, duplicate-point data (exact ties), and
-//!   the 1e12-scale adversarial dataset from PR 2.
+//! * `--kernel fast` — at **either panel precision, f64 or f32** — and
+//!   `--kernel exact` return the **identical medoid index** and
+//!   **bit-identical** final energies/sums for trimed, trimed_topk and
+//!   trikmeds — across batch widths (fixed and adaptive), thread
+//!   counts, duplicate-point data (exact ties), and the 1e12-scale
+//!   adversarial dataset from PR 2.
 //! * Fast-path lower bounds remain sound (deflated, never above a
 //!   canonical sum), and refinement accounting is exact:
 //!   `computed + refined` backend passes, `refined ≤ computed`.
+//! * The guard band degrades *gracefully*: on uncentered norm-dominated
+//!   data the f32 band may refine nearly everything (still correct);
+//!   centering the same data restores a small refinement fraction.
 
 use trimed::algo::{
     trimed_topk_with_opts, trimed_with_opts, TrimedOpts,
 };
 use trimed::data::synthetic::uniform_cube;
 use trimed::data::Points;
-use trimed::engine::Kernel;
+use trimed::engine::{Kernel, Precision};
 use trimed::kmedoids::trikmeds::TrikmedsInit;
 use trimed::kmedoids::{trikmeds, TrikmedsOpts};
 use trimed::metric::{Counted, MetricSpace, VectorMetric};
@@ -44,12 +48,24 @@ fn duplicate_points() -> Points {
     Points::new(2, data)
 }
 
+/// Uncentered norm-dominated data: a tiny cloud (spread ~1e-6) sitting
+/// at offset ~1e6, so squared norms (~1e12) dwarf squared distances
+/// (~1e-12) by ~24 decimal orders — far beyond f32's ~7 digits. The f32
+/// panel band can then exclude nothing, but the guard must make the
+/// answer *correct*, not fast.
+fn norm_dominated_points(n: usize, d: usize, seed: u64) -> Points {
+    let base = uniform_cube(n, d, seed);
+    let data: Vec<f64> = base.flat().iter().map(|v| 1e6 + 1e-6 * v).collect();
+    Points::new(d, data)
+}
+
 fn datasets() -> Vec<(&'static str, Points)> {
     vec![
         ("cube-700x3", uniform_cube(700, 3, 1)),
         ("cube-500x10", uniform_cube(500, 10, 5)),
         ("duplicates", duplicate_points()),
         ("adversarial-1e12", adversarial_points(400, 3, 31)),
+        ("norm-dominated-1e6", norm_dominated_points(300, 3, 13)),
     ]
 }
 
@@ -61,7 +77,7 @@ fn fast_and_exact_trimed_identical_medoid_and_bits() {
             for (batch, auto, threads) in
                 [(1usize, false, 1usize), (8, false, 1), (64, true, 1), (16, false, 4)]
             {
-                let run = |kernel: Kernel| {
+                let run = |kernel: Kernel, precision: Precision| {
                     trimed_with_opts(
                         &m,
                         &TrimedOpts {
@@ -70,25 +86,29 @@ fn fast_and_exact_trimed_identical_medoid_and_bits() {
                             batch_auto: auto,
                             threads,
                             kernel,
+                            precision,
                             ..Default::default()
                         },
                     )
                 };
-                let e = run(Kernel::Exact);
-                let f = run(Kernel::Fast);
-                assert_eq!(
-                    f.medoid, e.medoid,
-                    "{name} seed={seed} B={batch} auto={auto} t={threads}: medoid diverged"
-                );
-                assert!(
-                    f.energy == e.energy,
-                    "{name} seed={seed} B={batch} auto={auto} t={threads}: \
-                     energy bits diverged: {} vs {}",
-                    f.energy,
-                    e.energy
-                );
+                let e = run(Kernel::Exact, Precision::F64);
                 assert_eq!(e.refined, 0, "exact kernel must never refine");
-                assert!(f.refined <= f.computed);
+                for precision in [Precision::F64, Precision::F32] {
+                    let f = run(Kernel::Fast, precision);
+                    let p = if precision == Precision::F32 { "f32" } else { "f64" };
+                    assert_eq!(
+                        f.medoid, e.medoid,
+                        "{name} seed={seed} B={batch} auto={auto} t={threads} {p}: medoid diverged"
+                    );
+                    assert!(
+                        f.energy == e.energy,
+                        "{name} seed={seed} B={batch} auto={auto} t={threads} {p}: \
+                         energy bits diverged: {} vs {}",
+                        f.energy,
+                        e.energy
+                    );
+                    assert!(f.refined <= f.computed);
+                }
             }
         }
     }
@@ -101,23 +121,33 @@ fn fast_and_exact_topk_identical_elements_and_bits() {
         let k = 5.min(m.len());
         for seed in [0u64, 8] {
             for (batch, auto) in [(1usize, false), (4, false), (32, true)] {
-                let run = |kernel: Kernel| {
+                let run = |kernel: Kernel, precision: Precision| {
                     trimed_topk_with_opts(
                         &m,
                         k,
-                        &TrimedOpts { seed, batch, batch_auto: auto, kernel, ..Default::default() },
+                        &TrimedOpts {
+                            seed,
+                            batch,
+                            batch_auto: auto,
+                            kernel,
+                            precision,
+                            ..Default::default()
+                        },
                     )
                 };
-                let e = run(Kernel::Exact);
-                let f = run(Kernel::Fast);
-                assert_eq!(
-                    f.elements, e.elements,
-                    "{name} seed={seed} B={batch} auto={auto}: top-k set diverged"
-                );
-                assert!(
-                    f.energies.iter().zip(&e.energies).all(|(a, b)| a == b),
-                    "{name} seed={seed} B={batch} auto={auto}: top-k energy bits diverged"
-                );
+                let e = run(Kernel::Exact, Precision::F64);
+                for precision in [Precision::F64, Precision::F32] {
+                    let f = run(Kernel::Fast, precision);
+                    let p = precision.name();
+                    assert_eq!(
+                        f.elements, e.elements,
+                        "{name} seed={seed} B={batch} auto={auto} {p}: top-k set diverged"
+                    );
+                    assert!(
+                        f.energies.iter().zip(&e.energies).all(|(a, b)| a == b),
+                        "{name} seed={seed} B={batch} auto={auto} {p}: top-k energy bits diverged"
+                    );
+                }
             }
         }
     }
@@ -125,29 +155,43 @@ fn fast_and_exact_topk_identical_elements_and_bits() {
 
 #[test]
 fn fast_and_exact_trikmeds_identical_clustering() {
-    // The subset universe has no fast path, so `fast` must be a perfect
-    // no-op for trikmeds — same medoids, assignments, loss bits,
-    // iteration count.
+    // The medoid-update step runs on a `SubsetSpace`, which now routes
+    // `fast` through guarded `many_to_many` panel rectangles (at either
+    // precision) — so trikmeds must keep the same medoids, assignments,
+    // loss bits and iteration count as the exact kernel, across thread
+    // counts.
     let pts = uniform_cube(400, 2, 9);
     let m = VectorMetric::new(pts);
     let init: Vec<usize> = vec![3, 77, 190, 333];
-    let run = |kernel: Kernel| {
+    let run = |kernel: Kernel, precision: Precision, threads: usize| {
         trikmeds(
             &m,
             &TrikmedsOpts {
                 init: TrikmedsInit::Given(init.clone()),
                 kernel,
+                precision,
                 batch: 8,
+                threads,
                 ..TrikmedsOpts::new(4)
             },
         )
     };
-    let e = run(Kernel::Exact);
-    let f = run(Kernel::Fast);
-    assert_eq!(f.medoids, e.medoids);
-    assert_eq!(f.assignments, e.assignments);
-    assert!(f.loss == e.loss, "loss bits diverged: {} vs {}", f.loss, e.loss);
-    assert_eq!(f.iterations, e.iterations);
+    let e = run(Kernel::Exact, Precision::F64, 1);
+    for precision in [Precision::F64, Precision::F32] {
+        for threads in [1usize, 4] {
+            let f = run(Kernel::Fast, precision, threads);
+            let p = precision.name();
+            assert_eq!(f.medoids, e.medoids, "{p} t={threads}: medoids diverged");
+            assert_eq!(f.assignments, e.assignments, "{p} t={threads}: assignments diverged");
+            assert!(
+                f.loss == e.loss,
+                "{p} t={threads}: loss bits diverged: {} vs {}",
+                f.loss,
+                e.loss
+            );
+            assert_eq!(f.iterations, e.iterations, "{p} t={threads}: iteration count diverged");
+        }
+    }
 }
 
 #[test]
@@ -155,29 +199,44 @@ fn fast_path_bounds_sound_and_accounting_exact() {
     for (name, pts) in datasets() {
         let m = VectorMetric::new(pts);
         let n = m.len();
-        let cm = Counted::new(&m);
-        let r = trimed_with_opts(
-            &cm,
-            &TrimedOpts { seed: 3, batch: 16, kernel: Kernel::Fast, ..Default::default() },
-        );
-        // Backend accounting: every one-to-all pass is a computed
-        // element or a guard-band refinement of one.
-        assert_eq!(
-            r.computed + r.refined,
-            cm.counts().one_to_all,
-            "{name}: pass accounting"
-        );
-        assert!(r.refined >= 1, "{name}: round 1 always refines against the open threshold");
-        // Soundness of the (deflated) fast-path bounds vs canonical sums.
-        let mut row = vec![0.0; n];
-        for j in 0..n {
-            m.one_to_all(j, &mut row);
-            let s: f64 = row.iter().sum();
-            assert!(
-                r.lower_bounds[j] <= s * (1.0 + 1e-12) + 1e-9,
-                "{name}: fast bound {} unsound vs canonical sum {s} at {j}",
-                r.lower_bounds[j]
+        for precision in [Precision::F64, Precision::F32] {
+            let p = precision.name();
+            // Fresh counter per precision: the accounting identity is
+            // per-run, not cumulative.
+            let cm = Counted::new(&m);
+            let r = trimed_with_opts(
+                &cm,
+                &TrimedOpts {
+                    seed: 3,
+                    batch: 16,
+                    kernel: Kernel::Fast,
+                    precision,
+                    ..Default::default()
+                },
             );
+            // Backend accounting: every one-to-all pass is a computed
+            // element or a guard-band refinement of one.
+            assert_eq!(
+                r.computed + r.refined,
+                cm.counts().one_to_all,
+                "{name} {p}: pass accounting"
+            );
+            assert!(
+                r.refined >= 1,
+                "{name} {p}: round 1 always refines against the open threshold"
+            );
+            // Soundness of the (deflated) fast-path bounds vs canonical
+            // sums — the f32 band must deflate at least as far.
+            let mut row = vec![0.0; n];
+            for j in 0..n {
+                m.one_to_all(j, &mut row);
+                let s: f64 = row.iter().sum();
+                assert!(
+                    r.lower_bounds[j] <= s * (1.0 + 1e-12) + 1e-9,
+                    "{name} {p}: fast bound {} unsound vs canonical sum {s} at {j}",
+                    r.lower_bounds[j]
+                );
+            }
         }
     }
 }
@@ -201,4 +260,80 @@ fn fast_path_stays_a_band_not_a_recompute() {
         r.refined,
         r.computed
     );
+}
+
+#[test]
+fn f32_band_degrades_gracefully_and_centering_restores_it() {
+    // On uncentered norm-dominated data the f32 band is enormous
+    // relative to the true sums, so nearly every computed element must
+    // be refined — the answer stays correct, it just isn't fast.
+    // Centering the same cloud (a distance-preserving relabeling:
+    // `x - mean` is Sterbenz-exact here) shrinks the norms ~12 decimal
+    // orders, and the refinement fraction collapses back to a minority.
+    let pts = norm_dominated_points(300, 3, 13);
+    let mut centered = pts.clone();
+    centered.center();
+
+    let opts = |precision| TrimedOpts {
+        seed: 3,
+        batch: 16,
+        kernel: Kernel::Fast,
+        precision,
+        ..Default::default()
+    };
+    let raw = VectorMetric::new(pts);
+    let e = trimed_with_opts(&raw, &TrimedOpts { kernel: Kernel::Exact, ..opts(Precision::F64) });
+
+    let f_raw = trimed_with_opts(&raw, &opts(Precision::F32));
+    assert_eq!(f_raw.medoid, e.medoid, "uncentered f32 must still be exact");
+    assert!(f_raw.energy == e.energy, "uncentered f32 energy bits diverged");
+    assert!(
+        f_raw.refined * 2 >= f_raw.computed,
+        "expected near-total refinement on uncentered norm-dominated data, got {} of {}",
+        f_raw.refined,
+        f_raw.computed
+    );
+
+    let cm = VectorMetric::new(centered);
+    let f_c = trimed_with_opts(&cm, &opts(Precision::F32));
+    assert_eq!(f_c.medoid, e.medoid, "centering must not move the medoid");
+    assert!(
+        f_c.refined * 2 <= f_c.computed,
+        "centered f32 refined {} of {} computed elements — band did not recover",
+        f_c.refined,
+        f_c.computed
+    );
+}
+
+#[test]
+fn push_after_mirror_materialization_stays_coherent() {
+    // Regression for the lazily-built f32 mirror: materialize it, then
+    // `push` more rows. The mirror must extend coherently (per-row
+    // conversion + the fixed f32 norm chain), and a fast f32 run on the
+    // grown set must still match the exact kernel bit for bit.
+    let mut pts = uniform_cube(200, 4, 23);
+    let before = pts.rows_f32().len();
+    assert_eq!(before, 200 * 4);
+    pts.push(&[0.25, -1.5, 3.0, 0.125]);
+    pts.push(&[9.0, 9.0, 9.0, 9.0]);
+    // Mirror reflects the pushed rows, element for element.
+    assert_eq!(pts.rows_f32().len(), 202 * 4);
+    for (f64v, f32v) in pts.flat().iter().zip(pts.rows_f32()) {
+        assert_eq!(*f32v, *f64v as f32, "mirror element diverged from its f64 source");
+    }
+    assert_eq!(pts.sq_norms_f32().len(), 202);
+    assert!(pts.max_sq_norm_f32() >= pts.sq_norms_f32()[201]);
+
+    let m = VectorMetric::new(pts);
+    let opts = |kernel, precision| TrimedOpts {
+        seed: 1,
+        batch: 8,
+        kernel,
+        precision,
+        ..Default::default()
+    };
+    let e = trimed_with_opts(&m, &opts(Kernel::Exact, Precision::F64));
+    let f = trimed_with_opts(&m, &opts(Kernel::Fast, Precision::F32));
+    assert_eq!(f.medoid, e.medoid);
+    assert!(f.energy == e.energy, "energy bits diverged after push: {} vs {}", f.energy, e.energy);
 }
