@@ -64,7 +64,10 @@ fn main() {
         a.loss,
         b.loss
     );
-    println!("\nverified: trikmeds-0 loss == KMEDS loss ({:.4}) on an N={n_small} subsample", a.loss);
+    println!(
+        "\nverified: trikmeds-0 loss == KMEDS loss ({:.4}) on an N={n_small} subsample",
+        a.loss
+    );
     let sizes = a.cluster_sizes(20);
     println!(
         "cluster sizes: min={} max={} (N/K = {})",

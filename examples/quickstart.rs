@@ -28,8 +28,14 @@ fn main() -> anyhow::Result<()> {
     let scan_time = t0.elapsed();
     let scan_counts = metric.counts();
 
-    println!("scan   : medoid={:<6} E={:.6}  computed={:<6} ({:.1?})", scan.medoid, scan.energy, scan_counts.one_to_all, scan_time);
-    println!("trimed : medoid={:<6} E={:.6}  computed={:<6} ({:.1?})", tri.medoid, tri.energy, tri_counts.one_to_all, tri_time);
+    println!(
+        "scan   : medoid={:<6} E={:.6}  computed={:<6} ({:.1?})",
+        scan.medoid, scan.energy, scan_counts.one_to_all, scan_time
+    );
+    println!(
+        "trimed : medoid={:<6} E={:.6}  computed={:<6} ({:.1?})",
+        tri.medoid, tri.energy, tri_counts.one_to_all, tri_time
+    );
     assert_eq!(tri.medoid, scan.medoid, "trimed is exact (Thm 3.1)");
     println!(
         "trimed computed {:.1}x fewer elements ({} vs {}; sqrt(N) = {:.0})\n",

@@ -27,7 +27,14 @@ fn main() {
     println!("trimed top-{k} ({} Dijkstras, {:.1?}):", tri_cost, t0.elapsed());
     for (rank, (&st, &e)) in topk.elements.iter().zip(&topk.energies).enumerate() {
         let pos = sg.positions.row(st);
-        println!("  #{:<2} station {:<5} E={:.4} at ({:.3}, {:.3})", rank + 1, st, e, pos[0], pos[1]);
+        println!(
+            "  #{:<2} station {:<5} E={:.4} at ({:.3}, {:.3})",
+            rank + 1,
+            st,
+            e,
+            pos[0],
+            pos[1]
+        );
     }
 
     // Cross-check with TOPRANK's native k-ranking.

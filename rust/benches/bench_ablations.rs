@@ -19,6 +19,7 @@ fn main() {
         println!("{}", table.to_markdown());
         println!("[ablation {id} @ {scale:?} completed in {:.1?}]\n", t0.elapsed());
         let _ = std::fs::create_dir_all("results");
-        let _ = table.save_tsv(std::path::Path::new("results").join(format!("ablation_{id}.tsv")).as_path());
+        let out = std::path::Path::new("results").join(format!("ablation_{id}.tsv"));
+        let _ = table.save_tsv(out.as_path());
     }
 }

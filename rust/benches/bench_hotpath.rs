@@ -418,9 +418,11 @@ fn main() {
             let pts2 = uniform_cube(n, 2, 5);
             let xm = XlaVectorMetric::new(&rt, pts2).expect("xla metric");
             let stats = time_block(1, 3, || {
-                trimed_with_opts(&xm, &TrimedOpts { seed: 9, slack: 1e-4 * n as f64, ..Default::default() })
+                let opts = TrimedOpts { seed: 9, slack: 1e-4 * n as f64, ..Default::default() };
+                trimed_with_opts(&xm, &opts)
             });
-            println!("trimed xla    N={n} d=2   : {} per full medoid search", fmt_ns(stats.median_ns));
+            let med = fmt_ns(stats.median_ns);
+            println!("trimed xla    N={n} d=2   : {med} per full medoid search");
         }
     }
 

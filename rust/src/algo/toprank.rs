@@ -125,7 +125,8 @@ pub fn toprank<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult 
     let nf = n as f64;
     let ln_n = nf.ln().max(1.0);
     // l = q · N^{2/3} (log N)^{1/3}, clamped to N.
-    let l = ((opts.q_scale * nf.powf(2.0 / 3.0) * ln_n.powf(1.0 / 3.0)).ceil() as usize).clamp(1, n);
+    let l = ((opts.q_scale * nf.powf(2.0 / 3.0) * ln_n.powf(1.0 / 3.0)).ceil() as usize)
+        .clamp(1, n);
 
     let rand = rand_energies_batched(metric, l, opts.seed, opts.batch);
     let mut est_sorted = rand.est_energies.clone();
@@ -211,7 +212,8 @@ pub fn toprank2<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult
     let est: Vec<f64> = sums.iter().map(|s| s * scale).collect();
     let mut sorted = est.clone();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let thr = sorted[opts.k - 1] + 2.0 * opts.alpha_prime * delta_hat * (ln_n / n_anchors as f64).sqrt();
+    let thr =
+        sorted[opts.k - 1] + 2.0 * opts.alpha_prime * delta_hat * (ln_n / n_anchors as f64).sqrt();
     let survivors: Vec<usize> = (0..n).filter(|&i| est[i] <= thr).collect();
     let (topk, energies) = exact_pass(metric, &survivors, opts.k, opts.batch);
     TopRankResult {

@@ -34,6 +34,20 @@
 //! equality possible at all. On CPUs without hardware FMA the libm path
 //! is slow, but every target this library is built for in practice
 //! (x86_64 with AVX2, aarch64) takes a hardware path.
+//!
+//! ## Soundness tooling
+//!
+//! The invariants above are machine-checked, not conventions: `cargo run
+//! -p xtask -- lint` verifies that every `unsafe fn` here carries a
+//! `# Safety` section and every `unsafe {}` block a `// SAFETY:`
+//! comment, that the target-feature kernels are reachable only through
+//! [`selected`], and that each arch implementation of each kernel
+//! family carries its canonical reduction-chain marker
+//! (`CANON-REDUCE-4` / `CANON-REDUCE-8` / `CANON-VIA`) so the
+//! bitwise-identity contract cannot silently drift when one arch is
+//! edited. CI additionally runs this module's tests under Miri and the
+//! address/thread sanitizers. See DESIGN.md §Soundness and static
+//! analysis.
 
 use std::sync::OnceLock;
 
@@ -352,6 +366,7 @@ fn dot_portable(a: &[f64], b: &[f64]) -> f64 {
     for i in chunks * 4..a.len() {
         tail = a[i].mul_add(b[i], tail);
     }
+    // CANON-REDUCE-4: ((l0+l2)+(l1+l3))+tail
     ((acc[0] + acc[2]) + (acc[1] + acc[3])) + tail
 }
 
@@ -401,6 +416,7 @@ fn dot_f32_portable(a: &[f32], b: &[f32]) -> f32 {
     for i in chunks * 8..a.len() {
         tail = a[i].mul_add(b[i], tail);
     }
+    // CANON-REDUCE-8: (((l0+l4)+(l2+l6))+((l1+l5)+(l3+l7)))+tail
     (((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]))) + tail
 }
 
@@ -419,6 +435,16 @@ fn panel_combine_f32(qn: f32, rn: f32, dot: f32) -> f64 {
 }
 
 /// Portable f32 panel scan (see [`PanelF32Fn`]).
+///
+/// # Safety
+///
+/// Performs no unsafe operations and requires no CPU features — the
+/// signature is `unsafe` only so it fits the [`PanelF32Fn`] dispatch
+/// slot. Callers must still uphold the [`panel_rows_f32`] shape
+/// contract; it is re-checked here by `debug_assert!` so Miri and
+/// sanitizer runs trip on malformed shapes before any out-of-range
+/// slice index panics confusingly deeper in.
+// CANON-VIA: reduction chain delegated to `dot_f32_portable`.
 unsafe fn portable_panel_f32(
     queries: &[f32],
     q_sq_norms: &[f32],
@@ -428,6 +454,15 @@ unsafe fn portable_panel_f32(
     out: &mut [f64],
     out_stride: usize,
 ) {
+    debug_assert_eq!(queries.len(), q_sq_norms.len() * d, "queries shape");
+    debug_assert_eq!(rows.len(), row_sq_norms.len() * d, "rows shape");
+    debug_assert!(
+        q_sq_norms.is_empty()
+            || row_sq_norms.is_empty()
+            || (out_stride >= row_sq_norms.len()
+                && out.len() >= (q_sq_norms.len() - 1) * out_stride + row_sq_norms.len()),
+        "out/out_stride too small for the panel rectangle"
+    );
     for (qi, &qn) in q_sq_norms.iter().enumerate() {
         let q = &queries[qi * d..(qi + 1) * d];
         let base = qi * out_stride;
@@ -439,6 +474,14 @@ unsafe fn portable_panel_f32(
 }
 
 /// Portable panel scan (see [`PanelFn`]).
+///
+/// # Safety
+///
+/// Performs no unsafe operations and requires no CPU features — the
+/// signature is `unsafe` only so it fits the [`PanelFn`] dispatch slot.
+/// Callers must still uphold the [`panel_rows`] shape contract; it is
+/// re-checked here by `debug_assert!`.
+// CANON-VIA: reduction chain delegated to `dot_portable`.
 unsafe fn portable_panel(
     queries: &[f64],
     q_sq_norms: &[f64],
@@ -448,6 +491,15 @@ unsafe fn portable_panel(
     out: &mut [f64],
     out_stride: usize,
 ) {
+    debug_assert_eq!(queries.len(), q_sq_norms.len() * d, "queries shape");
+    debug_assert_eq!(rows.len(), row_sq_norms.len() * d, "rows shape");
+    debug_assert!(
+        q_sq_norms.is_empty()
+            || row_sq_norms.is_empty()
+            || (out_stride >= row_sq_norms.len()
+                && out.len() >= (q_sq_norms.len() - 1) * out_stride + row_sq_norms.len()),
+        "out/out_stride too small for the panel rectangle"
+    );
     for (qi, &qn) in q_sq_norms.iter().enumerate() {
         let q = &queries[qi * d..(qi + 1) * d];
         let base = qi * out_stride;
@@ -477,17 +529,35 @@ pub fn squared_euclidean_portable(a: &[f64], b: &[f64]) -> f64 {
         let d = a[i] - b[i];
         tail = d.mul_add(d, tail);
     }
+    // CANON-REDUCE-4: ((l0+l2)+(l1+l3))+tail
     ((acc[0] + acc[2]) + (acc[1] + acc[3])) + tail
 }
 
 /// `KernelFn`-shaped wrapper for the dispatch table (which stores
 /// `unsafe fn` so it can also hold the target-feature kernels).
+///
+/// # Safety
+///
+/// Performs no unsafe operations and requires no CPU features — the
+/// signature is `unsafe` only so it fits the [`KernelFn`] dispatch
+/// slot. Callers uphold `a.len() == b.len()` (re-checked by the
+/// delegate's `debug_assert!`).
+// CANON-VIA: reduction chain delegated to `squared_euclidean_portable`.
 unsafe fn portable_kernel(a: &[f64], b: &[f64]) -> f64 {
     squared_euclidean_portable(a, b)
 }
 
 /// Portable row scan (see [`RowsFn`]).
+///
+/// # Safety
+///
+/// Performs no unsafe operations and requires no CPU features — the
+/// signature is `unsafe` only so it fits the [`RowsFn`] dispatch slot.
+/// Callers must still uphold `rows.len() == out.len() * q.len()`; it is
+/// re-checked here by `debug_assert!`.
+// CANON-VIA: reduction chain delegated to `squared_euclidean_portable`.
 unsafe fn portable_rows(q: &[f64], rows: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(rows.len(), out.len() * q.len(), "rows shape");
     let d = q.len();
     for (j, o) in out.iter_mut().enumerate() {
         *o = squared_euclidean_portable(q, &rows[j * d..(j + 1) * d]).sqrt();
@@ -502,60 +572,91 @@ mod avx2 {
     /// one 256-bit register; the reduction extracts the two halves so the
     /// add tree is exactly `((l0 + l2) + (l1 + l3)) + tail`.
     ///
-    /// SAFETY: caller must ensure AVX2 and FMA are available and
-    /// `a.len() == b.len()`.
+    /// # Safety
+    ///
+    /// Caller must ensure AVX2 and FMA are available (the dispatcher's
+    /// runtime feature check) and `a.len() == b.len()` (the unaligned
+    /// loads and tail derefs read both slices up to `a.len()`).
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
     pub(super) unsafe fn squared_euclidean(a: &[f64], b: &[f64]) -> f64 {
-        debug_assert_eq!(a.len(), b.len());
-        let n = a.len();
-        let chunks = n / 4;
-        let ap = a.as_ptr();
-        let bp = b.as_ptr();
-        let mut acc = _mm256_setzero_pd();
-        for c in 0..chunks {
-            let va = _mm256_loadu_pd(ap.add(c * 4));
-            let vb = _mm256_loadu_pd(bp.add(c * 4));
-            let d = _mm256_sub_pd(va, vb);
-            acc = _mm256_fmadd_pd(d, d, acc);
+        debug_assert_eq!(a.len(), b.len(), "kernel inputs shape");
+        // SAFETY: AVX2+FMA are available per the caller contract, and
+        // every load/deref is at index < a.len() == b.len(): the chunk
+        // loop reads 4 f64s starting at c*4 ≤ n−4, the tail loop reads
+        // single elements at i < n.
+        unsafe {
+            let n = a.len();
+            let chunks = n / 4;
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut acc = _mm256_setzero_pd();
+            for c in 0..chunks {
+                let va = _mm256_loadu_pd(ap.add(c * 4));
+                let vb = _mm256_loadu_pd(bp.add(c * 4));
+                let d = _mm256_sub_pd(va, vb);
+                acc = _mm256_fmadd_pd(d, d, acc);
+            }
+            let lo = _mm256_castpd256_pd128(acc); // [l0, l1]
+            let hi = _mm256_extractf128_pd::<1>(acc); // [l2, l3]
+            let pair = _mm_add_pd(lo, hi); // [l0+l2, l1+l3]
+            let upper = _mm_unpackhi_pd(pair, pair); // [l1+l3, l1+l3]
+            // CANON-REDUCE-4: ((l0+l2)+(l1+l3))+tail
+            let head = _mm_cvtsd_f64(_mm_add_sd(pair, upper)); // (l0+l2)+(l1+l3)
+            let mut tail = 0.0f64;
+            for i in chunks * 4..n {
+                let d = *ap.add(i) - *bp.add(i);
+                tail = d.mul_add(d, tail);
+            }
+            head + tail
         }
-        let lo = _mm256_castpd256_pd128(acc); // [l0, l1]
-        let hi = _mm256_extractf128_pd::<1>(acc); // [l2, l3]
-        let pair = _mm_add_pd(lo, hi); // [l0+l2, l1+l3]
-        let upper = _mm_unpackhi_pd(pair, pair); // [l1+l3, l1+l3]
-        let head = _mm_cvtsd_f64(_mm_add_sd(pair, upper)); // (l0+l2)+(l1+l3)
-        let mut tail = 0.0f64;
-        for i in chunks * 4..n {
-            let d = *ap.add(i) - *bp.add(i);
-            tail = d.mul_add(d, tail);
-        }
-        head + tail
     }
 
     /// Row scan inside the AVX2+FMA context so the kernel inlines into
-    /// the loop (see `RowsFn`). SAFETY: as for the kernel, plus
+    /// the loop (see `RowsFn`).
+    ///
+    /// # Safety
+    ///
+    /// As for [`squared_euclidean`], plus the `RowsFn` shape contract
     /// `rows.len() == out.len() * q.len()`.
+    // CANON-VIA: reduction chain delegated to `squared_euclidean`.
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
     pub(super) unsafe fn euclidean_rows(q: &[f64], rows: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(rows.len(), out.len() * q.len(), "rows shape");
         let d = q.len();
         for (j, o) in out.iter_mut().enumerate() {
-            *o = squared_euclidean(q, &rows[j * d..(j + 1) * d]).sqrt();
+            // SAFETY: AVX2+FMA available per the caller contract; the
+            // row slice is d long, matching q.
+            *o = unsafe { squared_euclidean(q, &rows[j * d..(j + 1) * d]) }.sqrt();
         }
     }
 
     /// `((l0+l2)+(l1+l3))` reduction of a 4-lane accumulator — the same
     /// tree as the canonical kernel's. Carries the caller's features so
     /// it inlines into the panel loops.
+    ///
+    /// # Safety
+    ///
+    /// Caller must ensure AVX2 and FMA are available; the body is pure
+    /// value shuffling (no memory access).
     #[inline]
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
+    #[allow(unused_unsafe)] // value-only intrinsics are safe on newer rustc
     unsafe fn hsum(acc: __m256d) -> f64 {
-        let lo = _mm256_castpd256_pd128(acc); // [l0, l1]
-        let hi = _mm256_extractf128_pd::<1>(acc); // [l2, l3]
-        let pair = _mm_add_pd(lo, hi); // [l0+l2, l1+l3]
-        let upper = _mm_unpackhi_pd(pair, pair);
-        _mm_cvtsd_f64(_mm_add_sd(pair, upper))
+        // SAFETY: value-only intrinsics under the required target
+        // features (safe to call on rustc ≥ 1.86, unsafe before; the
+        // explicit block keeps both versions warning-free under
+        // deny(unsafe_op_in_unsafe_fn)).
+        unsafe {
+            let lo = _mm256_castpd256_pd128(acc); // [l0, l1]
+            let hi = _mm256_extractf128_pd::<1>(acc); // [l2, l3]
+            let pair = _mm_add_pd(lo, hi); // [l0+l2, l1+l3]
+            let upper = _mm_unpackhi_pd(pair, pair);
+            // CANON-REDUCE-4: ((l0+l2)+(l1+l3)) — tail added by callers
+            _mm_cvtsd_f64(_mm_add_sd(pair, upper))
+        }
     }
 
     /// Panel scan on AVX2+FMA (see `PanelFn` / `panel_rows`): queries in
@@ -565,7 +666,13 @@ mod avx2 {
     /// in the 4-panel and the remainder loop — results do not depend on
     /// how queries were grouped, and match `dot_portable` bitwise.
     ///
-    /// SAFETY: AVX2+FMA available, plus the `panel_rows` shape contract.
+    /// # Safety
+    ///
+    /// AVX2+FMA available, plus the `panel_rows` shape contract
+    /// (`queries.len() == nq·d`, `rows.len() == nr·d`, `out_stride ≥
+    /// nr`, `out.len() ≥ (nq−1)·out_stride + nr`) — re-checked here by
+    /// `debug_assert!`.
+    // CANON-VIA: reduction chain delegated to `hsum` (+ scalar tail).
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
     pub(super) unsafe fn panel_rows(
@@ -577,67 +684,84 @@ mod avx2 {
         out: &mut [f64],
         out_stride: usize,
     ) {
-        let nq = q_sq_norms.len();
-        let chunks = d / 4;
-        let qp = queries.as_ptr();
-        let op = out.as_mut_ptr();
-        let mut qi = 0usize;
-        while qi + 4 <= nq {
-            let q0 = qp.add(qi * d);
-            let q1 = qp.add((qi + 1) * d);
-            let q2 = qp.add((qi + 2) * d);
-            let q3 = qp.add((qi + 3) * d);
-            for (j, &rn) in row_sq_norms.iter().enumerate() {
-                let r = rows.as_ptr().add(j * d);
-                let mut a0 = _mm256_setzero_pd();
-                let mut a1 = _mm256_setzero_pd();
-                let mut a2 = _mm256_setzero_pd();
-                let mut a3 = _mm256_setzero_pd();
-                for c in 0..chunks {
-                    let vr = _mm256_loadu_pd(r.add(c * 4));
-                    a0 = _mm256_fmadd_pd(_mm256_loadu_pd(q0.add(c * 4)), vr, a0);
-                    a1 = _mm256_fmadd_pd(_mm256_loadu_pd(q1.add(c * 4)), vr, a1);
-                    a2 = _mm256_fmadd_pd(_mm256_loadu_pd(q2.add(c * 4)), vr, a2);
-                    a3 = _mm256_fmadd_pd(_mm256_loadu_pd(q3.add(c * 4)), vr, a3);
+        debug_assert_eq!(queries.len(), q_sq_norms.len() * d, "queries shape");
+        debug_assert_eq!(rows.len(), row_sq_norms.len() * d, "rows shape");
+        debug_assert!(
+            q_sq_norms.is_empty()
+                || row_sq_norms.is_empty()
+                || (out_stride >= row_sq_norms.len()
+                    && out.len() >= (q_sq_norms.len() - 1) * out_stride + row_sq_norms.len()),
+            "out/out_stride too small for the panel rectangle"
+        );
+        // SAFETY: AVX2+FMA are available per the caller contract. All
+        // pointer arithmetic stays inside the asserted shapes: query
+        // pointers qk index row qi+k < nq of an nq·d slice, row loads
+        // read d elements of row j < nr, and every out write lands at
+        // q·out_stride + j ≤ (nq−1)·out_stride + nr − 1 < out.len().
+        unsafe {
+            let nq = q_sq_norms.len();
+            let chunks = d / 4;
+            let qp = queries.as_ptr();
+            let op = out.as_mut_ptr();
+            let mut qi = 0usize;
+            while qi + 4 <= nq {
+                let q0 = qp.add(qi * d);
+                let q1 = qp.add((qi + 1) * d);
+                let q2 = qp.add((qi + 2) * d);
+                let q3 = qp.add((qi + 3) * d);
+                for (j, &rn) in row_sq_norms.iter().enumerate() {
+                    let r = rows.as_ptr().add(j * d);
+                    let mut a0 = _mm256_setzero_pd();
+                    let mut a1 = _mm256_setzero_pd();
+                    let mut a2 = _mm256_setzero_pd();
+                    let mut a3 = _mm256_setzero_pd();
+                    for c in 0..chunks {
+                        let vr = _mm256_loadu_pd(r.add(c * 4));
+                        a0 = _mm256_fmadd_pd(_mm256_loadu_pd(q0.add(c * 4)), vr, a0);
+                        a1 = _mm256_fmadd_pd(_mm256_loadu_pd(q1.add(c * 4)), vr, a1);
+                        a2 = _mm256_fmadd_pd(_mm256_loadu_pd(q2.add(c * 4)), vr, a2);
+                        a3 = _mm256_fmadd_pd(_mm256_loadu_pd(q3.add(c * 4)), vr, a3);
+                    }
+                    let (mut t0, mut t1, mut t2, mut t3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                    for i in chunks * 4..d {
+                        let rv = *r.add(i);
+                        t0 = (*q0.add(i)).mul_add(rv, t0);
+                        t1 = (*q1.add(i)).mul_add(rv, t1);
+                        t2 = (*q2.add(i)).mul_add(rv, t2);
+                        t3 = (*q3.add(i)).mul_add(rv, t3);
+                    }
+                    *op.add(qi * out_stride + j) =
+                        super::panel_combine(q_sq_norms[qi], rn, hsum(a0) + t0);
+                    *op.add((qi + 1) * out_stride + j) =
+                        super::panel_combine(q_sq_norms[qi + 1], rn, hsum(a1) + t1);
+                    *op.add((qi + 2) * out_stride + j) =
+                        super::panel_combine(q_sq_norms[qi + 2], rn, hsum(a2) + t2);
+                    *op.add((qi + 3) * out_stride + j) =
+                        super::panel_combine(q_sq_norms[qi + 3], rn, hsum(a3) + t3);
                 }
-                let (mut t0, mut t1, mut t2, mut t3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-                for i in chunks * 4..d {
-                    let rv = *r.add(i);
-                    t0 = (*q0.add(i)).mul_add(rv, t0);
-                    t1 = (*q1.add(i)).mul_add(rv, t1);
-                    t2 = (*q2.add(i)).mul_add(rv, t2);
-                    t3 = (*q3.add(i)).mul_add(rv, t3);
-                }
-                *op.add(qi * out_stride + j) = super::panel_combine(q_sq_norms[qi], rn, hsum(a0) + t0);
-                *op.add((qi + 1) * out_stride + j) =
-                    super::panel_combine(q_sq_norms[qi + 1], rn, hsum(a1) + t1);
-                *op.add((qi + 2) * out_stride + j) =
-                    super::panel_combine(q_sq_norms[qi + 2], rn, hsum(a2) + t2);
-                *op.add((qi + 3) * out_stride + j) =
-                    super::panel_combine(q_sq_norms[qi + 3], rn, hsum(a3) + t3);
+                qi += 4;
             }
-            qi += 4;
-        }
-        while qi < nq {
-            let q = qp.add(qi * d);
-            for (j, &rn) in row_sq_norms.iter().enumerate() {
-                let r = rows.as_ptr().add(j * d);
-                let mut acc = _mm256_setzero_pd();
-                for c in 0..chunks {
-                    acc = _mm256_fmadd_pd(
-                        _mm256_loadu_pd(q.add(c * 4)),
-                        _mm256_loadu_pd(r.add(c * 4)),
-                        acc,
-                    );
+            while qi < nq {
+                let q = qp.add(qi * d);
+                for (j, &rn) in row_sq_norms.iter().enumerate() {
+                    let r = rows.as_ptr().add(j * d);
+                    let mut acc = _mm256_setzero_pd();
+                    for c in 0..chunks {
+                        acc = _mm256_fmadd_pd(
+                            _mm256_loadu_pd(q.add(c * 4)),
+                            _mm256_loadu_pd(r.add(c * 4)),
+                            acc,
+                        );
+                    }
+                    let mut tail = 0.0f64;
+                    for i in chunks * 4..d {
+                        tail = (*q.add(i)).mul_add(*r.add(i), tail);
+                    }
+                    *op.add(qi * out_stride + j) =
+                        super::panel_combine(q_sq_norms[qi], rn, hsum(acc) + tail);
                 }
-                let mut tail = 0.0f64;
-                for i in chunks * 4..d {
-                    tail = (*q.add(i)).mul_add(*r.add(i), tail);
-                }
-                *op.add(qi * out_stride + j) =
-                    super::panel_combine(q_sq_norms[qi], rn, hsum(acc) + tail);
+                qi += 1;
             }
-            qi += 1;
         }
     }
 
@@ -645,17 +769,30 @@ mod avx2 {
     /// f32 accumulator: fold the two 128-bit halves into
     /// `[l0+l4, l1+l5, l2+l6, l3+l7]`, then the f64 kernel's 4-lane
     /// tree — the pairing `dot_f32_portable` replays in scalar code.
+    ///
+    /// # Safety
+    ///
+    /// Caller must ensure AVX2 and FMA are available; the body is pure
+    /// value shuffling (no memory access).
     #[inline]
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
+    #[allow(unused_unsafe)] // value-only intrinsics are safe on newer rustc
     unsafe fn hsum_ps(acc: __m256) -> f32 {
-        let lo = _mm256_castps256_ps128(acc); // [l0, l1, l2, l3]
-        let hi = _mm256_extractf128_ps::<1>(acc); // [l4, l5, l6, l7]
-        let pair = _mm_add_ps(lo, hi); // [A0, A1, A2, A3]
-        let upper = _mm_movehl_ps(pair, pair); // [A2, A3, ·, ·]
-        let sum2 = _mm_add_ps(pair, upper); // [A0+A2, A1+A3, ·, ·]
-        let s1 = _mm_shuffle_ps::<0x55>(sum2, sum2); // [A1+A3, ·, ·, ·]
-        _mm_cvtss_f32(_mm_add_ss(sum2, s1)) // (A0+A2)+(A1+A3)
+        // SAFETY: value-only intrinsics under the required target
+        // features (safe to call on rustc ≥ 1.86, unsafe before; the
+        // explicit block keeps both versions warning-free under
+        // deny(unsafe_op_in_unsafe_fn)).
+        unsafe {
+            let lo = _mm256_castps256_ps128(acc); // [l0, l1, l2, l3]
+            let hi = _mm256_extractf128_ps::<1>(acc); // [l4, l5, l6, l7]
+            let pair = _mm_add_ps(lo, hi); // [A0, A1, A2, A3]
+            let upper = _mm_movehl_ps(pair, pair); // [A2, A3, ·, ·]
+            let sum2 = _mm_add_ps(pair, upper); // [A0+A2, A1+A3, ·, ·]
+            let s1 = _mm_shuffle_ps::<0x55>(sum2, sum2); // [A1+A3, ·, ·, ·]
+            // CANON-REDUCE-8: (((l0+l4)+(l2+l6))+((l1+l5)+(l3+l7))) — tail added by callers
+            _mm_cvtss_f32(_mm_add_ss(sum2, s1)) // (A0+A2)+(A1+A3)
+        }
     }
 
     /// f32 panel scan on AVX2+FMA (see `PanelF32Fn` / `panel_rows_f32`):
@@ -665,8 +802,12 @@ mod avx2 {
     /// scalar f32 FMA tail) are identical in the 4-panel and the
     /// remainder loop, and match `dot_f32_portable` bitwise.
     ///
-    /// SAFETY: AVX2+FMA available, plus the `panel_rows_f32` shape
-    /// contract.
+    /// # Safety
+    ///
+    /// AVX2+FMA available, plus the `panel_rows_f32` shape contract
+    /// (identical to `panel_rows`, in f32 units) — re-checked here by
+    /// `debug_assert!`.
+    // CANON-VIA: reduction chain delegated to `hsum_ps` (+ scalar tail).
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
     pub(super) unsafe fn panel_rows_f32(
@@ -678,68 +819,85 @@ mod avx2 {
         out: &mut [f64],
         out_stride: usize,
     ) {
-        let nq = q_sq_norms.len();
-        let chunks = d / 8;
-        let qp = queries.as_ptr();
-        let op = out.as_mut_ptr();
-        let mut qi = 0usize;
-        while qi + 4 <= nq {
-            let q0 = qp.add(qi * d);
-            let q1 = qp.add((qi + 1) * d);
-            let q2 = qp.add((qi + 2) * d);
-            let q3 = qp.add((qi + 3) * d);
-            for (j, &rn) in row_sq_norms.iter().enumerate() {
-                let r = rows.as_ptr().add(j * d);
-                let mut a0 = _mm256_setzero_ps();
-                let mut a1 = _mm256_setzero_ps();
-                let mut a2 = _mm256_setzero_ps();
-                let mut a3 = _mm256_setzero_ps();
-                for c in 0..chunks {
-                    let vr = _mm256_loadu_ps(r.add(c * 8));
-                    a0 = _mm256_fmadd_ps(_mm256_loadu_ps(q0.add(c * 8)), vr, a0);
-                    a1 = _mm256_fmadd_ps(_mm256_loadu_ps(q1.add(c * 8)), vr, a1);
-                    a2 = _mm256_fmadd_ps(_mm256_loadu_ps(q2.add(c * 8)), vr, a2);
-                    a3 = _mm256_fmadd_ps(_mm256_loadu_ps(q3.add(c * 8)), vr, a3);
+        debug_assert_eq!(queries.len(), q_sq_norms.len() * d, "queries shape");
+        debug_assert_eq!(rows.len(), row_sq_norms.len() * d, "rows shape");
+        debug_assert!(
+            q_sq_norms.is_empty()
+                || row_sq_norms.is_empty()
+                || (out_stride >= row_sq_norms.len()
+                    && out.len() >= (q_sq_norms.len() - 1) * out_stride + row_sq_norms.len()),
+            "out/out_stride too small for the panel rectangle"
+        );
+        // SAFETY: AVX2+FMA are available per the caller contract. All
+        // pointer arithmetic stays inside the asserted shapes — same
+        // argument as `panel_rows`, with 8-wide f32 loads: the chunk
+        // loop reads 8 f32s starting at c*8 ≤ d−8 within row j < nr /
+        // query qi+k < nq, and out writes land at q·out_stride + j <
+        // out.len().
+        unsafe {
+            let nq = q_sq_norms.len();
+            let chunks = d / 8;
+            let qp = queries.as_ptr();
+            let op = out.as_mut_ptr();
+            let mut qi = 0usize;
+            while qi + 4 <= nq {
+                let q0 = qp.add(qi * d);
+                let q1 = qp.add((qi + 1) * d);
+                let q2 = qp.add((qi + 2) * d);
+                let q3 = qp.add((qi + 3) * d);
+                for (j, &rn) in row_sq_norms.iter().enumerate() {
+                    let r = rows.as_ptr().add(j * d);
+                    let mut a0 = _mm256_setzero_ps();
+                    let mut a1 = _mm256_setzero_ps();
+                    let mut a2 = _mm256_setzero_ps();
+                    let mut a3 = _mm256_setzero_ps();
+                    for c in 0..chunks {
+                        let vr = _mm256_loadu_ps(r.add(c * 8));
+                        a0 = _mm256_fmadd_ps(_mm256_loadu_ps(q0.add(c * 8)), vr, a0);
+                        a1 = _mm256_fmadd_ps(_mm256_loadu_ps(q1.add(c * 8)), vr, a1);
+                        a2 = _mm256_fmadd_ps(_mm256_loadu_ps(q2.add(c * 8)), vr, a2);
+                        a3 = _mm256_fmadd_ps(_mm256_loadu_ps(q3.add(c * 8)), vr, a3);
+                    }
+                    let (mut t0, mut t1, mut t2, mut t3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                    for i in chunks * 8..d {
+                        let rv = *r.add(i);
+                        t0 = (*q0.add(i)).mul_add(rv, t0);
+                        t1 = (*q1.add(i)).mul_add(rv, t1);
+                        t2 = (*q2.add(i)).mul_add(rv, t2);
+                        t3 = (*q3.add(i)).mul_add(rv, t3);
+                    }
+                    *op.add(qi * out_stride + j) =
+                        super::panel_combine_f32(q_sq_norms[qi], rn, hsum_ps(a0) + t0);
+                    *op.add((qi + 1) * out_stride + j) =
+                        super::panel_combine_f32(q_sq_norms[qi + 1], rn, hsum_ps(a1) + t1);
+                    *op.add((qi + 2) * out_stride + j) =
+                        super::panel_combine_f32(q_sq_norms[qi + 2], rn, hsum_ps(a2) + t2);
+                    *op.add((qi + 3) * out_stride + j) =
+                        super::panel_combine_f32(q_sq_norms[qi + 3], rn, hsum_ps(a3) + t3);
                 }
-                let (mut t0, mut t1, mut t2, mut t3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-                for i in chunks * 8..d {
-                    let rv = *r.add(i);
-                    t0 = (*q0.add(i)).mul_add(rv, t0);
-                    t1 = (*q1.add(i)).mul_add(rv, t1);
-                    t2 = (*q2.add(i)).mul_add(rv, t2);
-                    t3 = (*q3.add(i)).mul_add(rv, t3);
-                }
-                *op.add(qi * out_stride + j) =
-                    super::panel_combine_f32(q_sq_norms[qi], rn, hsum_ps(a0) + t0);
-                *op.add((qi + 1) * out_stride + j) =
-                    super::panel_combine_f32(q_sq_norms[qi + 1], rn, hsum_ps(a1) + t1);
-                *op.add((qi + 2) * out_stride + j) =
-                    super::panel_combine_f32(q_sq_norms[qi + 2], rn, hsum_ps(a2) + t2);
-                *op.add((qi + 3) * out_stride + j) =
-                    super::panel_combine_f32(q_sq_norms[qi + 3], rn, hsum_ps(a3) + t3);
+                qi += 4;
             }
-            qi += 4;
-        }
-        while qi < nq {
-            let q = qp.add(qi * d);
-            for (j, &rn) in row_sq_norms.iter().enumerate() {
-                let r = rows.as_ptr().add(j * d);
-                let mut acc = _mm256_setzero_ps();
-                for c in 0..chunks {
-                    acc = _mm256_fmadd_ps(
-                        _mm256_loadu_ps(q.add(c * 8)),
-                        _mm256_loadu_ps(r.add(c * 8)),
-                        acc,
-                    );
+            while qi < nq {
+                let q = qp.add(qi * d);
+                for (j, &rn) in row_sq_norms.iter().enumerate() {
+                    let r = rows.as_ptr().add(j * d);
+                    let mut acc = _mm256_setzero_ps();
+                    for c in 0..chunks {
+                        acc = _mm256_fmadd_ps(
+                            _mm256_loadu_ps(q.add(c * 8)),
+                            _mm256_loadu_ps(r.add(c * 8)),
+                            acc,
+                        );
+                    }
+                    let mut tail = 0.0f32;
+                    for i in chunks * 8..d {
+                        tail = (*q.add(i)).mul_add(*r.add(i), tail);
+                    }
+                    *op.add(qi * out_stride + j) =
+                        super::panel_combine_f32(q_sq_norms[qi], rn, hsum_ps(acc) + tail);
                 }
-                let mut tail = 0.0f32;
-                for i in chunks * 8..d {
-                    tail = (*q.add(i)).mul_add(*r.add(i), tail);
-                }
-                *op.add(qi * out_stride + j) =
-                    super::panel_combine_f32(q_sq_norms[qi], rn, hsum_ps(acc) + tail);
+                qi += 1;
             }
-            qi += 1;
         }
     }
 }
@@ -753,66 +911,95 @@ mod neon {
     /// into `[l0+l2, l1+l3]` and then lane 0 + lane 1 — the same add tree
     /// as the portable and AVX2 kernels.
     ///
-    /// SAFETY: caller must ensure NEON is available and
-    /// `a.len() == b.len()`.
+    /// # Safety
+    ///
+    /// Caller must ensure NEON is available (the dispatcher's runtime
+    /// feature check) and `a.len() == b.len()` (the vector loads and
+    /// tail derefs read both slices up to `a.len()`).
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn squared_euclidean(a: &[f64], b: &[f64]) -> f64 {
-        debug_assert_eq!(a.len(), b.len());
-        let n = a.len();
-        let chunks = n / 4;
-        let ap = a.as_ptr();
-        let bp = b.as_ptr();
-        let mut acc01 = vdupq_n_f64(0.0);
-        let mut acc23 = vdupq_n_f64(0.0);
-        for c in 0..chunks {
-            let base = c * 4;
-            let d01 = vsubq_f64(vld1q_f64(ap.add(base)), vld1q_f64(bp.add(base)));
-            let d23 = vsubq_f64(vld1q_f64(ap.add(base + 2)), vld1q_f64(bp.add(base + 2)));
-            acc01 = vfmaq_f64(acc01, d01, d01);
-            acc23 = vfmaq_f64(acc23, d23, d23);
+        debug_assert_eq!(a.len(), b.len(), "kernel inputs shape");
+        // SAFETY: NEON is available per the caller contract, and every
+        // load/deref is at index < a.len() == b.len(): the chunk loop
+        // reads f64 pairs at base ≤ n−4 and base+2 ≤ n−2, the tail loop
+        // single elements at i < n.
+        unsafe {
+            let n = a.len();
+            let chunks = n / 4;
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut acc01 = vdupq_n_f64(0.0);
+            let mut acc23 = vdupq_n_f64(0.0);
+            for c in 0..chunks {
+                let base = c * 4;
+                let d01 = vsubq_f64(vld1q_f64(ap.add(base)), vld1q_f64(bp.add(base)));
+                let d23 = vsubq_f64(vld1q_f64(ap.add(base + 2)), vld1q_f64(bp.add(base + 2)));
+                acc01 = vfmaq_f64(acc01, d01, d01);
+                acc23 = vfmaq_f64(acc23, d23, d23);
+            }
+            let pair = vaddq_f64(acc01, acc23); // [l0+l2, l1+l3]
+            // CANON-REDUCE-4: ((l0+l2)+(l1+l3))+tail
+            let head = vgetq_lane_f64::<0>(pair) + vgetq_lane_f64::<1>(pair);
+            let mut tail = 0.0f64;
+            for i in chunks * 4..n {
+                let d = *ap.add(i) - *bp.add(i);
+                tail = d.mul_add(d, tail);
+            }
+            head + tail
         }
-        let pair = vaddq_f64(acc01, acc23); // [l0+l2, l1+l3]
-        let head = vgetq_lane_f64::<0>(pair) + vgetq_lane_f64::<1>(pair);
-        let mut tail = 0.0f64;
-        for i in chunks * 4..n {
-            let d = *ap.add(i) - *bp.add(i);
-            tail = d.mul_add(d, tail);
-        }
-        head + tail
     }
 
     /// Row scan inside the NEON context so the kernel inlines into the
-    /// loop (see `RowsFn`). SAFETY: as for the kernel, plus
+    /// loop (see `RowsFn`).
+    ///
+    /// # Safety
+    ///
+    /// As for [`squared_euclidean`], plus the `RowsFn` shape contract
     /// `rows.len() == out.len() * q.len()`.
+    // CANON-VIA: reduction chain delegated to `squared_euclidean`.
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn euclidean_rows(q: &[f64], rows: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(rows.len(), out.len() * q.len(), "rows shape");
         let d = q.len();
         for (j, o) in out.iter_mut().enumerate() {
-            *o = squared_euclidean(q, &rows[j * d..(j + 1) * d]).sqrt();
+            // SAFETY: NEON available per the caller contract; the row
+            // slice is d long, matching q.
+            *o = unsafe { squared_euclidean(q, &rows[j * d..(j + 1) * d]) }.sqrt();
         }
     }
 
     /// Single-query fused dot on the canonical four lanes (acc01 holds
     /// lanes {0,1}, acc23 lanes {2,3}), reduction
     /// `((l0+l2)+(l1+l3))+tail` — bitwise the portable chain.
+    ///
+    /// # Safety
+    ///
+    /// NEON available, and `q`/`r` must each point to at least `d`
+    /// readable f64s.
     #[inline]
     #[target_feature(enable = "neon")]
     unsafe fn dot(q: *const f64, r: *const f64, d: usize) -> f64 {
-        let chunks = d / 4;
-        let mut acc01 = vdupq_n_f64(0.0);
-        let mut acc23 = vdupq_n_f64(0.0);
-        for c in 0..chunks {
-            let base = c * 4;
-            acc01 = vfmaq_f64(acc01, vld1q_f64(q.add(base)), vld1q_f64(r.add(base)));
-            acc23 = vfmaq_f64(acc23, vld1q_f64(q.add(base + 2)), vld1q_f64(r.add(base + 2)));
+        // SAFETY: NEON available per the caller contract; loads and
+        // derefs stay below index d on both pointers, which the caller
+        // guarantees are d-element rows.
+        unsafe {
+            let chunks = d / 4;
+            let mut acc01 = vdupq_n_f64(0.0);
+            let mut acc23 = vdupq_n_f64(0.0);
+            for c in 0..chunks {
+                let base = c * 4;
+                acc01 = vfmaq_f64(acc01, vld1q_f64(q.add(base)), vld1q_f64(r.add(base)));
+                acc23 = vfmaq_f64(acc23, vld1q_f64(q.add(base + 2)), vld1q_f64(r.add(base + 2)));
+            }
+            let pair = vaddq_f64(acc01, acc23); // [l0+l2, l1+l3]
+            // CANON-REDUCE-4: ((l0+l2)+(l1+l3))+tail
+            let head = vgetq_lane_f64::<0>(pair) + vgetq_lane_f64::<1>(pair);
+            let mut tail = 0.0f64;
+            for i in chunks * 4..d {
+                tail = (*q.add(i)).mul_add(*r.add(i), tail);
+            }
+            head + tail
         }
-        let pair = vaddq_f64(acc01, acc23); // [l0+l2, l1+l3]
-        let head = vgetq_lane_f64::<0>(pair) + vgetq_lane_f64::<1>(pair);
-        let mut tail = 0.0f64;
-        for i in chunks * 4..d {
-            tail = (*q.add(i)).mul_add(*r.add(i), tail);
-        }
-        head + tail
     }
 
     /// Panel scan on NEON (see `PanelFn` / `panel_rows`): queries in
@@ -821,7 +1008,14 @@ mod neon {
     /// [`dot`] (and `dot_portable`) bitwise, so grouping is
     /// unobservable.
     ///
-    /// SAFETY: NEON available, plus the `panel_rows` shape contract.
+    /// # Safety
+    ///
+    /// NEON available, plus the `panel_rows` shape contract
+    /// (`queries.len() == nq·d`, `rows.len() == nr·d`, `out_stride ≥
+    /// nr`, `out.len() ≥ (nq−1)·out_stride + nr`) — re-checked here by
+    /// `debug_assert!`.
+    // CANON-REDUCE-4: ((l0+l2)+(l1+l3))+tail — inline in the 4-panel
+    // loop; the remainder loop delegates to `dot` (same chain).
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn panel_rows(
         queries: &[f64],
@@ -832,72 +1026,88 @@ mod neon {
         out: &mut [f64],
         out_stride: usize,
     ) {
-        let nq = q_sq_norms.len();
-        let chunks = d / 4;
-        let qp = queries.as_ptr();
-        let op = out.as_mut_ptr();
-        let mut qi = 0usize;
-        while qi + 4 <= nq {
-            let q0 = qp.add(qi * d);
-            let q1 = qp.add((qi + 1) * d);
-            let q2 = qp.add((qi + 2) * d);
-            let q3 = qp.add((qi + 3) * d);
-            for (j, &rn) in row_sq_norms.iter().enumerate() {
-                let r = rows.as_ptr().add(j * d);
-                let mut a0_01 = vdupq_n_f64(0.0);
-                let mut a0_23 = vdupq_n_f64(0.0);
-                let mut a1_01 = vdupq_n_f64(0.0);
-                let mut a1_23 = vdupq_n_f64(0.0);
-                let mut a2_01 = vdupq_n_f64(0.0);
-                let mut a2_23 = vdupq_n_f64(0.0);
-                let mut a3_01 = vdupq_n_f64(0.0);
-                let mut a3_23 = vdupq_n_f64(0.0);
-                for c in 0..chunks {
-                    let base = c * 4;
-                    let r01 = vld1q_f64(r.add(base));
-                    let r23 = vld1q_f64(r.add(base + 2));
-                    a0_01 = vfmaq_f64(a0_01, vld1q_f64(q0.add(base)), r01);
-                    a0_23 = vfmaq_f64(a0_23, vld1q_f64(q0.add(base + 2)), r23);
-                    a1_01 = vfmaq_f64(a1_01, vld1q_f64(q1.add(base)), r01);
-                    a1_23 = vfmaq_f64(a1_23, vld1q_f64(q1.add(base + 2)), r23);
-                    a2_01 = vfmaq_f64(a2_01, vld1q_f64(q2.add(base)), r01);
-                    a2_23 = vfmaq_f64(a2_23, vld1q_f64(q2.add(base + 2)), r23);
-                    a3_01 = vfmaq_f64(a3_01, vld1q_f64(q3.add(base)), r01);
-                    a3_23 = vfmaq_f64(a3_23, vld1q_f64(q3.add(base + 2)), r23);
+        debug_assert_eq!(queries.len(), q_sq_norms.len() * d, "queries shape");
+        debug_assert_eq!(rows.len(), row_sq_norms.len() * d, "rows shape");
+        debug_assert!(
+            q_sq_norms.is_empty()
+                || row_sq_norms.is_empty()
+                || (out_stride >= row_sq_norms.len()
+                    && out.len() >= (q_sq_norms.len() - 1) * out_stride + row_sq_norms.len()),
+            "out/out_stride too small for the panel rectangle"
+        );
+        // SAFETY: NEON is available per the caller contract. All
+        // pointer arithmetic stays inside the asserted shapes: query
+        // pointers qk index row qi+k < nq of an nq·d slice, row loads
+        // read d elements of row j < nr, and every out write lands at
+        // q·out_stride + j ≤ (nq−1)·out_stride + nr − 1 < out.len().
+        unsafe {
+            let nq = q_sq_norms.len();
+            let chunks = d / 4;
+            let qp = queries.as_ptr();
+            let op = out.as_mut_ptr();
+            let mut qi = 0usize;
+            while qi + 4 <= nq {
+                let q0 = qp.add(qi * d);
+                let q1 = qp.add((qi + 1) * d);
+                let q2 = qp.add((qi + 2) * d);
+                let q3 = qp.add((qi + 3) * d);
+                for (j, &rn) in row_sq_norms.iter().enumerate() {
+                    let r = rows.as_ptr().add(j * d);
+                    let mut a0_01 = vdupq_n_f64(0.0);
+                    let mut a0_23 = vdupq_n_f64(0.0);
+                    let mut a1_01 = vdupq_n_f64(0.0);
+                    let mut a1_23 = vdupq_n_f64(0.0);
+                    let mut a2_01 = vdupq_n_f64(0.0);
+                    let mut a2_23 = vdupq_n_f64(0.0);
+                    let mut a3_01 = vdupq_n_f64(0.0);
+                    let mut a3_23 = vdupq_n_f64(0.0);
+                    for c in 0..chunks {
+                        let base = c * 4;
+                        let r01 = vld1q_f64(r.add(base));
+                        let r23 = vld1q_f64(r.add(base + 2));
+                        a0_01 = vfmaq_f64(a0_01, vld1q_f64(q0.add(base)), r01);
+                        a0_23 = vfmaq_f64(a0_23, vld1q_f64(q0.add(base + 2)), r23);
+                        a1_01 = vfmaq_f64(a1_01, vld1q_f64(q1.add(base)), r01);
+                        a1_23 = vfmaq_f64(a1_23, vld1q_f64(q1.add(base + 2)), r23);
+                        a2_01 = vfmaq_f64(a2_01, vld1q_f64(q2.add(base)), r01);
+                        a2_23 = vfmaq_f64(a2_23, vld1q_f64(q2.add(base + 2)), r23);
+                        a3_01 = vfmaq_f64(a3_01, vld1q_f64(q3.add(base)), r01);
+                        a3_23 = vfmaq_f64(a3_23, vld1q_f64(q3.add(base + 2)), r23);
+                    }
+                    let (mut t0, mut t1, mut t2, mut t3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                    for i in chunks * 4..d {
+                        let rv = *r.add(i);
+                        t0 = (*q0.add(i)).mul_add(rv, t0);
+                        t1 = (*q1.add(i)).mul_add(rv, t1);
+                        t2 = (*q2.add(i)).mul_add(rv, t2);
+                        t3 = (*q3.add(i)).mul_add(rv, t3);
+                    }
+                    let p0 = vaddq_f64(a0_01, a0_23);
+                    let p1 = vaddq_f64(a1_01, a1_23);
+                    let p2 = vaddq_f64(a2_01, a2_23);
+                    let p3 = vaddq_f64(a3_01, a3_23);
+                    let d0 = (vgetq_lane_f64::<0>(p0) + vgetq_lane_f64::<1>(p0)) + t0;
+                    let d1 = (vgetq_lane_f64::<0>(p1) + vgetq_lane_f64::<1>(p1)) + t1;
+                    let d2 = (vgetq_lane_f64::<0>(p2) + vgetq_lane_f64::<1>(p2)) + t2;
+                    let d3 = (vgetq_lane_f64::<0>(p3) + vgetq_lane_f64::<1>(p3)) + t3;
+                    *op.add(qi * out_stride + j) = super::panel_combine(q_sq_norms[qi], rn, d0);
+                    *op.add((qi + 1) * out_stride + j) =
+                        super::panel_combine(q_sq_norms[qi + 1], rn, d1);
+                    *op.add((qi + 2) * out_stride + j) =
+                        super::panel_combine(q_sq_norms[qi + 2], rn, d2);
+                    *op.add((qi + 3) * out_stride + j) =
+                        super::panel_combine(q_sq_norms[qi + 3], rn, d3);
                 }
-                let (mut t0, mut t1, mut t2, mut t3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-                for i in chunks * 4..d {
-                    let rv = *r.add(i);
-                    t0 = (*q0.add(i)).mul_add(rv, t0);
-                    t1 = (*q1.add(i)).mul_add(rv, t1);
-                    t2 = (*q2.add(i)).mul_add(rv, t2);
-                    t3 = (*q3.add(i)).mul_add(rv, t3);
+                qi += 4;
+            }
+            while qi < nq {
+                let q = qp.add(qi * d);
+                for (j, &rn) in row_sq_norms.iter().enumerate() {
+                    let dp = dot(q, rows.as_ptr().add(j * d), d);
+                    *op.add(qi * out_stride + j) = super::panel_combine(q_sq_norms[qi], rn, dp);
                 }
-                let p0 = vaddq_f64(a0_01, a0_23);
-                let p1 = vaddq_f64(a1_01, a1_23);
-                let p2 = vaddq_f64(a2_01, a2_23);
-                let p3 = vaddq_f64(a3_01, a3_23);
-                let d0 = (vgetq_lane_f64::<0>(p0) + vgetq_lane_f64::<1>(p0)) + t0;
-                let d1 = (vgetq_lane_f64::<0>(p1) + vgetq_lane_f64::<1>(p1)) + t1;
-                let d2 = (vgetq_lane_f64::<0>(p2) + vgetq_lane_f64::<1>(p2)) + t2;
-                let d3 = (vgetq_lane_f64::<0>(p3) + vgetq_lane_f64::<1>(p3)) + t3;
-                *op.add(qi * out_stride + j) = super::panel_combine(q_sq_norms[qi], rn, d0);
-                *op.add((qi + 1) * out_stride + j) =
-                    super::panel_combine(q_sq_norms[qi + 1], rn, d1);
-                *op.add((qi + 2) * out_stride + j) =
-                    super::panel_combine(q_sq_norms[qi + 2], rn, d2);
-                *op.add((qi + 3) * out_stride + j) =
-                    super::panel_combine(q_sq_norms[qi + 3], rn, d3);
+                qi += 1;
             }
-            qi += 4;
-        }
-        while qi < nq {
-            let q = qp.add(qi * d);
-            for (j, &rn) in row_sq_norms.iter().enumerate() {
-                let dp = dot(q, rows.as_ptr().add(j * d), d);
-                *op.add(qi * out_stride + j) = super::panel_combine(q_sq_norms[qi], rn, dp);
-            }
-            qi += 1;
         }
     }
 
@@ -907,35 +1117,59 @@ mod neon {
     /// `[l0+l4, l1+l5, l2+l6, l3+l7]` and the 4-lane tree finishes
     /// `(((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))) + tail` — bitwise the
     /// `dot_f32_portable` chain.
+    ///
+    /// # Safety
+    ///
+    /// NEON available, and `q`/`r` must each point to at least `d`
+    /// readable f32s.
     #[inline]
     #[target_feature(enable = "neon")]
     unsafe fn dot_f32(q: *const f32, r: *const f32, d: usize) -> f32 {
-        let chunks = d / 8;
-        let mut acc_a = vdupq_n_f32(0.0);
-        let mut acc_b = vdupq_n_f32(0.0);
-        for c in 0..chunks {
-            let base = c * 8;
-            acc_a = vfmaq_f32(acc_a, vld1q_f32(q.add(base)), vld1q_f32(r.add(base)));
-            acc_b = vfmaq_f32(acc_b, vld1q_f32(q.add(base + 4)), vld1q_f32(r.add(base + 4)));
+        // SAFETY: NEON available per the caller contract; loads and
+        // derefs stay below index d on both pointers, which the caller
+        // guarantees are d-element rows.
+        unsafe {
+            let chunks = d / 8;
+            let mut acc_a = vdupq_n_f32(0.0);
+            let mut acc_b = vdupq_n_f32(0.0);
+            for c in 0..chunks {
+                let base = c * 8;
+                acc_a = vfmaq_f32(acc_a, vld1q_f32(q.add(base)), vld1q_f32(r.add(base)));
+                acc_b = vfmaq_f32(acc_b, vld1q_f32(q.add(base + 4)), vld1q_f32(r.add(base + 4)));
+            }
+            let pair = vaddq_f32(acc_a, acc_b); // [A0, A1, A2, A3]
+            let p2 = vadd_f32(vget_low_f32(pair), vget_high_f32(pair)); // [A0+A2, A1+A3]
+            // CANON-REDUCE-8: (((l0+l4)+(l2+l6))+((l1+l5)+(l3+l7)))+tail
+            let head = vget_lane_f32::<0>(p2) + vget_lane_f32::<1>(p2);
+            let mut tail = 0.0f32;
+            for i in chunks * 8..d {
+                tail = (*q.add(i)).mul_add(*r.add(i), tail);
+            }
+            head + tail
         }
-        let pair = vaddq_f32(acc_a, acc_b); // [A0, A1, A2, A3]
-        let p2 = vadd_f32(vget_low_f32(pair), vget_high_f32(pair)); // [A0+A2, A1+A3]
-        let head = vget_lane_f32::<0>(p2) + vget_lane_f32::<1>(p2);
-        let mut tail = 0.0f32;
-        for i in chunks * 8..d {
-            tail = (*q.add(i)).mul_add(*r.add(i), tail);
-        }
-        head + tail
     }
 
     /// Canonical 8-lane reduction for an a/b f32x4 accumulator pair:
     /// `(((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))) + tail`.
+    ///
+    /// # Safety
+    ///
+    /// Caller must ensure NEON is available; the body is pure value
+    /// shuffling (no memory access).
     #[inline]
     #[target_feature(enable = "neon")]
+    #[allow(unused_unsafe)] // value-only intrinsics are safe on newer rustc
     unsafe fn fold8(a: float32x4_t, b: float32x4_t, t: f32) -> f32 {
-        let pair = vaddq_f32(a, b); // [A0, A1, A2, A3]
-        let p2 = vadd_f32(vget_low_f32(pair), vget_high_f32(pair)); // [A0+A2, A1+A3]
-        (vget_lane_f32::<0>(p2) + vget_lane_f32::<1>(p2)) + t
+        // SAFETY: value-only intrinsics under the required target
+        // feature (safe to call on rustc ≥ 1.86, unsafe before; the
+        // explicit block keeps both versions warning-free under
+        // deny(unsafe_op_in_unsafe_fn)).
+        unsafe {
+            let pair = vaddq_f32(a, b); // [A0, A1, A2, A3]
+            let p2 = vadd_f32(vget_low_f32(pair), vget_high_f32(pair)); // [A0+A2, A1+A3]
+            // CANON-REDUCE-8: (((l0+l4)+(l2+l6))+((l1+l5)+(l3+l7)))+tail
+            (vget_lane_f32::<0>(p2) + vget_lane_f32::<1>(p2)) + t
+        }
     }
 
     /// f32 panel scan on NEON (see `PanelF32Fn` / `panel_rows_f32`):
@@ -945,7 +1179,12 @@ mod neon {
     /// [`dot_f32`] (and `dot_f32_portable`) bitwise, so grouping is
     /// unobservable.
     ///
-    /// SAFETY: NEON available, plus the `panel_rows_f32` shape contract.
+    /// # Safety
+    ///
+    /// NEON available, plus the `panel_rows_f32` shape contract
+    /// (identical to `panel_rows`, in f32 units) — re-checked here by
+    /// `debug_assert!`.
+    // CANON-VIA: reduction chain delegated to `fold8` / `dot_f32`.
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn panel_rows_f32(
         queries: &[f32],
@@ -956,65 +1195,82 @@ mod neon {
         out: &mut [f64],
         out_stride: usize,
     ) {
-        let nq = q_sq_norms.len();
-        let chunks = d / 8;
-        let qp = queries.as_ptr();
-        let op = out.as_mut_ptr();
-        let mut qi = 0usize;
-        while qi + 4 <= nq {
-            let q0 = qp.add(qi * d);
-            let q1 = qp.add((qi + 1) * d);
-            let q2 = qp.add((qi + 2) * d);
-            let q3 = qp.add((qi + 3) * d);
-            for (j, &rn) in row_sq_norms.iter().enumerate() {
-                let r = rows.as_ptr().add(j * d);
-                let mut a0_a = vdupq_n_f32(0.0);
-                let mut a0_b = vdupq_n_f32(0.0);
-                let mut a1_a = vdupq_n_f32(0.0);
-                let mut a1_b = vdupq_n_f32(0.0);
-                let mut a2_a = vdupq_n_f32(0.0);
-                let mut a2_b = vdupq_n_f32(0.0);
-                let mut a3_a = vdupq_n_f32(0.0);
-                let mut a3_b = vdupq_n_f32(0.0);
-                for c in 0..chunks {
-                    let base = c * 8;
-                    let r_a = vld1q_f32(r.add(base));
-                    let r_b = vld1q_f32(r.add(base + 4));
-                    a0_a = vfmaq_f32(a0_a, vld1q_f32(q0.add(base)), r_a);
-                    a0_b = vfmaq_f32(a0_b, vld1q_f32(q0.add(base + 4)), r_b);
-                    a1_a = vfmaq_f32(a1_a, vld1q_f32(q1.add(base)), r_a);
-                    a1_b = vfmaq_f32(a1_b, vld1q_f32(q1.add(base + 4)), r_b);
-                    a2_a = vfmaq_f32(a2_a, vld1q_f32(q2.add(base)), r_a);
-                    a2_b = vfmaq_f32(a2_b, vld1q_f32(q2.add(base + 4)), r_b);
-                    a3_a = vfmaq_f32(a3_a, vld1q_f32(q3.add(base)), r_a);
-                    a3_b = vfmaq_f32(a3_b, vld1q_f32(q3.add(base + 4)), r_b);
+        debug_assert_eq!(queries.len(), q_sq_norms.len() * d, "queries shape");
+        debug_assert_eq!(rows.len(), row_sq_norms.len() * d, "rows shape");
+        debug_assert!(
+            q_sq_norms.is_empty()
+                || row_sq_norms.is_empty()
+                || (out_stride >= row_sq_norms.len()
+                    && out.len() >= (q_sq_norms.len() - 1) * out_stride + row_sq_norms.len()),
+            "out/out_stride too small for the panel rectangle"
+        );
+        // SAFETY: NEON is available per the caller contract. All
+        // pointer arithmetic stays inside the asserted shapes — same
+        // argument as `panel_rows`, with 8-wide f32 loads (two f32x4
+        // loads at base ≤ d−8 and base+4 ≤ d−4 per chunk), and out
+        // writes at q·out_stride + j < out.len().
+        unsafe {
+            let nq = q_sq_norms.len();
+            let chunks = d / 8;
+            let qp = queries.as_ptr();
+            let op = out.as_mut_ptr();
+            let mut qi = 0usize;
+            while qi + 4 <= nq {
+                let q0 = qp.add(qi * d);
+                let q1 = qp.add((qi + 1) * d);
+                let q2 = qp.add((qi + 2) * d);
+                let q3 = qp.add((qi + 3) * d);
+                for (j, &rn) in row_sq_norms.iter().enumerate() {
+                    let r = rows.as_ptr().add(j * d);
+                    let mut a0_a = vdupq_n_f32(0.0);
+                    let mut a0_b = vdupq_n_f32(0.0);
+                    let mut a1_a = vdupq_n_f32(0.0);
+                    let mut a1_b = vdupq_n_f32(0.0);
+                    let mut a2_a = vdupq_n_f32(0.0);
+                    let mut a2_b = vdupq_n_f32(0.0);
+                    let mut a3_a = vdupq_n_f32(0.0);
+                    let mut a3_b = vdupq_n_f32(0.0);
+                    for c in 0..chunks {
+                        let base = c * 8;
+                        let r_a = vld1q_f32(r.add(base));
+                        let r_b = vld1q_f32(r.add(base + 4));
+                        a0_a = vfmaq_f32(a0_a, vld1q_f32(q0.add(base)), r_a);
+                        a0_b = vfmaq_f32(a0_b, vld1q_f32(q0.add(base + 4)), r_b);
+                        a1_a = vfmaq_f32(a1_a, vld1q_f32(q1.add(base)), r_a);
+                        a1_b = vfmaq_f32(a1_b, vld1q_f32(q1.add(base + 4)), r_b);
+                        a2_a = vfmaq_f32(a2_a, vld1q_f32(q2.add(base)), r_a);
+                        a2_b = vfmaq_f32(a2_b, vld1q_f32(q2.add(base + 4)), r_b);
+                        a3_a = vfmaq_f32(a3_a, vld1q_f32(q3.add(base)), r_a);
+                        a3_b = vfmaq_f32(a3_b, vld1q_f32(q3.add(base + 4)), r_b);
+                    }
+                    let (mut t0, mut t1, mut t2, mut t3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                    for i in chunks * 8..d {
+                        let rv = *r.add(i);
+                        t0 = (*q0.add(i)).mul_add(rv, t0);
+                        t1 = (*q1.add(i)).mul_add(rv, t1);
+                        t2 = (*q2.add(i)).mul_add(rv, t2);
+                        t3 = (*q3.add(i)).mul_add(rv, t3);
+                    }
+                    *op.add(qi * out_stride + j) =
+                        super::panel_combine_f32(q_sq_norms[qi], rn, fold8(a0_a, a0_b, t0));
+                    *op.add((qi + 1) * out_stride + j) =
+                        super::panel_combine_f32(q_sq_norms[qi + 1], rn, fold8(a1_a, a1_b, t1));
+                    *op.add((qi + 2) * out_stride + j) =
+                        super::panel_combine_f32(q_sq_norms[qi + 2], rn, fold8(a2_a, a2_b, t2));
+                    *op.add((qi + 3) * out_stride + j) =
+                        super::panel_combine_f32(q_sq_norms[qi + 3], rn, fold8(a3_a, a3_b, t3));
                 }
-                let (mut t0, mut t1, mut t2, mut t3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-                for i in chunks * 8..d {
-                    let rv = *r.add(i);
-                    t0 = (*q0.add(i)).mul_add(rv, t0);
-                    t1 = (*q1.add(i)).mul_add(rv, t1);
-                    t2 = (*q2.add(i)).mul_add(rv, t2);
-                    t3 = (*q3.add(i)).mul_add(rv, t3);
+                qi += 4;
+            }
+            while qi < nq {
+                let q = qp.add(qi * d);
+                for (j, &rn) in row_sq_norms.iter().enumerate() {
+                    let dp = dot_f32(q, rows.as_ptr().add(j * d), d);
+                    *op.add(qi * out_stride + j) =
+                        super::panel_combine_f32(q_sq_norms[qi], rn, dp);
                 }
-                *op.add(qi * out_stride + j) =
-                    super::panel_combine_f32(q_sq_norms[qi], rn, fold8(a0_a, a0_b, t0));
-                *op.add((qi + 1) * out_stride + j) =
-                    super::panel_combine_f32(q_sq_norms[qi + 1], rn, fold8(a1_a, a1_b, t1));
-                *op.add((qi + 2) * out_stride + j) =
-                    super::panel_combine_f32(q_sq_norms[qi + 2], rn, fold8(a2_a, a2_b, t2));
-                *op.add((qi + 3) * out_stride + j) =
-                    super::panel_combine_f32(q_sq_norms[qi + 3], rn, fold8(a3_a, a3_b, t3));
+                qi += 1;
             }
-            qi += 4;
-        }
-        while qi < nq {
-            let q = qp.add(qi * d);
-            for (j, &rn) in row_sq_norms.iter().enumerate() {
-                let dp = dot_f32(q, rows.as_ptr().add(j * d), d);
-                *op.add(qi * out_stride + j) = super::panel_combine_f32(q_sq_norms[qi], rn, dp);
-            }
-            qi += 1;
         }
     }
 }
@@ -1032,8 +1288,15 @@ mod tests {
     #[test]
     fn dispatched_matches_portable_bitwise() {
         // Lengths cover empty, pure-tail, exact-chunk and chunk+tail
-        // shapes, plus the dimensionalities the benches exercise.
-        for d in [0usize, 1, 2, 3, 4, 5, 7, 8, 10, 16, 100, 101, 784] {
+        // shapes, plus the dimensionalities the benches exercise. Under
+        // Miri the big dims are dropped — they multiply interpretation
+        // time without reaching any code path the small dims miss.
+        let dims: &[usize] = if cfg!(miri) {
+            &[0, 1, 3, 4, 5, 8, 10]
+        } else {
+            &[0, 1, 2, 3, 4, 5, 7, 8, 10, 16, 100, 101, 784]
+        };
+        for &d in dims {
             let (a, b) = vecs(d);
             let x = squared_euclidean(&a, &b);
             let y = squared_euclidean_portable(&a, &b);
@@ -1120,8 +1383,11 @@ mod tests {
         // every query-grouping (the remainder loop handles nq mod 4)
         // agree bitwise — so thread splits and panel widths are
         // unobservable in fast-path output.
-        for d in [1usize, 2, 3, 4, 5, 7, 10, 100, 101] {
-            for nq in [1usize, 2, 3, 4, 5, 6, 9] {
+        let dims: &[usize] =
+            if cfg!(miri) { &[1, 3, 4, 5] } else { &[1, 2, 3, 4, 5, 7, 10, 100, 101] };
+        let nqs: &[usize] = if cfg!(miri) { &[1, 4, 5] } else { &[1, 2, 3, 4, 5, 6, 9] };
+        for &d in dims {
+            for &nq in nqs {
                 let (q, qn, r, rn) = panel_fixture(nq, 11, d, 1.0, d as u64 + nq as u64);
                 let mut got = vec![-1.0; nq * 11];
                 panel_rows(&q, &qn, &r, &rn, d, &mut got, 11);
@@ -1158,8 +1424,10 @@ mod tests {
         // inside panel_error_bound at every scale, including the 1e12
         // adversarial coordinate scale and near-duplicate rows where the
         // norm trick cancels catastrophically.
-        for &scale in &[1.0, 1e-6, 1e6, 1e12] {
-            for d in [1usize, 2, 3, 5, 10, 100] {
+        let scales: &[f64] = if cfg!(miri) { &[1.0, 1e12] } else { &[1.0, 1e-6, 1e6, 1e12] };
+        let dims: &[usize] = if cfg!(miri) { &[1, 3, 5] } else { &[1, 2, 3, 5, 10, 100] };
+        for &scale in scales {
+            for &d in dims {
                 let (q, qn, r, rn) = panel_fixture(5, 23, d, scale, d as u64);
                 let mut fast = vec![0.0; 5 * 23];
                 panel_rows(&q, &qn, &r, &rn, d, &mut fast, 23);
@@ -1222,8 +1490,11 @@ mod tests {
         // Same determinism pin as the f64 panel: dispatched == portable
         // bitwise, and query-set splits (remainder loop covers nq mod 4,
         // chunk loop covers d mod 8) reproduce the joint run.
-        for d in [1usize, 2, 3, 7, 8, 9, 10, 16, 100, 101] {
-            for nq in [1usize, 2, 3, 4, 5, 6, 9] {
+        let dims: &[usize] =
+            if cfg!(miri) { &[1, 7, 8, 9] } else { &[1, 2, 3, 7, 8, 9, 10, 16, 100, 101] };
+        let nqs: &[usize] = if cfg!(miri) { &[1, 4, 5] } else { &[1, 2, 3, 4, 5, 6, 9] };
+        for &d in dims {
+            for &nq in nqs {
                 let (q, _, r, _) = panel_fixture(nq, 11, d, 1.0, d as u64 + nq as u64);
                 let (qf, qn) = to_f32(&q, d);
                 let (rf, rn) = to_f32(&r, d);
@@ -1261,8 +1532,10 @@ mod tests {
         // sqrt — stays inside panel_error_bound_f32 (fed the *f64*
         // norms) at every scale, including the 1e12 adversarial scale
         // where f32 has ~1e5 absolute coordinate rounding.
-        for &scale in &[1.0, 1e-6, 1e6, 1e12] {
-            for d in [1usize, 2, 3, 5, 8, 10, 100] {
+        let scales: &[f64] = if cfg!(miri) { &[1.0, 1e12] } else { &[1.0, 1e-6, 1e6, 1e12] };
+        let dims: &[usize] = if cfg!(miri) { &[1, 3, 8] } else { &[1, 2, 3, 5, 8, 10, 100] };
+        for &scale in scales {
+            for &d in dims {
                 let (q, qn64, r, rn64) = panel_fixture(5, 23, d, scale, d as u64);
                 let (qf, qn) = to_f32(&q, d);
                 let (rf, rn) = to_f32(&r, d);
@@ -1371,5 +1644,78 @@ mod tests {
                 }
             }
         }
+    }
+
+    // ---- negative tests: the precondition guards must actually fire ----
+    //
+    // The dispatched entry points carry always-on `assert!`s; the
+    // portable implementations (reachable via `panel_rows_portable` /
+    // `panel_rows_f32_portable`, which skip the wrapper asserts) carry
+    // `debug_assert!`s — the invariants the Miri and sanitizer CI legs
+    // rely on tripping *before* any out-of-contract memory access.
+
+    #[test]
+    #[should_panic(expected = "rows must be out.len()")]
+    fn euclidean_rows_shape_mismatch_panics() {
+        let mut out = vec![0.0; 3];
+        euclidean_rows(&[1.0, 2.0], &[0.0; 5], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "out_stride")]
+    fn panel_out_stride_too_narrow_panics() {
+        let (q, qn, r, rn) = panel_fixture(2, 4, 3, 1.0, 1);
+        let mut out = vec![0.0; 2 * 4];
+        panel_rows(&q, &qn, &r, &rn, 3, &mut out, 3); // stride 3 < 4 rows
+    }
+
+    #[test]
+    #[should_panic(expected = "out too short")]
+    fn panel_out_too_short_panics() {
+        let (q, qn, r, rn) = panel_fixture(2, 4, 3, 1.0, 1);
+        let mut out = vec![0.0; 7]; // needs (2-1)*4 + 4 = 8
+        panel_rows(&q, &qn, &r, &rn, 3, &mut out, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "out_stride")]
+    fn panel_f32_out_stride_too_narrow_panics() {
+        let (q, _, r, _) = panel_fixture(2, 4, 3, 1.0, 1);
+        let (qf, qn) = to_f32(&q, 3);
+        let (rf, rn) = to_f32(&r, 3);
+        let mut out = vec![0.0; 2 * 4];
+        panel_rows_f32(&qf, &qn, &rf, &rn, 3, &mut out, 3);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "queries shape")]
+    fn portable_panel_debug_asserts_query_shape() {
+        let (q, qn, r, rn) = panel_fixture(2, 4, 3, 1.0, 1);
+        let mut out = vec![0.0; 2 * 4];
+        // One norm too many for the query block: the wrapperless
+        // portable entry must refuse in debug builds.
+        let qn_bad: Vec<f64> = qn.iter().chain([&1.0]).copied().collect();
+        panel_rows_portable(&q, &qn_bad, &r, &rn, 3, &mut out, 4);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "out/out_stride too small")]
+    fn portable_panel_debug_asserts_out_stride() {
+        let (q, qn, r, rn) = panel_fixture(2, 4, 3, 1.0, 1);
+        let mut out = vec![0.0; 2 * 4];
+        panel_rows_portable(&q, &qn, &r, &rn, 3, &mut out, 3); // stride 3 < 4 rows
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "rows shape")]
+    fn portable_panel_f32_debug_asserts_rows_shape() {
+        let (q, _, r, _) = panel_fixture(2, 4, 3, 1.0, 1);
+        let (qf, qn) = to_f32(&q, 3);
+        let (rf, rn) = to_f32(&r, 3);
+        let mut out = vec![0.0; 2 * 4];
+        panel_rows_f32_portable(&qf, &qn, &rf[..rf.len() - 1], &rn, 3, &mut out, 4);
     }
 }

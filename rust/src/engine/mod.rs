@@ -296,6 +296,8 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
             break; // order exhausted with nothing left to compute
         }
         let k = batch.len();
+        debug_assert!(k <= b_max, "batch exceeds the schedule cap");
+        debug_assert_eq!(ids.len(), k, "ids/batch alignment");
         if d_out.len() < k * n {
             d_out.resize(k * n, 0.0);
         }

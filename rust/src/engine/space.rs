@@ -162,6 +162,8 @@ impl<M: MetricSpace> EliminationSpace for SubsetSpace<'_, M> {
         // reports the rectangle. Guard-band refinement in the engine
         // keeps Alg. 8's medoid updates bit-identical to the
         // sequential trajectory.
+        debug_assert_eq!(guard.len(), ids.len(), "guard shape");
+        debug_assert_eq!(guard_sum.len(), ids.len(), "guard_sum shape");
         let global: Vec<usize> = ids.iter().map(|&pos| self.members[pos]).collect();
         self.metric
             .many_to_many_fast(&global, self.members, out, guard, guard_sum, scratch, precision)
@@ -184,6 +186,41 @@ mod tests {
         let mut out = vec![0.0; 3];
         s.compute_batch(&[1], &mut out); // member position 1 = element 2
         assert_eq!(out, vec![1.0, 0.0, 2.0]);
+    }
+
+    // Negative tests for the fast-path guard preconditions: misshaped
+    // guard buffers must panic in debug/test builds rather than let the
+    // refinement accounting read stale slots.
+    #[test]
+    #[should_panic(expected = "guard shape")]
+    fn compute_batch_fast_rejects_misshaped_guard() {
+        let pts = Points::new(1, vec![0.0, 10.0, 1.0, 3.0]);
+        let m = VectorMetric::new(pts);
+        let members = [0usize, 2, 3];
+        let s = SubsetSpace::new(&m, &members);
+        let mut out = vec![0.0; 3];
+        let mut guard = vec![0.0; 2]; // one id needs exactly one slot
+        let mut guard_sum = vec![0.0; 1];
+        let mut scratch = FastScratch::default();
+        let ids = [1usize];
+        let p = Precision::F64;
+        s.compute_batch_fast(&ids, &mut out, &mut guard, &mut guard_sum, &mut scratch, p);
+    }
+
+    #[test]
+    #[should_panic(expected = "guard_sum shape")]
+    fn compute_batch_fast_rejects_misshaped_guard_sum() {
+        let pts = Points::new(1, vec![0.0, 10.0, 1.0, 3.0]);
+        let m = VectorMetric::new(pts);
+        let members = [0usize, 2, 3];
+        let s = SubsetSpace::new(&m, &members);
+        let mut out = vec![0.0; 3];
+        let mut guard = vec![0.0; 1];
+        let mut guard_sum = Vec::new(); // one id needs exactly one slot
+        let mut scratch = FastScratch::default();
+        let ids = [1usize];
+        let p = Precision::F64;
+        s.compute_batch_fast(&ids, &mut out, &mut guard, &mut guard_sum, &mut scratch, p);
     }
 
     #[test]

@@ -186,7 +186,8 @@ impl CsrGraph {
     /// finite. Returns the subgraph and the original node index of each
     /// retained node.
     pub fn largest_component(&self, strongly: bool) -> (CsrGraph, Vec<usize>) {
-        let (comp, ncomp) = if strongly { self.strong_components() } else { self.weak_components() };
+        let (comp, ncomp) =
+            if strongly { self.strong_components() } else { self.weak_components() };
         let mut sizes = vec![0usize; ncomp];
         for &c in &comp {
             sizes[c] += 1;
@@ -387,7 +388,8 @@ mod tests {
     #[test]
     fn strong_components_cycle_vs_chain() {
         // 0 -> 1 -> 2 -> 0 is one SCC; 3 alone (0 -> 3).
-        let g = CsrGraph::from_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 0, 1.0), (0, 3, 1.0)], false);
+        let g =
+            CsrGraph::from_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 0, 1.0), (0, 3, 1.0)], false);
         let (comp, ncomp) = g.strong_components();
         assert_eq!(ncomp, 2);
         assert_eq!(comp[0], comp[1]);

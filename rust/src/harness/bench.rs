@@ -21,7 +21,13 @@ pub struct BenchStats {
 impl BenchStats {
     /// Human-readable `median ± mad`.
     pub fn summary(&self) -> String {
-        format!("{} ± {} (min {}, n={})", fmt_ns(self.median_ns), fmt_ns(self.mad_ns), fmt_ns(self.min_ns), self.iters)
+        format!(
+            "{} ± {} (min {}, n={})",
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mad_ns),
+            fmt_ns(self.min_ns),
+            self.iters
+        )
     }
 }
 

@@ -86,16 +86,26 @@ pub fn table1_datasets(scale: Scale, seed: u64) -> Vec<NamedDataset> {
         kind,
         metric: AnyMetric::Vector(VectorMetric::new(pts)),
     };
-    let ugraph = |name, g| NamedDataset { name, kind: "u-graph", metric: AnyMetric::Graph(GraphMetric::new(g)) };
-    let dgraph = |name, g| NamedDataset { name, kind: "d-graph", metric: AnyMetric::Graph(GraphMetric::new_directed(g)) };
+    let ugraph = |name, g| NamedDataset {
+        name,
+        kind: "u-graph",
+        metric: AnyMetric::Graph(GraphMetric::new(g)),
+    };
+    let dgraph = |name, g| NamedDataset {
+        name,
+        kind: "d-graph",
+        metric: AnyMetric::Graph(GraphMetric::new_directed(g)),
+    };
 
     // Paper N values in comments; scaled to (small, medium, full) tiers.
     // Graph datasets get a smaller Medium tier than vector ones: the
     // TOPRANK baselines sit left of their crossover at these N and
     // compute ~N Dijkstras per rep, which dominates the whole suite.
-    out.push(vec("Birch1-like", "2-d", syn::birch_grid(scale.n(100_000, 3_000, 20_000), seed))); // 1.0e5
-    out.push(vec("Birch2-like", "2-d", syn::birch_line(scale.n(100_000, 3_000, 20_000), seed + 1))); // 1.0e5
-    out.push(vec("Europe-like", "2-d", syn::border_map(scale.n(160_000, 3_000, 20_000), 8, seed + 2))); // 1.6e5
+    // 1.0e5, 1.0e5, 1.6e5:
+    out.push(vec("Birch1-like", "2-d", syn::birch_grid(scale.n(100_000, 3_000, 20_000), seed)));
+    out.push(vec("Birch2-like", "2-d", syn::birch_line(scale.n(100_000, 3_000, 20_000), seed + 1)));
+    let europe = syn::border_map(scale.n(160_000, 3_000, 20_000), 8, seed + 2);
+    out.push(vec("Europe-like", "2-d", europe));
     out.push(ugraph(
         "U-SensorNet-like",
         gen::sensor_net(scale.n(360_000, 3_000, 7_000), 1.5, false, seed + 3).graph,
@@ -139,11 +149,16 @@ pub fn table1_datasets(scale: Scale, seed: u64) -> Vec<NamedDataset> {
 pub fn table2_datasets(scale: Scale, seed: u64) -> Vec<(&'static str, Points)> {
     vec![
         ("Europe-like", syn::border_map(scale.n(160_000, 2_000, 12_000), 8, seed)), // 1.6e5, d=2
-        ("Conflong-like", syn::trajectory3d(scale.n(160_000, 2_000, 12_000), seed + 1)), // 1.6e5, d=3
-        ("Colormo-like", syn::gauss_mix(scale.n(68_000, 1_500, 8_000), 9, 16, 0.08, seed + 2)), // 6.8e4, d=9
+        // 1.6e5 at d=3, then 6.8e4 at d=9:
+        ("Conflong-like", syn::trajectory3d(scale.n(160_000, 2_000, 12_000), seed + 1)),
+        ("Colormo-like", syn::gauss_mix(scale.n(68_000, 1_500, 8_000), 9, 16, 0.08, seed + 2)),
         (
             "MNIST50-like",
-            syn::random_projection(&syn::mnist_like(scale.n(60_000, 800, 4_000), seed + 3), 50, seed + 4),
+            syn::random_projection(
+                &syn::mnist_like(scale.n(60_000, 800, 4_000), seed + 3),
+                50,
+                seed + 4,
+            ),
         ), // 6.0e4, d=50
     ]
 }

@@ -67,7 +67,8 @@ pub fn fig3(scale: Scale, seed: u64) -> Table {
         "Figure 3: computed elements vs N (trimed vs TOPRANK)",
         &["panel", "d", "N", "trimed n̂", "toprank n̂", "sqrt(N)", "N^2/3·log^1/3"],
     );
-    let panel = |t: &mut Table, panel_name: &str, d: usize, pts_for: &dyn Fn(usize, u64) -> crate::data::Points| {
+    type PtsFor = dyn Fn(usize, u64) -> crate::data::Points;
+    let panel = |t: &mut Table, panel_name: &str, d: usize, pts_for: &PtsFor| {
         for &n in &ns {
             let mut tm = 0.0;
             let mut tr = 0.0;
@@ -78,7 +79,8 @@ pub fn fig3(scale: Scale, seed: u64) -> Table {
                 let _ = trimed_with_opts(&cm, &paper_trimed(seed + rep as u64));
                 tm += cm.counts().one_to_all as f64;
                 let ct = Counted::new(&m);
-                let _ = toprank(&ct, &TopRankOpts { seed: seed + rep as u64, ..Default::default() });
+                let opts = TopRankOpts { seed: seed + rep as u64, ..Default::default() };
+                let _ = toprank(&ct, &opts);
                 tr += ct.counts().one_to_all as f64;
             }
             let nf = n as f64;
@@ -494,7 +496,10 @@ pub fn ablation_order(scale: Scale, seed: u64) -> Table {
         cm.counts().one_to_all
     };
     t.push_row(vec!["shuffled (default)".into(), run(None).to_string()]);
-    t.push_row(vec!["ascending energy (best case)".into(), run(Some(by_energy.clone())).to_string()]);
+    t.push_row(vec![
+        "ascending energy (best case)".into(),
+        run(Some(by_energy.clone())).to_string(),
+    ]);
     by_energy.reverse();
     t.push_row(vec!["descending energy (pathological)".into(), run(Some(by_energy)).to_string()]);
     t

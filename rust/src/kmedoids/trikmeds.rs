@@ -487,7 +487,8 @@ mod tests {
                     ..TrikmedsOpts::new(5)
                 },
             );
-            assert!((r.loss - r_ref.loss).abs() < 1e-9, "seed {seed}: {} vs {}", r.loss, r_ref.loss);
+            let dl = (r.loss - r_ref.loss).abs();
+            assert!(dl < 1e-9, "seed {seed}: {} vs {}", r.loss, r_ref.loss);
             let mut ma = r.medoids.clone();
             let mut mb = r_ref.medoids.clone();
             ma.sort_unstable();

@@ -17,6 +17,15 @@
 //! available as AOT-compiled JAX+Pallas HLO artifacts executed through
 //! the XLA PJRT runtime ([`runtime`], `--features xla`).
 //!
+//! Soundness: the crate's entire unsafe surface lives in
+//! [`data::simd`]; every unsafe operation inside an `unsafe fn` must be
+//! discharged explicitly (denied below), and the repo-specific
+//! invariants — audited `# Safety`/`// SAFETY:` contracts, dispatch-only
+//! reachability of the target-feature kernels, canonical
+//! reduction-chain markers, cast and hand-rolled-distance hygiene — are
+//! enforced by `cargo run -p xtask -- lint` (see DESIGN.md §Soundness
+//! and static analysis).
+//!
 //! ## Quickstart
 //!
 //! ```
@@ -31,6 +40,8 @@
 //! // trimed computed far fewer elements than the O(N^2) scan:
 //! assert!(result.computed < 200);
 //! ```
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod algo;
 pub mod cli;

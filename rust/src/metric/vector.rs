@@ -120,6 +120,7 @@ impl VectorMetric {
     fn scan_multi(&self, ids: &[usize], out: &mut [f64]) {
         let n = self.points.len();
         let d = self.points.dim();
+        debug_assert_eq!(out.len(), ids.len() * n, "out shape");
         let flat = self.points.flat();
         let mut block_start = 0;
         while block_start < n {
@@ -145,6 +146,8 @@ impl VectorMetric {
     fn scan_multi_fast(&self, queries: &[f64], q_sq_norms: &[f64], out: &mut [f64]) {
         let n = self.points.len();
         let d = self.points.dim();
+        debug_assert_eq!(queries.len(), q_sq_norms.len() * d, "queries shape");
+        debug_assert_eq!(out.len(), q_sq_norms.len() * n, "out shape");
         let flat = self.points.flat();
         let norms = self.points.sq_norms();
         let mut block_start = 0;
@@ -171,6 +174,8 @@ impl VectorMetric {
     fn scan_multi_fast_f32(&self, queries: &[f32], q_sq_norms: &[f32], out: &mut [f64]) {
         let n = self.points.len();
         let d = self.points.dim();
+        debug_assert_eq!(queries.len(), q_sq_norms.len() * d, "queries shape");
+        debug_assert_eq!(out.len(), q_sq_norms.len() * n, "out shape");
         let flat = self.points.rows_f32();
         let norms = self.points.sq_norms_f32();
         let mut block_start = 0;
@@ -482,6 +487,38 @@ mod tests {
         assert_eq!(best, 2);
     }
 
+    // Negative tests for the scan-entry shape preconditions: the
+    // debug_assert guards must turn a misshaped buffer into a
+    // deterministic panic (debug/test builds) instead of a silent
+    // partial scan.
+    #[test]
+    #[should_panic(expected = "out shape")]
+    fn scan_multi_rejects_misshaped_out() {
+        let p = Points::new(2, vec![0.0, 0.0, 1.0, 0.0, 0.0, 2.0, 3.0, 4.0]);
+        let m = VectorMetric::new(p);
+        let mut out = vec![0.0; 7]; // 2 queries x 4 points needs 8
+        m.scan_multi(&[0, 1], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "queries shape")]
+    fn scan_multi_fast_rejects_misshaped_queries() {
+        let p = Points::new(2, vec![0.0, 0.0, 1.0, 0.0, 0.0, 2.0, 3.0, 4.0]);
+        let m = VectorMetric::new(p);
+        let mut out = vec![0.0; 8];
+        // 2 cached norms at d=2 need 4 gathered query values, not 3.
+        m.scan_multi_fast(&[0.0; 3], &[0.0; 2], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "out shape")]
+    fn scan_multi_fast_f32_rejects_misshaped_out() {
+        let p = Points::new(2, vec![0.0, 0.0, 1.0, 0.0, 0.0, 2.0, 3.0, 4.0]);
+        let m = VectorMetric::new(p);
+        let mut out = vec![0.0; 7]; // 2 queries x 4 points needs 8
+        m.scan_multi_fast_f32(&[0.0; 4], &[0.0; 2], &mut out);
+    }
+
     #[test]
     fn many_to_all_bitwise_matches_one_to_all() {
         // Across batch widths, block boundaries and thread counts the
@@ -654,11 +691,15 @@ mod tests {
         let mut out64 = vec![0.0; ids.len() * n];
         let mut g64 = vec![0.0; ids.len()];
         let mut gs64 = vec![0.0; ids.len()];
-        assert!(m.many_to_all_fast(&ids, &mut out64, &mut g64, &mut gs64, &mut scratch, Precision::F64));
+        let ok64 =
+            m.many_to_all_fast(&ids, &mut out64, &mut g64, &mut gs64, &mut scratch, Precision::F64);
+        assert!(ok64);
         let mut out32 = vec![0.0; ids.len() * n];
         let mut g32 = vec![0.0; ids.len()];
         let mut gs32 = vec![0.0; ids.len()];
-        assert!(m.many_to_all_fast(&ids, &mut out32, &mut g32, &mut gs32, &mut scratch, Precision::F32));
+        let ok32 =
+            m.many_to_all_fast(&ids, &mut out32, &mut g32, &mut gs32, &mut scratch, Precision::F32);
+        assert!(ok32);
         assert_eq!(out32, out64);
         assert_eq!(g32, g64);
         assert_eq!(gs32, gs64);

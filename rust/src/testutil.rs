@@ -16,7 +16,10 @@ pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(base_seed: u64, cases: us
             .wrapping_add(case as u64);
         let mut rng = Rng::new(derived);
         if let Err(msg) = prop(&mut rng) {
-            panic!("property failed (base_seed={base_seed}, case={case}, derived_seed={derived}): {msg}");
+            panic!(
+                "property failed (base_seed={base_seed}, case={case}, \
+                 derived_seed={derived}): {msg}"
+            );
         }
     }
 }

@@ -122,24 +122,29 @@ fn assert_bit_identical<M: MetricSpace>(metric: &M, seed: u64, eps: f64, what: &
     }
 }
 
+// Under Miri the suites run the same shapes at interpreter-sized N (the
+// bit-level contracts are size-independent); statistical claims that
+// only hold at large N are ignored there instead of weakened.
 #[test]
 fn guard_batch1_reproduces_sequential_on_vectors() {
+    let n = if cfg!(miri) { 60 } else { 500 };
     for seed in 0..4u64 {
         for d in [2usize, 3, 6] {
-            let pts = uniform_cube(500, d, seed * 101 + d as u64);
+            let pts = uniform_cube(n, d, seed * 101 + d as u64);
             let m = VectorMetric::new(pts);
             assert_bit_identical(&m, seed, 0.0, &format!("cube d={d} seed={seed}"));
         }
     }
     // Relaxed runs share the same loop, so the guard covers eps too.
-    let m = VectorMetric::new(uniform_cube(800, 2, 99));
+    let m = VectorMetric::new(uniform_cube(if cfg!(miri) { 90 } else { 800 }, 2, 99));
     assert_bit_identical(&m, 5, 0.1, "cube eps=0.1");
 }
 
 #[test]
 fn guard_batch1_reproduces_sequential_on_directed_graph() {
+    let n = if cfg!(miri) { 50 } else { 220 };
     for seed in 0..3u64 {
-        let g = preferential_attachment(220, 3, 0.6, seed + 7);
+        let g = preferential_attachment(n, 3, 0.6, seed + 7);
         let gm = GraphMetric::new_directed(g);
         assert_bit_identical(&gm, seed, 0.0, &format!("digraph seed={seed}"));
     }
@@ -149,7 +154,7 @@ fn guard_batch1_reproduces_sequential_on_directed_graph() {
 fn guard_batch1_identical_under_threads() {
     // The threads hint must not change any result bits with batch = 1
     // (each batch row is an independent scan).
-    let pts = uniform_cube(600, 3, 17);
+    let pts = uniform_cube(if cfg!(miri) { 80 } else { 600 }, 3, 17);
     let m = VectorMetric::new(pts);
     let (ref_medoid, ref_energy, ref_computed, ref_lb) = reference_trimed(&m, 3, 0.0, 0.0);
     for threads in [1usize, 4] {
@@ -177,8 +182,9 @@ fn true_sums<M: MetricSpace>(m: &M) -> Vec<f64> {
 
 #[test]
 fn prop_batched_trimed_exact_and_sound_on_vectors() {
+    let n0 = if cfg!(miri) { 70 } else { 700 };
     for seed in 0..3u64 {
-        let pts = uniform_cube(700, 3, seed * 13 + 1);
+        let pts = uniform_cube(n0, 3, seed * 13 + 1);
         let m = VectorMetric::new(pts);
         let s = scan_medoid(&m);
         let sums = true_sums(&m);
@@ -215,7 +221,7 @@ fn prop_batched_trimed_exact_and_sound_on_vectors() {
 
 #[test]
 fn prop_batched_trimed_exact_and_sound_on_directed_graph() {
-    let g = preferential_attachment(260, 3, 0.6, 11);
+    let g = preferential_attachment(if cfg!(miri) { 50 } else { 260 }, 3, 0.6, 11);
     let gm = GraphMetric::new_directed(g);
     assert!(!gm.symmetric());
     let s = scan_medoid(&gm);
@@ -247,6 +253,7 @@ fn prop_batched_trimed_exact_and_sound_on_directed_graph() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore)] // statistical overhead-factor claim at N=4000
 fn batched_overhead_stays_moderate() {
     // The documented trade: B > 1 may compute extra elements (bounds are
     // one round stale) but must stay within a small factor plus the
@@ -281,7 +288,7 @@ fn batched_overhead_stays_moderate() {
 fn prop_adaptive_batch_exact_and_sound() {
     // The adaptive schedule is still exact elimination: same medoid
     // energy, sound bounds, across thread counts.
-    let pts = uniform_cube(700, 3, 40);
+    let pts = uniform_cube(if cfg!(miri) { 70 } else { 700 }, 3, 40);
     let m = VectorMetric::new(pts);
     let s = scan_medoid(&m);
     let sums = true_sums(&m);
@@ -316,7 +323,7 @@ fn computed_bounds_exact_at_adversarial_scale() {
     // the computed S(j). Computed elements' bounds must stay *bit-equal*
     // to their sums, and every bound must stay sound up to a relative
     // epsilon far below the old failure size.
-    let base = uniform_cube(400, 3, 31);
+    let base = uniform_cube(if cfg!(miri) { 60 } else { 400 }, 3, 31);
     let data: Vec<f64> = base.flat().iter().map(|v| 1e12 * (v + 1.0)).collect();
     let m = VectorMetric::new(Points::new(3, data));
     let n = m.len();
@@ -368,7 +375,7 @@ fn env_exec_config_paths_stay_exact() {
     // TRIMED_PRECISION=f32 legs check fast-vs-exact energy equality end
     // to end.
     let exec = ExecConfig::from_env();
-    let pts = uniform_cube(600, 3, 3);
+    let pts = uniform_cube(if cfg!(miri) { 80 } else { 600 }, 3, 3);
     let m = VectorMetric::new(pts);
     let seq = trimed_with_opts(
         &m,

@@ -69,7 +69,8 @@ fn all_algorithms_agree_on_sensor_net() {
     let tri = trimed_medoid(&gm, 1);
     let tr = toprank(&gm, &TopRankOpts::default());
     let tr2 = toprank2(&gm, &TopRankOpts::default());
-    for (name, medoid) in [("trimed", tri.medoid), ("toprank", tr.medoid), ("toprank2", tr2.medoid)] {
+    let runs = [("trimed", tri.medoid), ("toprank", tr.medoid), ("toprank2", tr2.medoid)];
+    for (name, medoid) in runs {
         assert!(
             (s.energies[medoid] - s.energy).abs() < 1e-9,
             "{name} returned non-medoid {medoid}"

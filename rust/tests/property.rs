@@ -41,7 +41,8 @@ fn prop_lower_bounds_sound_at_termination() {
         let pts = random_points(rng, 250, 5);
         let m = VectorMetric::new(pts);
         let n = m.len();
-        let r: TrimedResult = trimed_with_opts(&m, &TrimedOpts { seed: rng.next_u64(), ..Default::default() });
+        let opts = TrimedOpts { seed: rng.next_u64(), ..Default::default() };
+        let r: TrimedResult = trimed_with_opts(&m, &opts);
         let mut row = vec![0.0; n];
         for j in 0..n {
             m.one_to_all(j, &mut row);

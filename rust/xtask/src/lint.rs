@@ -1,0 +1,634 @@
+//! The repo-specific lint rules over the `trimed` crate sources.
+//!
+//! Rule inventory (each violation names its rule id):
+//!
+//! - **R1 unsafe-fn-safety-doc** — every `unsafe fn` definition carries
+//!   a doc comment containing a literal `# Safety` section.
+//! - **R2 unsafe-block-safety-comment** — every `unsafe` block (any
+//!   `unsafe` token not introducing an `unsafe fn`) has a `// SAFETY:`
+//!   comment on the same line or within the six lines above.
+//! - **R3 dispatch-only-arch-paths** — `avx2::` / `neon::` paths are
+//!   referenced only inside `fn selected()` in `data/simd.rs`: the
+//!   `#[target_feature]` kernels are reachable exclusively through the
+//!   OnceLock dispatch selector that proved the CPU features.
+//! - **R4 canonical-reduction-markers** — every arch implementation of
+//!   every kernel family in `data/simd.rs` carries its canonical
+//!   reduction-chain marker comment (`CANON-REDUCE-4`, `CANON-REDUCE-8`
+//!   or `CANON-VIA`), and no kernel-family fn exists outside the
+//!   registered table — the bit-for-bit fast==exact contract depends on
+//!   every implementation summing in the same tree order.
+//! - **R5 no-stray-f32-casts** — `as f32` appears only in the
+//!   whitelisted mirror/panel modules; anywhere else a silent precision
+//!   demotion would undermine the exact-refinement guarantees.
+//! - **R6 no-handrolled-distance** — no module outside `data/` hand
+//!   rolls a squared-Euclidean accumulation (zip- or index-driven
+//!   `(a - b) * (a - b)`, or a self-square `x.mul_add(x, ..)`); all
+//!   distance math must go through the dispatched kernels so counts and
+//!   reductions stay canonical.
+//! - **R7 soundness-config-present** — `#![deny(unsafe_op_in_unsafe_fn)]`
+//!   stays in `lib.rs` and the workspace lint table keeps the unsafe
+//!   hygiene denies; guards against a quiet revert of the hardening.
+//!
+//! All rules are lexical over the [`crate::scan`] channels; see that
+//! module for why this is deliberate (offline, dependency-free builds).
+
+use crate::scan::{scan, word_after, FileScan};
+use std::fmt;
+
+pub struct Violation {
+    pub path: String,
+    pub line: usize, // 1-based; 0 for file-level findings
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Files (src-relative, forward slashes) allowed to contain `as f32`:
+/// the f32 mirror builders and the panel/runtime layers that own the
+/// demotion and pair it with guard-band exact refinement.
+const F32_CAST_WHITELIST: &[&str] =
+    &["data/mod.rs", "data/simd.rs", "metric/xla_vector.rs", "runtime/exec.rs"];
+
+/// Files allowed to hand-roll squared-difference / self-square math:
+/// the kernel module itself and the data layer that defines the
+/// reference distance the kernels are checked against.
+const DISTANCE_WHITELIST: &[&str] = &["data/mod.rs", "data/simd.rs"];
+
+const R4: &str = "CANON-REDUCE-4";
+const R8: &str = "CANON-REDUCE-8";
+const VIA: &str = "CANON-VIA";
+
+/// The audited kernel table: (module path inside `data/simd.rs`, fn
+/// name, required reduction-chain marker). Adding an arch
+/// implementation of a kernel family means registering it here — the
+/// drift check below fails on any unregistered kernel-family fn.
+const MARKER_TABLE: &[(&[&str], &str, &str)] = &[
+    (&[], "squared_euclidean_portable", R4),
+    (&[], "dot_portable", R4),
+    (&[], "dot_f32_portable", R8),
+    (&[], "portable_kernel", VIA),
+    (&[], "portable_rows", VIA),
+    (&[], "portable_panel", VIA),
+    (&[], "portable_panel_f32", VIA),
+    (&["avx2"], "squared_euclidean", R4),
+    (&["avx2"], "euclidean_rows", VIA),
+    (&["avx2"], "hsum", R4),
+    (&["avx2"], "hsum_ps", R8),
+    (&["avx2"], "panel_rows", VIA),
+    (&["avx2"], "panel_rows_f32", VIA),
+    (&["neon"], "squared_euclidean", R4),
+    (&["neon"], "euclidean_rows", VIA),
+    (&["neon"], "dot", R4),
+    (&["neon"], "dot_f32", R8),
+    (&["neon"], "fold8", R8),
+    (&["neon"], "panel_rows", R4),
+    (&["neon"], "panel_rows_f32", VIA),
+];
+
+/// Top-level fns in `data/simd.rs` that legitimately carry no marker:
+/// safe wrappers over the dispatch table, the selector, and the
+/// norm-combine/error-bound helpers (no reduction loop of their own).
+const MARKER_EXEMPT: &[&str] = &[
+    "selected",
+    "squared_euclidean",
+    "kernel_name",
+    "euclidean_rows",
+    "panel_rows",
+    "panel_rows_f32",
+    "panel_error_bound",
+    "panel_error_bound_f32",
+    "panel_rows_portable",
+    "panel_combine",
+    "panel_rows_f32_portable",
+    "panel_combine_f32",
+];
+
+/// Substrings a fn name must contain to count as kernel-family for the
+/// R4 drift check.
+const KERNEL_FAMILY_HINTS: &[&str] =
+    &["panel", "kernel", "euclidean", "dot", "hsum", "fold", "rows"];
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte offsets of word-boundary occurrences of `word` in `line`
+/// (ASCII identifiers only, which is all the scanner feeds us).
+fn word_positions(line: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let chars: Vec<char> = line.chars().collect();
+    let w: Vec<char> = word.chars().collect();
+    let mut i = 0usize;
+    while i + w.len() <= chars.len() {
+        if chars[i..i + w.len()] == w[..]
+            && (i == 0 || !is_ident_char(chars[i - 1]))
+            && (i + w.len() == chars.len() || !is_ident_char(chars[i + w.len()]))
+        {
+            out.push(i);
+        }
+        i += 1;
+    }
+    out
+}
+
+/// If the code line defines an `unsafe fn <name>`, the name. Returns
+/// `None` for `unsafe fn(..)` pointer types and plain `fn` items.
+fn unsafe_fn_name(code: &str) -> Option<String> {
+    for pos in word_positions(code, "unsafe") {
+        let tail: String = code.chars().skip(pos + "unsafe".len()).collect();
+        let tail = tail.trim_start();
+        if let Some(rest) = tail.strip_prefix("fn") {
+            if rest.starts_with(|c: char| is_ident_char(c)) {
+                continue; // identifier like `fnord`
+            }
+            if let Some(name) = word_after(tail, "fn") {
+                return Some(name);
+            }
+        }
+    }
+    None
+}
+
+/// Does this code line contain an `unsafe` token that opens a block
+/// (i.e. is not immediately followed by `fn`)?
+fn has_unsafe_block(code: &str) -> bool {
+    for pos in word_positions(code, "unsafe") {
+        let tail: String = code.chars().skip(pos + "unsafe".len()).collect();
+        let tail = tail.trim_start();
+        let is_fn = tail
+            .strip_prefix("fn")
+            .is_some_and(|rest| !rest.starts_with(|c: char| is_ident_char(c)));
+        if !is_fn {
+            return true;
+        }
+    }
+    false
+}
+
+/// R1: walk up from the `unsafe fn` header over attributes and plain
+/// comments; the contiguous `///`/`//!` doc block must contain a
+/// literal `# Safety`.
+fn doc_block_has_safety(s: &FileScan, header: usize) -> bool {
+    let mut i = header;
+    while i > 0 {
+        i -= 1;
+        let code = s.code[i].trim();
+        let comment = s.comment[i].trim();
+        if code.starts_with("#[") || code.starts_with("#!") {
+            continue; // attribute
+        }
+        if code.is_empty() && (comment.starts_with("///") || comment.starts_with("//!")) {
+            if comment.contains("# Safety") {
+                return true;
+            }
+            continue;
+        }
+        if code.is_empty() && comment.starts_with("//") {
+            continue; // marker / plain comment between docs and header
+        }
+        break; // blank line or real code: doc block ended
+    }
+    false
+}
+
+/// Header and last body line of fn `name` under module path `mods`
+/// (outside any `tests` module), if defined in this file.
+fn fn_extent(s: &FileScan, mods: &[&str], name: &str) -> Option<(usize, usize)> {
+    let mods_match = |line_mods: &[String]| {
+        line_mods.len() == mods.len()
+            && line_mods.iter().map(String::as_str).eq(mods.iter().copied())
+    };
+    let mut header = None;
+    for (i, code) in s.code.iter().enumerate() {
+        if word_after(code, "fn").as_deref() == Some(name) && mods_match(&s.scopes[i].mods) {
+            header = Some(i);
+            break;
+        }
+    }
+    let h = header?;
+    let mut last = h;
+    for (i, sc) in s.scopes.iter().enumerate().skip(h) {
+        if mods_match(&sc.mods) && sc.func.as_deref() == Some(name) {
+            last = i;
+        }
+    }
+    Some((h, last))
+}
+
+/// R6 pattern (a): identical parenthesized groups multiplied together,
+/// `(A) * (A)` with a `-` inside `A`, where the accumulation is
+/// coordinate-driven (a `zip` on the line or an indexed `[` operand).
+/// Scalar once-off squares like variance terms `(x - mu) * (x - mu)`
+/// are legal.
+fn squared_difference_product(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    let group_at = |start: usize| -> Option<(String, usize)> {
+        if chars.get(start) != Some(&'(') {
+            return None;
+        }
+        let mut depth = 0i32;
+        for (j, &c) in chars.iter().enumerate().skip(start) {
+            if c == '(' {
+                depth += 1;
+            } else if c == ')' {
+                depth -= 1;
+                if depth == 0 {
+                    let g: String =
+                        chars[start..=j].iter().filter(|c| !c.is_whitespace()).collect();
+                    return Some((g, j));
+                }
+            }
+        }
+        None
+    };
+    for i in 0..chars.len() {
+        let Some((g1, end1)) = group_at(i) else { continue };
+        let mut k = end1 + 1;
+        while chars.get(k) == Some(&' ') {
+            k += 1;
+        }
+        if chars.get(k) != Some(&'*') {
+            continue;
+        }
+        k += 1;
+        while chars.get(k) == Some(&' ') {
+            k += 1;
+        }
+        let Some((g2, _)) = group_at(k) else { continue };
+        if g1 == g2 && g1.contains('-') && (code.contains("zip") || g1.contains('[')) {
+            return true;
+        }
+    }
+    false
+}
+
+/// R6 pattern (b): self-square via FMA, `x.mul_add(x, ..)` with the
+/// same identifier on both sides.
+fn self_square_mul_add(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    let needle: Vec<char> = ".mul_add(".chars().collect();
+    let mut i = 0usize;
+    while i + needle.len() <= chars.len() {
+        if chars[i..i + needle.len()] == needle[..] {
+            let mut s = i;
+            while s > 0 && is_ident_char(chars[s - 1]) {
+                s -= 1;
+            }
+            let recv: String = chars[s..i].iter().collect();
+            let mut j = i + needle.len();
+            while chars.get(j) == Some(&' ') {
+                j += 1;
+            }
+            let a0 = j;
+            while j < chars.len() && is_ident_char(chars[j]) {
+                j += 1;
+            }
+            let arg: String = chars[a0..j].iter().collect();
+            while chars.get(j) == Some(&' ') {
+                j += 1;
+            }
+            if !recv.is_empty() && recv == arg && chars.get(j) == Some(&',') {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// Per-file rules R1, R2, R3, R5, R6 (+R4 when the file is
+/// `data/simd.rs`). `relpath` is src-relative with forward slashes.
+pub fn lint_source(relpath: &str, text: &str) -> Vec<Violation> {
+    let s = scan(text);
+    let mut out = Vec::new();
+    let mut push = |line: usize, rule: &'static str, msg: String| {
+        out.push(Violation { path: relpath.to_string(), line, rule, msg });
+    };
+
+    for (i, code) in s.code.iter().enumerate() {
+        // R1
+        if let Some(name) = unsafe_fn_name(code) {
+            if !doc_block_has_safety(&s, i) {
+                push(
+                    i + 1,
+                    "R1-unsafe-fn-safety-doc",
+                    format!("`unsafe fn {name}` has no `# Safety` doc section"),
+                );
+            }
+        }
+        // R2
+        if has_unsafe_block(code) {
+            let lo = i.saturating_sub(6);
+            let discharged =
+                s.comment[lo..=i].iter().any(|c| c.contains("SAFETY:"));
+            if !discharged {
+                push(
+                    i + 1,
+                    "R2-unsafe-block-safety-comment",
+                    "`unsafe` block without a `// SAFETY:` comment on the \
+                     same line or within 6 lines above"
+                        .to_string(),
+                );
+            }
+        }
+        // R3
+        for arch in ["avx2::", "neon::"] {
+            if code.contains(arch) {
+                let in_selector = relpath == "data/simd.rs"
+                    && s.scopes[i].func.as_deref() == Some("selected");
+                if !in_selector {
+                    push(
+                        i + 1,
+                        "R3-dispatch-only-arch-paths",
+                        format!(
+                            "`{arch}` referenced outside `fn selected()` in \
+                             data/simd.rs — target_feature kernels are \
+                             reachable only through the dispatch selector"
+                        ),
+                    );
+                }
+            }
+        }
+        // R5
+        if !F32_CAST_WHITELIST.contains(&relpath) && !word_positions(code, "as").is_empty() {
+            let squeezed: String = code.split_whitespace().collect::<Vec<_>>().join(" ");
+            for pos in word_positions(&squeezed, "as") {
+                let tail: String = squeezed.chars().skip(pos + 2).collect();
+                if tail.trim_start().starts_with("f32")
+                    && !tail.trim_start().starts_with("f32::")
+                {
+                    push(
+                        i + 1,
+                        "R5-no-stray-f32-casts",
+                        "`as f32` outside the whitelisted mirror/panel \
+                         modules — precision demotions must stay paired \
+                         with guard-band refinement"
+                            .to_string(),
+                    );
+                    break;
+                }
+            }
+        }
+        // R6
+        if !DISTANCE_WHITELIST.contains(&relpath)
+            && (squared_difference_product(code) || self_square_mul_add(code))
+        {
+            push(
+                i + 1,
+                "R6-no-handrolled-distance",
+                "hand-rolled squared-Euclidean accumulation — use the \
+                 dispatched kernels in data::simd so reductions and \
+                 distance counts stay canonical"
+                    .to_string(),
+            );
+        }
+    }
+
+    if relpath == "data/simd.rs" {
+        lint_markers(&s, relpath, &mut out);
+    }
+    out
+}
+
+/// R4 over `data/simd.rs`: every registered kernel carries its marker
+/// within its extent (12 lines of doc/attr headroom above the header),
+/// and every kernel-family fn outside `tests` is registered or exempt.
+fn lint_markers(s: &FileScan, relpath: &str, out: &mut Vec<Violation>) {
+    for (mods, name, marker) in MARKER_TABLE {
+        match fn_extent(s, mods, name) {
+            None => out.push(Violation {
+                path: relpath.to_string(),
+                line: 0,
+                rule: "R4-canonical-reduction-markers",
+                msg: format!(
+                    "registered kernel `{}{name}` not found — update the \
+                     xtask marker table together with the kernel set",
+                    mod_prefix(mods)
+                ),
+            }),
+            Some((h, last)) => {
+                let lo = h.saturating_sub(12);
+                let found = s.comment[lo..=last].iter().any(|c| c.contains(marker));
+                if !found {
+                    out.push(Violation {
+                        path: relpath.to_string(),
+                        line: h + 1,
+                        rule: "R4-canonical-reduction-markers",
+                        msg: format!(
+                            "kernel `{}{name}` is missing its `// {marker}` \
+                             reduction-chain marker",
+                            mod_prefix(mods)
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    // Drift: unregistered kernel-family fns.
+    for (i, code) in s.code.iter().enumerate() {
+        let Some(name) = word_after(code, "fn") else { continue };
+        let mods = &s.scopes[i].mods;
+        if mods.iter().any(|m| m == "tests") {
+            continue;
+        }
+        if !KERNEL_FAMILY_HINTS.iter().any(|h| name.contains(h)) {
+            continue;
+        }
+        let registered = MARKER_TABLE.iter().any(|(m, n, _)| {
+            *n == name && mods.iter().map(String::as_str).eq(m.iter().copied())
+        });
+        let exempt = mods.is_empty() && MARKER_EXEMPT.contains(&name.as_str());
+        if !registered && !exempt {
+            out.push(Violation {
+                path: relpath.to_string(),
+                line: i + 1,
+                rule: "R4-canonical-reduction-markers",
+                msg: format!(
+                    "kernel-family fn `{}{name}` is not in the xtask marker \
+                     table — register it with its canonical reduction marker",
+                    mod_prefix(&mods.iter().map(String::as_str).collect::<Vec<_>>())
+                ),
+            });
+        }
+    }
+}
+
+fn mod_prefix(mods: &[&str]) -> String {
+    mods.iter().map(|m| format!("{m}::")).collect()
+}
+
+/// R7: the soundness configuration must stay in place.
+pub fn lint_config(cargo_toml: &str, lib_rs: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut require = |path: &str, haystack: &str, needle: &str, what: &str| {
+        if !haystack.contains(needle) {
+            out.push(Violation {
+                path: path.to_string(),
+                line: 0,
+                rule: "R7-soundness-config-present",
+                msg: format!("{what} (`{needle}`) is missing"),
+            });
+        }
+    };
+    require(
+        "src/lib.rs",
+        lib_rs,
+        "#![deny(unsafe_op_in_unsafe_fn)]",
+        "crate-level unsafe-op discharge deny",
+    );
+    require(
+        "Cargo.toml",
+        cargo_toml,
+        "unsafe_op_in_unsafe_fn = \"deny\"",
+        "workspace rust lint deny",
+    );
+    require(
+        "Cargo.toml",
+        cargo_toml,
+        "undocumented_unsafe_blocks = \"deny\"",
+        "workspace clippy SAFETY-comment deny",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(relpath: &str, text: &str) -> Vec<&'static str> {
+        lint_source(relpath, text).into_iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn r1_flags_undocumented_unsafe_fn() {
+        let bad = "/// Does a thing.\nunsafe fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        assert!(rules("m.rs", bad).contains(&"R1-unsafe-fn-safety-doc"));
+        let good = concat!(
+            "/// Does a thing.\n///\n/// # Safety\n/// `p` must be valid.\n",
+            "unsafe fn f(p: *const u8) -> u8 {\n",
+            "    // SAFETY: caller contract.\n    unsafe { *p }\n}\n"
+        );
+        assert!(!rules("m.rs", good).contains(&"R1-unsafe-fn-safety-doc"));
+    }
+
+    #[test]
+    fn r1_walks_over_attributes_and_plain_comments() {
+        let good = concat!(
+            "/// # Safety\n/// contract.\n// CANON-VIA: delegated.\n",
+            "#[inline]\nunsafe fn f() {}\n"
+        );
+        assert!(!rules("m.rs", good).contains(&"R1-unsafe-fn-safety-doc"));
+        let gap = "/// # Safety\n\nunsafe fn f() {}\n";
+        assert!(rules("m.rs", gap).contains(&"R1-unsafe-fn-safety-doc"));
+    }
+
+    #[test]
+    fn r1_ignores_fn_pointer_types() {
+        let t = "type K = unsafe fn(&[f64], &[f64]) -> f64;\n";
+        assert!(rules("m.rs", t).is_empty());
+    }
+
+    #[test]
+    fn r2_requires_safety_comment_within_six_lines() {
+        let bad = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        assert!(rules("m.rs", bad).contains(&"R2-unsafe-block-safety-comment"));
+        let good = concat!(
+            "fn f(p: *const u8) -> u8 {\n",
+            "    // SAFETY: p is valid by construction.\n    unsafe { *p }\n}\n"
+        );
+        assert!(!rules("m.rs", good).contains(&"R2-unsafe-block-safety-comment"));
+        let same_line = "fn f(p: *const u8) -> u8 {\n    unsafe { *p } // SAFETY: p is valid.\n}\n";
+        assert!(!rules("m.rs", same_line).contains(&"R2-unsafe-block-safety-comment"));
+    }
+
+    #[test]
+    fn r2_not_fooled_by_strings_or_idents() {
+        let t = "fn f() { let s = \"unsafe\"; let unsafe_ish = 1; }\n";
+        assert!(rules("m.rs", t).is_empty());
+    }
+
+    #[test]
+    fn r3_flags_arch_paths_outside_selector() {
+        let t = concat!(
+            "fn f() -> f64 {\n    // SAFETY: nope\n",
+            "    unsafe { avx2::squared_euclidean(a, b) }\n}\n"
+        );
+        assert!(rules("m.rs", t).contains(&"R3-dispatch-only-arch-paths"));
+    }
+
+    #[test]
+    fn r5_flags_casts_outside_whitelist_only() {
+        let t = "fn f(x: f64) -> f32 { x as f32 }\n";
+        assert!(rules("engine/mod.rs", t).contains(&"R5-no-stray-f32-casts"));
+        assert!(!rules("data/mod.rs", t).contains(&"R5-no-stray-f32-casts"));
+        let assoc = "fn f() -> f64 { x as f32::MAX }\n"; // not real code; path form must not match
+        assert!(!rules("engine/mod.rs", assoc).contains(&"R5-no-stray-f32-casts"));
+    }
+
+    #[test]
+    fn r6_flags_zip_and_indexed_squared_differences() {
+        let zip = "let d: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();\n";
+        assert!(rules("algo/x.rs", zip).contains(&"R6-no-handrolled-distance"));
+        let idx = "for i in 0..d { acc += (a[i] - b[i]) * (a[i] - b[i]); }\n";
+        assert!(rules("algo/x.rs", idx).contains(&"R6-no-handrolled-distance"));
+        let fma = "let acc = diff.mul_add(diff, acc);\n";
+        assert!(rules("algo/x.rs", fma).contains(&"R6-no-handrolled-distance"));
+    }
+
+    #[test]
+    fn r6_allows_scalar_variance_terms() {
+        let var = "let v = xs.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / n;\n";
+        assert!(!rules("harness/x.rs", var).contains(&"R6-no-handrolled-distance"));
+        let fma_mixed = "let y = a.mul_add(b, c);\n";
+        assert!(!rules("harness/x.rs", fma_mixed).contains(&"R6-no-handrolled-distance"));
+    }
+
+    #[test]
+    fn r7_detects_config_reverts() {
+        let ok = lint_config(
+            "unsafe_op_in_unsafe_fn = \"deny\"\nundocumented_unsafe_blocks = \"deny\"\n",
+            "#![deny(unsafe_op_in_unsafe_fn)]\n",
+        );
+        assert!(ok.is_empty());
+        let reverted = lint_config("", "");
+        assert_eq!(reverted.len(), 3);
+    }
+
+    #[test]
+    fn r4_marker_table_on_minimal_simd_shape() {
+        // A miniature data/simd.rs with one registered kernel present,
+        // one missing its marker, and one unregistered family fn.
+        let text = "\
+/// # Safety\n/// fine.\nunsafe fn portable_kernel(a: &[f64]) -> f64 {\n    0.0\n}\n\
+// CANON-VIA: reduction chain delegated.\n\
+mod avx2 {\n\
+    /// # Safety\n    /// fine.\n    // CANON-REDUCE-4: ((l0+l2)+(l1+l3))+tail\n\
+    pub(super) unsafe fn squared_euclidean(a: &[f64]) -> f64 {\n        0.0\n    }\n\
+    /// # Safety\n    /// fine.\n\
+    pub(super) unsafe fn mystery_panel(a: &[f64]) -> f64 {\n        0.0\n    }\n\
+}\n";
+        let vs = lint_source("data/simd.rs", text);
+        let msgs: Vec<String> = vs
+            .iter()
+            .filter(|v| v.rule == "R4-canonical-reduction-markers")
+            .map(|v| v.msg.clone())
+            .collect();
+        // portable_kernel's VIA marker is *below* the fn here, outside
+        // its extent headroom ordering — but within [h-12, last] it IS
+        // found only if above/inside; at line 6 it's after the body end
+        // (line 5), so `lo..=last` misses it → flagged.
+        assert!(msgs.iter().any(|m| m.contains("portable_kernel")), "{msgs:?}");
+        // avx2::squared_euclidean has its marker → not flagged.
+        assert!(!msgs.iter().any(|m| m.contains("`avx2::squared_euclidean`")), "{msgs:?}");
+        // mystery_panel is kernel-family but unregistered → drift flag.
+        assert!(msgs.iter().any(|m| m.contains("mystery_panel")), "{msgs:?}");
+        // The other 17 registered kernels are absent from this snippet →
+        // "not found" findings exist too.
+        assert!(msgs.iter().any(|m| m.contains("not found")));
+    }
+}

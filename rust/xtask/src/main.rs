@@ -1,0 +1,132 @@
+//! `cargo run -p xtask -- lint` — the repo-specific soundness lint.
+//!
+//! Walks `src/**/*.rs` of the `trimed` crate and enforces the audited
+//! unsafe-kernel contracts (rules R1–R7, documented in [`lint`]).
+//! Exit status is non-zero on any violation; CI runs this blocking in
+//! the `lint` job. `--root <dir>` points at an alternative crate root
+//! (a directory containing `Cargo.toml` and `src/`), which the fixture
+//! self-tests use to prove the lint fails on seeded violations.
+
+mod lint;
+mod scan;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd = None;
+    let mut root: Option<PathBuf> = None;
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "lint" if cmd.is_none() => cmd = Some("lint"),
+            "--root" => {
+                i += 1;
+                match args.get(i) {
+                    Some(p) => root = Some(PathBuf::from(p)),
+                    None => {
+                        eprintln!("error: --root needs a path");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            other => {
+                eprintln!("error: unknown argument `{other}`");
+                eprintln!("{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+        i += 1;
+    }
+    match cmd {
+        Some("lint") => run_lint(&root.unwrap_or_else(default_root)),
+        _ => {
+            eprintln!("{USAGE}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+const USAGE: &str = "usage: cargo run -p xtask -- lint [--root <crate-dir>]";
+
+/// The trimed crate root: the parent of xtask's own manifest dir.
+fn default_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives inside the workspace root")
+        .to_path_buf()
+}
+
+fn run_lint(root: &Path) -> ExitCode {
+    match lint_tree(root) {
+        Ok(violations) if violations.is_empty() => {
+            println!("xtask lint: ok ({})", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            eprintln!("xtask lint: {} violation(s)", violations.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("xtask lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// Lint every `.rs` file under `<root>/src` plus the R7 configuration
+/// checks on `<root>/Cargo.toml` and `<root>/src/lib.rs`.
+fn lint_tree(root: &Path) -> Result<Vec<lint::Violation>, String> {
+    let src = root.join("src");
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files)
+        .map_err(|e| format!("walking {}: {e}", src.display()))?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src)
+            .expect("collected under src")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        out.extend(lint::lint_source(&rel, &text));
+    }
+    // R7 runs against whichever manifest/lib the root provides; absent
+    // files count as empty (and therefore fail the presence checks).
+    let cargo_toml = fs::read_to_string(root.join("Cargo.toml")).unwrap_or_default();
+    let lib_rs = fs::read_to_string(src.join("lib.rs")).unwrap_or_default();
+    out.extend(lint::lint_config(&cargo_toml, &lib_rs));
+    // The marker table is pinned to data/simd.rs; a rename or removal
+    // must fail loudly rather than silently skipping R4.
+    if !files.iter().any(|p| p.ends_with("data/simd.rs")) {
+        out.push(lint::Violation {
+            path: "src/data/simd.rs".to_string(),
+            line: 0,
+            rule: "R4-canonical-reduction-markers",
+            msg: "file not found — the unsafe kernel module moved without \
+                  updating xtask"
+                .to_string(),
+        });
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

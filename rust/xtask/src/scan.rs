@@ -1,0 +1,391 @@
+//! Line-accurate lexical scan of a Rust source file: splits every line
+//! into its code text and its comment text (strings and char literals
+//! blanked from both), and tracks the innermost `mod`/`fn` scope per
+//! line by brace depth.
+//!
+//! This is deliberately not a parser. Every rule in [`crate::lint`] is
+//! lexical — "is there a `SAFETY:` comment near this `unsafe` token",
+//! "does this fn's extent carry its reduction-chain marker" — so a
+//! faithful code/comment split plus scope attribution is sufficient,
+//! and it keeps the tool dependency-free for offline builds.
+
+/// Per-line scan result for one file.
+pub struct FileScan {
+    /// Line text with comments, string/char contents blanked to spaces
+    /// (delimiters kept), so token searches cannot match inside either.
+    pub code: Vec<String>,
+    /// Line text with everything but comment text blanked to spaces.
+    pub comment: Vec<String>,
+    /// Innermost scope per line: enclosing module path (excluding the
+    /// crate root) and enclosing fn name, if any.
+    pub scopes: Vec<Scope>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Scope {
+    pub mods: Vec<String>,
+    pub func: Option<String>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(usize),
+    Char,
+}
+
+/// Split `text` into per-line code and comment channels.
+fn split_channels(text: &str) -> (Vec<String>, Vec<String>) {
+    let bytes: Vec<char> = text.chars().collect();
+    let n = bytes.len();
+    let mut code = Vec::new();
+    let mut comment = Vec::new();
+    let mut cur_code = String::new();
+    let mut cur_comment = String::new();
+    let mut state = State::Code;
+    let mut i = 0usize;
+    // Pushes `c` to one channel and a space placeholder to the other so
+    // both stay column-aligned with the source line.
+    macro_rules! emit {
+        (code $c:expr) => {{
+            cur_code.push($c);
+            cur_comment.push(' ');
+        }};
+        (comment $c:expr) => {{
+            cur_comment.push($c);
+            cur_code.push(' ');
+        }};
+        (blank) => {{
+            cur_code.push(' ');
+            cur_comment.push(' ');
+        }};
+    }
+    while i < n {
+        let c = bytes[i];
+        let nxt = if i + 1 < n { bytes[i + 1] } else { '\0' };
+        if c == '\n' {
+            code.push(std::mem::take(&mut cur_code));
+            comment.push(std::mem::take(&mut cur_comment));
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && nxt == '/' {
+                    state = State::LineComment;
+                    emit!(comment '/');
+                    emit!(comment '/');
+                    i += 2;
+                } else if c == '/' && nxt == '*' {
+                    state = State::BlockComment(1);
+                    emit!(comment '/');
+                    emit!(comment '*');
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    emit!(code '"');
+                    i += 1;
+                } else if c == 'r' && raw_string_hashes(&bytes, i).is_some() {
+                    let prev_ident =
+                        i > 0 && (bytes[i - 1].is_alphanumeric() || bytes[i - 1] == '_');
+                    if prev_ident {
+                        emit!(code c);
+                        i += 1;
+                    } else {
+                        let hashes = raw_string_hashes(&bytes, i).unwrap();
+                        state = State::RawStr(hashes);
+                        for _ in 0..hashes + 2 {
+                            emit!(blank);
+                        }
+                        i += hashes + 2; // r, #*, "
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: '\x' escapes and 'x'
+                    // (closing quote two ahead) are char literals;
+                    // anything else ('a in generics, 'static) is a
+                    // lifetime tick.
+                    if nxt == '\\' {
+                        state = State::Char;
+                        emit!(code '\'');
+                        i += 1;
+                    } else if i + 2 < n && bytes[i + 2] == '\'' {
+                        emit!(code '\'');
+                        emit!(blank);
+                        emit!(code '\'');
+                        i += 3;
+                    } else {
+                        emit!(code '\'');
+                        i += 1;
+                    }
+                } else {
+                    emit!(code c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                emit!(comment c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '*' && nxt == '/' {
+                    emit!(comment '*');
+                    emit!(comment '/');
+                    i += 2;
+                    state = if depth == 1 { State::Code } else { State::BlockComment(depth - 1) };
+                } else if c == '/' && nxt == '*' {
+                    emit!(comment '/');
+                    emit!(comment '*');
+                    i += 2;
+                    state = State::BlockComment(depth + 1);
+                } else {
+                    emit!(comment c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    emit!(blank);
+                    if i + 1 < n && nxt != '\n' {
+                        emit!(blank);
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    state = State::Code;
+                    emit!(code '"');
+                    i += 1;
+                } else {
+                    emit!(blank);
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && closes_raw(&bytes, i, hashes) {
+                    state = State::Code;
+                    for _ in 0..hashes + 1 {
+                        emit!(blank);
+                    }
+                    i += hashes + 1;
+                } else {
+                    emit!(blank);
+                    i += 1;
+                }
+            }
+            State::Char => {
+                if c == '\\' {
+                    emit!(blank);
+                    if i + 1 < n {
+                        emit!(blank);
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    state = State::Code;
+                    emit!(code '\'');
+                    i += 1;
+                } else {
+                    emit!(blank);
+                    i += 1;
+                }
+            }
+        }
+    }
+    code.push(cur_code);
+    comment.push(cur_comment);
+    (code, comment)
+}
+
+/// If `bytes[i..]` starts a raw string (`r"`, `r#"`, `r##"` …), the
+/// number of hashes; `None` otherwise.
+fn raw_string_hashes(bytes: &[char], i: usize) -> Option<usize> {
+    debug_assert_eq!(bytes[i], 'r');
+    let mut j = i + 1;
+    while j < bytes.len() && bytes[j] == '#' {
+        j += 1;
+    }
+    if j < bytes.len() && bytes[j] == '"' {
+        Some(j - i - 1)
+    } else {
+        None
+    }
+}
+
+/// Does the `"` at `bytes[i]` close a raw string with `hashes` hashes?
+fn closes_raw(bytes: &[char], i: usize, hashes: usize) -> bool {
+    debug_assert_eq!(bytes[i], '"');
+    if i + hashes >= bytes.len() {
+        return false;
+    }
+    bytes[i + 1..=i + hashes].iter().all(|&c| c == '#')
+}
+
+/// First identifier following the word `kw` in `line`, if any.
+/// `kw` must match on word boundaries ("fn" must not match "fnord" or
+/// "safe_fn").
+pub fn word_after(line: &str, kw: &str) -> Option<String> {
+    let chars: Vec<char> = line.chars().collect();
+    let kchars: Vec<char> = kw.chars().collect();
+    let mut i = 0usize;
+    while i + kchars.len() <= chars.len() {
+        let matches = chars[i..i + kchars.len()] == kchars[..];
+        let left_ok = i == 0 || !is_ident(chars[i - 1]);
+        let right = i + kchars.len();
+        let right_ok = right == chars.len() || !is_ident(chars[right]);
+        if matches && left_ok && right_ok {
+            let mut j = right;
+            while j < chars.len() && chars[j] == ' ' {
+                j += 1;
+            }
+            let start = j;
+            while j < chars.len() && is_ident(chars[j]) {
+                j += 1;
+            }
+            if j > start && !chars[start].is_ascii_digit() {
+                return Some(chars[start..j].iter().collect());
+            }
+            return None;
+        }
+        i += 1;
+    }
+    None
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Per-line innermost scope, by brace-depth tracking of `fn`/`mod`
+/// headers in the code channel. Multi-line signatures are handled by
+/// keeping the header pending until its `{` (or dropping it at `;` for
+/// declarations and fn-pointer type aliases).
+fn track_scopes(code: &[String]) -> Vec<Scope> {
+    let mut scopes = Vec::with_capacity(code.len());
+    // (kind is implicit: mod entries carry `true`)
+    let mut stack: Vec<(bool, String, u32)> = Vec::new();
+    let mut depth = 0u32;
+    let mut pending: Option<(bool, String)> = None;
+    for line in code {
+        if let Some(name) = word_after(line, "fn") {
+            pending = Some((false, name));
+        } else if let Some(name) = word_after(line, "mod") {
+            if !line.trim_start().starts_with("use") {
+                pending = Some((true, name));
+            }
+        }
+        for c in line.chars() {
+            if c == '{' {
+                depth += 1;
+                if let Some((is_mod, name)) = pending.take() {
+                    stack.push((is_mod, name, depth));
+                }
+            } else if c == '}' {
+                while stack.last().is_some_and(|s| s.2 == depth) {
+                    stack.pop();
+                }
+                depth = depth.saturating_sub(1);
+            }
+        }
+        if pending.is_some() && line.contains(';') {
+            pending = None;
+        }
+        let mods: Vec<String> =
+            stack.iter().filter(|s| s.0).map(|s| s.1.clone()).collect();
+        let func = stack.iter().rev().find(|s| !s.0).map(|s| s.1.clone());
+        scopes.push(Scope { mods, func });
+    }
+    scopes
+}
+
+/// Scan one file's full text.
+pub fn scan(text: &str) -> FileScan {
+    let (code, comment) = split_channels(text);
+    let scopes = track_scopes(&code);
+    FileScan { code, comment, scopes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_leave_code_channel() {
+        let s = scan("let x = 1; // trailing unsafe\n/* unsafe */ let y = 2;\n");
+        assert!(!s.code[0].contains("unsafe"));
+        assert!(s.comment[0].contains("trailing unsafe"));
+        assert!(!s.code[1].contains("unsafe"));
+        assert!(s.code[1].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = scan("/* a /* b */ still comment */ code();\n");
+        assert!(s.code[0].contains("code();"));
+        assert!(!s.code[0].contains("still"));
+    }
+
+    #[test]
+    fn strings_are_blanked_from_both_channels() {
+        let s = scan("let s = \"unsafe // not a comment\"; real();\n");
+        assert!(!s.code[0].contains("unsafe"));
+        assert!(!s.comment[0].contains("not a comment"));
+        assert!(s.code[0].contains("real();"));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let s = scan(
+            "let r = r#\"unsafe \" quote\"#; after();\nlet e = \"a\\\"b unsafe\"; tail();\n",
+        );
+        assert!(!s.code[0].contains("unsafe"));
+        assert!(s.code[0].contains("after();"));
+        assert!(!s.code[1].contains("unsafe"));
+        assert!(s.code[1].contains("tail();"));
+    }
+
+    #[test]
+    fn lifetimes_do_not_open_char_literals() {
+        let s = scan("fn f<'a>(x: &'a str) -> &'a str { x } // unsafe note\n");
+        assert!(s.code[0].contains("fn f<'a>"));
+        assert!(s.comment[0].contains("unsafe note"));
+        let s2 = scan("let c = 'x'; let nl = '\\n'; done();\n");
+        assert!(s2.code[0].contains("done();"));
+    }
+
+    #[test]
+    fn scope_tracking_mods_and_fns() {
+        let text = concat!(
+            "mod outer {\n    fn alpha() {\n        body();\n    }\n",
+            "    mod inner {\n        fn beta(\n            a: usize,\n",
+            "        ) {\n            body();\n        }\n    }\n}\n"
+        );
+        let s = scan(text);
+        assert_eq!(s.scopes[2].mods, vec!["outer"]);
+        assert_eq!(s.scopes[2].func.as_deref(), Some("alpha"));
+        assert_eq!(s.scopes[8].mods, vec!["outer", "inner"]);
+        assert_eq!(s.scopes[8].func.as_deref(), Some("beta"));
+    }
+
+    #[test]
+    fn fn_pointer_type_alias_is_not_a_scope() {
+        let text = "type K = unsafe fn(&[f64]) -> f64;\nfn real() {\n    x();\n}\n";
+        let s = scan(text);
+        assert_eq!(s.scopes[0].func, None);
+        assert_eq!(s.scopes[2].func.as_deref(), Some("real"));
+    }
+
+    #[test]
+    fn word_after_respects_boundaries() {
+        assert_eq!(word_after("pub unsafe fn panel_rows(", "fn").as_deref(), Some("panel_rows"));
+        assert_eq!(word_after("type K = unsafe fn(&[f64]);", "fn"), None);
+        assert_eq!(word_after("safe_fn name", "fn"), None);
+        assert_eq!(word_after("mod avx2 {", "mod").as_deref(), Some("avx2"));
+    }
+}

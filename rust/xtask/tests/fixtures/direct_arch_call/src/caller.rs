@@ -1,0 +1,8 @@
+// Seeded violation: calls an arch kernel path directly instead of
+// going through the OnceLock dispatch selector. xtask lint must fail
+// this tree with R3-dispatch-only-arch-paths.
+
+pub fn fast_distance(a: &[f64], b: &[f64]) -> f64 {
+    // SAFETY: this comment does not make the reachability legal.
+    unsafe { avx2::squared_euclidean(a, b) }
+}

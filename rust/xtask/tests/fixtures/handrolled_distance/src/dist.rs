@@ -1,0 +1,15 @@
+// Seeded violation: a hand-rolled squared-Euclidean loop bypassing the
+// dispatched kernels. xtask lint must fail this tree with
+// R6-no-handrolled-distance (both the zip form and the indexed form).
+
+pub fn sq_euclid_zip(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+pub fn sq_euclid_indexed(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += (a[i] - b[i]) * (a[i] - b[i]);
+    }
+    acc
+}

@@ -1,0 +1,10 @@
+// Seeded violation: the unsafe block below has no `// SAFETY:` comment.
+// xtask lint must fail this tree with R2-unsafe-block-safety-comment.
+
+/// Reads one byte.
+///
+/// # Safety
+/// `p` must point to a valid, initialized byte.
+pub unsafe fn read_byte(p: *const u8) -> u8 {
+    unsafe { *p }
+}

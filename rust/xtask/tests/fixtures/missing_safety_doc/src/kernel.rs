@@ -1,0 +1,9 @@
+// Seeded violation: the unsafe fn below has a doc comment but no
+// `# Safety` section. xtask lint must fail this tree with
+// R1-unsafe-fn-safety-doc.
+
+/// Reads one byte, quickly.
+pub unsafe fn read_byte(p: *const u8) -> u8 {
+    // SAFETY: caller promises `p` is valid (but the doc never says so).
+    unsafe { *p }
+}

@@ -1,0 +1,7 @@
+// Seeded violation: silent f64 -> f32 demotion outside the whitelisted
+// mirror/panel modules. xtask lint must fail this tree with
+// R5-no-stray-f32-casts.
+
+pub fn shrink(x: f64) -> f32 {
+    x as f32
+}

@@ -1,0 +1,84 @@
+//! Self-test for `xtask lint`: the built binary must FAIL on each
+//! seeded-violation fixture tree (naming the expected rule) and PASS
+//! on the real `trimed` crate. This is what makes the lint
+//! trustworthy: a rule that cannot fire is indistinguishable from no
+//! rule at all.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn run_lint(root: &Path) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_xtask"))
+        .args(["lint", "--root"])
+        .arg(root)
+        .output()
+        .expect("spawn xtask binary")
+}
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+/// Assert the fixture tree fails the lint and the report names `rule`.
+fn assert_trips(name: &str, rule: &str) {
+    let out = run_lint(&fixture(name));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        !out.status.success(),
+        "fixture `{name}` unexpectedly passed the lint:\n{stdout}"
+    );
+    assert!(
+        stdout.contains(rule),
+        "fixture `{name}` should trip {rule}; report was:\n{stdout}"
+    );
+}
+
+#[test]
+fn seeded_missing_safety_comment_trips_r2() {
+    assert_trips("missing_safety_comment", "R2-unsafe-block-safety-comment");
+}
+
+#[test]
+fn seeded_missing_safety_doc_trips_r1() {
+    assert_trips("missing_safety_doc", "R1-unsafe-fn-safety-doc");
+}
+
+#[test]
+fn seeded_direct_arch_call_trips_r3() {
+    assert_trips("direct_arch_call", "R3-dispatch-only-arch-paths");
+}
+
+#[test]
+fn seeded_stray_cast_trips_r5() {
+    assert_trips("stray_cast", "R5-no-stray-f32-casts");
+}
+
+#[test]
+fn seeded_handrolled_distance_trips_r6() {
+    assert_trips("handrolled_distance", "R6-no-handrolled-distance");
+}
+
+#[test]
+fn fixture_roots_without_soundness_config_trip_r7() {
+    // Fixture trees ship no Cargo.toml / lib.rs, so the configuration
+    // presence checks must fire as well.
+    let out = run_lint(&fixture("stray_cast"));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("R7-soundness-config-present"), "{stdout}");
+    // ... and so must the data/simd.rs pinning of the marker table.
+    assert!(stdout.contains("R4-canonical-reduction-markers"), "{stdout}");
+}
+
+#[test]
+fn real_crate_tree_is_clean() {
+    let crate_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits inside the workspace root")
+        .to_path_buf();
+    let out = run_lint(&crate_root);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "the real tree must lint clean; report was:\n{stdout}"
+    );
+}
