@@ -159,6 +159,43 @@ impl Points {
         }
     }
 
+    /// Remove row `i` by moving the last row into its slot (O(d), like
+    /// `Vec::swap_remove` — row order past `i` changes, so callers that
+    /// index rows externally must remap the moved last row).
+    ///
+    /// All caches stay coherent and *bitwise equal to a bulk rebuild*
+    /// over the surviving rows: per-row values (`sq_norms`, the f32
+    /// mirror's rows and norms) are pure per-row functions and move with
+    /// their row, while the fold caches (`max_sq_norm`,
+    /// `sum_root_norms`, the mirror's max) are order-sensitive folds
+    /// that cannot shrink incrementally, so they are recomputed by the
+    /// same fold `new` runs — O(n) flops, zero distances. A later
+    /// [`Points::push`] then extends those folds exactly as a bulk
+    /// construction over survivors-plus-new would.
+    pub fn swap_remove(&mut self, i: usize) {
+        let n = self.len();
+        assert!(i < n, "swap_remove index {i} out of range for {n} points");
+        let d = self.d;
+        let last = n - 1;
+        if i != last {
+            let (head, tail) = self.data.split_at_mut(last * d);
+            head[i * d..(i + 1) * d].copy_from_slice(&tail[..d]);
+        }
+        self.data.truncate(last * d);
+        self.sq_norms.swap_remove(i);
+        self.max_sq_norm = self.sq_norms.iter().fold(0.0f64, |a, &b| a.max(b));
+        self.sum_root_norms = self.sq_norms.iter().fold(0.0f64, |a, &b| a + b.sqrt());
+        if let Some(m) = self.f32.get_mut() {
+            if i != last {
+                let (head, tail) = m.data.split_at_mut(last * d);
+                head[i * d..(i + 1) * d].copy_from_slice(&tail[..d]);
+            }
+            m.data.truncate(last * d);
+            m.sq_norms.swap_remove(i);
+            m.max_sq_norm = m.sq_norms.iter().fold(0.0f32, |a, &b| a.max(b));
+        }
+    }
+
     /// Flat row-major storage.
     pub fn flat(&self) -> &[f64] {
         &self.data
@@ -408,6 +445,57 @@ mod tests {
         assert_eq!(grown.sq_norms_f32(), fresh.sq_norms_f32());
         assert_eq!(grown.max_sq_norm_f32(), fresh.max_sq_norm_f32());
         assert_eq!(grown.sq_norms(), fresh.sq_norms());
+    }
+
+    #[test]
+    fn swap_remove_moves_last_row_and_rebuilds_folds() {
+        let mut p = Points::new(2, vec![3.0, 4.0, 6.0, 8.0, 0.5, -1.5]);
+        p.swap_remove(0); // last row [0.5, -1.5] moves into slot 0
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.row(0), &[0.5, -1.5]);
+        assert_eq!(p.row(1), &[6.0, 8.0]);
+        assert_eq!(p.sq_norms(), &[2.5, 100.0]);
+        assert_eq!(p.max_sq_norm(), 100.0);
+        p.swap_remove(1); // removing the last row is a pure truncate
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.row(0), &[0.5, -1.5]);
+        assert_eq!(p.max_sq_norm(), 2.5);
+    }
+
+    #[test]
+    fn swap_remove_then_push_equals_bulk_rebuild() {
+        // The mirror-coherence contract: a churned Points (materialized
+        // f32 mirror, interleaved removes and pushes) must be bitwise
+        // the Points a bulk construction over the same final rows
+        // builds — rows, sq_norms, fold caches, and the f32 mirror.
+        let d = 3;
+        let data: Vec<f64> = (0..8 * d).map(|i| ((i as f64) * 0.61).sin() * 4.0).collect();
+        let mut churned = Points::new(d, data.clone());
+        let _ = churned.rows_f32(); // materialize before churning
+        churned.swap_remove(1); // row 7 -> slot 1
+        churned.swap_remove(4); // row 6 -> slot 4
+        churned.push(&[0.25, -3.5, 2.0]);
+        churned.swap_remove(6); // the pushed row is last: pure truncate
+        let mut rows: Vec<Vec<f64>> = data.chunks_exact(d).map(<[f64]>::to_vec).collect();
+        rows.swap_remove(1);
+        rows.swap_remove(4);
+        rows.push(vec![0.25, -3.5, 2.0]);
+        rows.swap_remove(6);
+        let fresh = Points::new(d, rows.concat());
+        assert_eq!(churned.flat(), fresh.flat());
+        assert_eq!(churned.sq_norms(), fresh.sq_norms());
+        assert!(churned.max_sq_norm() == fresh.max_sq_norm());
+        assert!(churned.sum_root_norms() == fresh.sum_root_norms());
+        assert_eq!(churned.rows_f32(), fresh.rows_f32());
+        assert_eq!(churned.sq_norms_f32(), fresh.sq_norms_f32());
+        assert!(churned.max_sq_norm_f32() == fresh.max_sq_norm_f32());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn swap_remove_out_of_range_panics() {
+        let mut p = Points::new(2, vec![1.0, 2.0]);
+        p.swap_remove(1);
     }
 
     #[test]

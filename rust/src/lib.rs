@@ -15,7 +15,10 @@
 //! guard-band exact refinement (`--kernel exact|fast` — identical
 //! medoids, bit-identical sums either way); distance hot-spots are also
 //! available as AOT-compiled JAX+Pallas HLO artifacts executed through
-//! the XLA PJRT runtime ([`runtime`], `--features xla`).
+//! the XLA PJRT runtime ([`runtime`], `--features xla`). The
+//! [`streaming`] layer keeps the bounds alive across insert/remove
+//! churn, so live workloads get exact medoids at amortised sub-linear
+//! distance work per update.
 //!
 //! Soundness: the crate's entire unsafe surface lives in
 //! [`data::simd`]; every unsafe operation inside an `unsafe fn` must be
@@ -53,4 +56,5 @@ pub mod kmedoids;
 pub mod metric;
 pub mod rng;
 pub mod runtime;
+pub mod streaming;
 pub mod testutil;

@@ -4,6 +4,8 @@
 //! * `medoid`    — find the medoid of a synthetic or TSV dataset with any
 //!   of the algorithms (trimed / toprank / toprank2 / rand / scan),
 //!   natively or over the XLA runtime (`--xla`).
+//! * `stream`    — maintain an exact medoid over insert/remove churn,
+//!   reporting per-query work and amortised distance counts.
 //! * `kmedoids`  — cluster with trikmeds-ε or KMEDS.
 //! * `exp`       — regenerate a paper table/figure (`--id fig3|table1|...`).
 //! * `artifacts` — verify the AOT artifact registry loads and compiles.
@@ -22,7 +24,9 @@ use trimed::harness::{BatchSpec, ExecConfig, Scale};
 use trimed::kmedoids::{kmeds, trikmeds, KmedsOpts, TrikmedsOpts};
 use trimed::kmedoids::trikmeds::TrikmedsInit;
 use trimed::metric::{Counted, MetricSpace, VectorMetric, XlaVectorMetric};
+use trimed::rng::Rng;
 use trimed::runtime::{Registry, Runtime};
+use trimed::streaming::{StreamOpts, StreamingMedoid};
 
 const USAGE: &str = "\
 trimed — sub-quadratic exact medoid computation (Newling & Fleuret, AISTATS 2017)
@@ -31,6 +35,10 @@ USAGE:
   trimed medoid   [--data SPEC] [--n N] [--d D] [--seed S] [--algo A] [--eps E]
                   [--threads T] [--batch B] [--kernel exact|fast]
                   [--precision f64|f32] [--center auto|on|off] [--xla]
+  trimed stream   [--data SPEC] [--n N] [--d D] [--seed S] [--updates U]
+                  [--queries Q] [--threads T] [--batch B]
+                  [--kernel exact|fast] [--precision f64|f32]
+                  [--center auto|on|off]
   trimed kmedoids [--data SPEC] [--n N] [--d D] [--seed S] [--k K] [--eps E]
                   [--threads T] [--batch B] [--kernel exact|fast]
                   [--precision f64|f32] [--center auto|on|off]
@@ -43,6 +51,15 @@ DATA SPECS (--data):
 
 ALGORITHMS (--algo for medoid):
   trimed (default) | toprank | toprank2 | rand | scan
+
+STREAMING (stream):
+  --updates U  churn events to run (default 1000); each update inserts a
+               point perturbed from a random live row and removes a
+               random live element, so N stays constant
+  --queries Q  exact medoid queries spread evenly over the updates
+               (default 10); every query returns the same slot and
+               bit-identical energy as a from-scratch trimed run over the
+               live set (see the streaming module docs)
 
 PARALLELISM:
   --threads T  OS threads per batched distance pass (default
@@ -287,6 +304,87 @@ fn cmd_medoid(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_stream(args: &Args) -> Result<()> {
+    let mut pts = load_data(args)?;
+    let seed = args.get_parsed("seed", 0u64)?;
+    let updates = args.get_parsed("updates", 1000usize)?;
+    let queries = args.get_parsed("queries", 10usize)?;
+    let exec = exec_config(args, true)?;
+    let effective_precision = if exec.kernel == Kernel::Fast {
+        exec.precision.name()
+    } else {
+        "f64"
+    };
+    let center = resolve_center(args, effective_precision == "f32")?;
+    if center {
+        pts.center();
+    }
+    let (n, d) = (pts.len(), pts.dim());
+    println!(
+        "dataset: N={n} d={d} updates={updates} queries={queries} threads={} batch={}{} kernel={} precision={} center={center}",
+        exec.threads,
+        exec.batch,
+        if exec.batch_auto { " (auto)" } else { "" },
+        exec.kernel.name(),
+        effective_precision
+    );
+
+    let mut s = StreamingMedoid::with_store(
+        Counted::new(VectorMetric::new(pts)),
+        StreamOpts::from_exec(&exec, seed),
+    );
+    let t0 = std::time::Instant::now();
+    let mut gen = Rng::new(seed ^ 0x5EED_CAFE);
+    let every = (updates / queries.max(1)).max(1);
+    let r = s.medoid();
+    println!(
+        "update=0 n={} medoid_id={} slot={} energy={:.6} candidates={} computed={} refined={}",
+        s.len(),
+        r.id,
+        r.slot,
+        r.energy,
+        r.candidates,
+        r.computed,
+        r.refined
+    );
+    for upd in 1..=updates {
+        // Sliding churn at constant N: insert a point perturbed from a
+        // random live row, then retire a random live element.
+        let p: Vec<f64> = {
+            let pool = s.points();
+            pool.row(gen.below(pool.len()))
+                .iter()
+                .map(|&v| v * (1.0 + 1e-3 * (gen.f64() - 0.5)) + 1e-3 * (gen.f64() - 0.5))
+                .collect()
+        };
+        s.insert(&p);
+        let ids = s.live_ids().to_vec();
+        s.remove(ids[gen.below(ids.len())]);
+        if upd % every == 0 {
+            let r = s.medoid();
+            println!(
+                "update={upd} n={} medoid_id={} slot={} energy={:.6} candidates={} computed={} refined={}",
+                s.len(),
+                r.id,
+                r.slot,
+                r.energy,
+                r.candidates,
+                r.computed,
+                r.refined
+            );
+        }
+    }
+    let c = s.metric().counts();
+    println!(
+        "totals: distances={} backend_passes={} amortised_dists_per_update={:.1} wall={:.1?}",
+        c.dists,
+        c.one_to_all,
+        c.dists as f64 / updates.max(1) as f64,
+        t0.elapsed()
+    );
+    Ok(())
+}
+
 fn cmd_kmedoids(args: &Args) -> Result<()> {
     let mut pts = load_data(args)?;
     let seed = args.get_parsed("seed", 0u64)?;
@@ -407,12 +505,13 @@ fn main() {
     }
     let keys = [
         "data", "n", "d", "seed", "algo", "eps", "k", "id", "scale", "save", "dir", "threads",
-        "batch", "kernel", "precision", "center",
+        "batch", "kernel", "precision", "center", "updates", "queries",
     ];
     let flags = ["xla"];
     let result = Args::parse(argv, &keys, &flags).and_then(|args| {
         match args.command.as_deref() {
             Some("medoid") => cmd_medoid(&args),
+            Some("stream") => cmd_stream(&args),
             Some("kmedoids") => cmd_kmedoids(&args),
             Some("exp") => cmd_exp(&args),
             Some("artifacts") => cmd_artifacts(&args),

@@ -326,6 +326,14 @@ impl<M: MetricSpace> Counted<M> {
         &self.inner
     }
 
+    /// Mutable access to the wrapped metric, so instrumented consumers
+    /// that mutate their universe (the streaming medoid's insert/remove
+    /// path) can reach the backing store without unwrapping — the
+    /// counters keep accumulating across the mutation.
+    pub fn inner_mut(&mut self) -> &mut M {
+        &mut self.inner
+    }
+
     /// Unwrap.
     pub fn into_inner(self) -> M {
         self.inner

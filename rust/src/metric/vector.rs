@@ -106,6 +106,15 @@ impl VectorMetric {
         &self.points
     }
 
+    /// Mutable access to the point set, for callers that grow or shrink
+    /// the universe in place (the streaming medoid's insert/remove
+    /// path). `Points::push`/`Points::swap_remove` keep every norm
+    /// cache — including a materialized f32 mirror — coherent, so scans
+    /// issued after a mutation see the updated set with no rebuild.
+    pub fn points_mut(&mut self) -> &mut Points {
+        &mut self.points
+    }
+
     /// Consume and return the point set.
     pub fn into_points(self) -> Points {
         self.points

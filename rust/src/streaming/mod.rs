@@ -1,0 +1,598 @@
+//! Streaming medoid maintenance under churn.
+//!
+//! The paper's trimed bounds are one-shot over a frozen set. This module
+//! keeps them *alive* across `insert` / `remove` / `medoid` calls: every
+//! live element carries a lower **and** upper bound on its current
+//! distance sum, and each churn event decays both by the event's flux —
+//! triangle-inequality shifts through the incumbent medoid, the same
+//! derivation as the audited trikmeds Alg. 10 `update_sum_bounds`
+//! algebra (DESIGN.md §Streaming medoid maintenance). A query then
+//! re-runs the elimination engine only over elements whose decayed
+//! bounds still straddle the incumbent's upper bound, instead of the
+//! whole set.
+//!
+//! **Exactness contract.** Every [`StreamingMedoid::medoid`] call
+//! returns the *same slot and bit-identical energy* as a from-scratch
+//! [`crate::algo::trimed_with_opts`] run (same seed and engine options)
+//! over a fresh copy of the live set in slot order — across kernels,
+//! precisions, batch schedules and thread counts. The argument
+//! (`tests/streaming_property.rs` enforces it):
+//!
+//! 1. With sound bounds and [`BestSumRule`]'s strict `<` acceptance the
+//!    engine returns exactly the *first* element in its visit order
+//!    achieving the global minimum sum, and that sum is a canonical row
+//!    sum (fast rounds refine through the canonical kernel before the
+//!    rule may observe — see the engine's guard band).
+//! 2. Warm-starting `lb` cannot skip a first min-achiever `w`: skipping
+//!    requires `lb[w] ≥ threshold`, but `lb[w] ≤ S(w) = min` and the
+//!    threshold only reaches `min` after *some* min-achiever was
+//!    observed — which would have to precede `w` in the visit order.
+//! 3. The straddle filter drops `j` only when `lb[j] > ub[m]` strictly;
+//!    any min-achiever `w` has `lb[w] ≤ S(w) = min ≤ S(m) ≤ ub[m]`, so
+//!    the filtered order retains every min-achiever in the full
+//!    permutation's relative order. Hence both runs elect the same `w`
+//!    with the same canonical sum.
+//!
+//! The chain above needs `lb ≤ S` and `ub ≥ S` to hold *in floating
+//! point*, so every flux update is slackened by [`deflate`]/[`inflate`]
+//! — a relative guard two orders of magnitude above the worst-case
+//! rounding of the update's own arithmetic. Slack only ever costs extra
+//! recomputation (a looser bound straddles more), never exactness.
+//!
+//! The ISSUE sketched the re-run as a `SubsetSpace` over the straddle
+//! set; a subset universe computes *member-local* sums (its rectangle
+//! stops at the member list), which is the wrong objective for a global
+//! medoid. The equivalent-but-correct formulation used here keeps
+//! [`FullSpace`] rows (sums over the whole live set) and restricts the
+//! *visit order* to the straddle set — the engine never required the
+//! order to be a full permutation, and the panel kernels, guard band and
+//! `--precision f32` path all apply to `FullSpace` unchanged.
+
+use std::collections::HashMap;
+
+use crate::algo::sum_to_energy;
+use crate::data::Points;
+use crate::engine::{
+    run_elimination, BestSumRule, EngineOpts, FullSpace, Kernel, Precision,
+};
+use crate::harness::ExecConfig;
+use crate::metric::{Counted, MetricSpace, VectorMetric};
+use crate::rng::Rng;
+
+/// A metric backend the streaming layer can grow and shrink in place.
+///
+/// Implemented by the vector metric (and its [`Counted`] wrapper, so
+/// honest per-update distance accounting needs no plumbing): the
+/// streaming layer mutates through [`Points::push`] /
+/// [`Points::swap_remove`], whose cache coherence guarantees are what
+/// keep post-mutation scans (including a materialized f32 mirror)
+/// bitwise equal to scans over a freshly built set.
+pub trait StreamStore: MetricSpace {
+    /// The backing point set.
+    fn points(&self) -> &Points;
+
+    /// Mutable access to the backing point set.
+    fn points_mut(&mut self) -> &mut Points;
+}
+
+impl StreamStore for VectorMetric {
+    fn points(&self) -> &Points {
+        VectorMetric::points(self)
+    }
+
+    fn points_mut(&mut self) -> &mut Points {
+        VectorMetric::points_mut(self)
+    }
+}
+
+impl<M: StreamStore> StreamStore for Counted<M> {
+    fn points(&self) -> &Points {
+        self.inner().points()
+    }
+
+    fn points_mut(&mut self) -> &mut Points {
+        self.inner_mut().points_mut()
+    }
+}
+
+/// Options for a [`StreamingMedoid`]: the query seed plus the engine
+/// options every query threads through ([`EngineOpts`] fields, same
+/// defaults as [`crate::algo::TrimedOpts`] so a streaming query and a
+/// from-scratch run are comparable out of the box).
+#[derive(Clone, Debug)]
+pub struct StreamOpts {
+    /// Visit-order seed for queries (the same permutation a
+    /// from-scratch `trimed` run with this seed would draw).
+    pub seed: u64,
+    /// Candidates per engine round (schedule maximum under
+    /// [`StreamOpts::batch_auto`]).
+    pub batch: usize,
+    /// Adaptive round-width schedule (`--batch auto`).
+    pub batch_auto: bool,
+    /// OS threads per batched metric pass (0 leaves the backend's
+    /// setting untouched).
+    pub threads: usize,
+    /// Engine compute kernel for query rounds.
+    pub kernel: Kernel,
+    /// Fast-panel arithmetic (no effect under [`Kernel::Exact`]).
+    pub precision: Precision,
+}
+
+impl Default for StreamOpts {
+    fn default() -> Self {
+        StreamOpts {
+            seed: 0,
+            batch: 1,
+            batch_auto: false,
+            threads: 0,
+            kernel: Kernel::Fast,
+            precision: Precision::F64,
+        }
+    }
+}
+
+impl StreamOpts {
+    /// Adopt an [`ExecConfig`] (CLI flags / `TRIMED_*` environment) with
+    /// the given query seed.
+    pub fn from_exec(exec: &ExecConfig, seed: u64) -> StreamOpts {
+        StreamOpts {
+            seed,
+            batch: exec.batch,
+            batch_auto: exec.batch_auto,
+            threads: exec.threads,
+            kernel: exec.kernel,
+            precision: exec.precision,
+        }
+    }
+}
+
+/// Outcome of one [`StreamingMedoid::medoid`] query.
+#[derive(Clone, Debug)]
+pub struct StreamResult {
+    /// Stable external id of the medoid.
+    pub id: u64,
+    /// Current slot of the medoid (the index a from-scratch run over
+    /// the live set in slot order reports).
+    pub slot: usize,
+    /// The medoid's exact distance sum over the live set.
+    pub sum: f64,
+    /// The paper's energy `E = sum / (n − 1)` (0 for a singleton).
+    pub energy: f64,
+    /// Elements computed by the elimination run (the paper's n̂).
+    pub computed: u64,
+    /// Guard-band refinements the run performed (fast kernel only).
+    pub refined: u64,
+    /// Size of the straddle set the query visited (≤ live count; equals
+    /// it when no incumbent bounds were available).
+    pub candidates: usize,
+}
+
+/// The incumbent medoid between queries: its slot, exact sum, and its
+/// canonical distance row over the live set — the anchor every flux
+/// update shifts bounds through. Points never move, so the row stays
+/// exact across churn (entries are swap-removed/pushed alongside).
+struct Incumbent {
+    slot: usize,
+    sum: f64,
+    row: Vec<f64>,
+}
+
+/// Relative slack subtracted from every lower-bound update and added to
+/// every upper-bound update. One flux update is a handful of additions
+/// on already-sound bounds, so its rounding is within a few ulps
+/// (relative ~1e-15 of the operand magnitudes); 1e-13 covers that with
+/// two orders of magnitude to spare, and slack accumulates additively
+/// across events — after 10⁶ events the bounds are loose by a relative
+/// ~1e-7, still far below the sum gaps elimination feeds on.
+const FLUX_SLACK: f64 = 1e-13;
+
+/// Round a lower-bound update down by the flux slack (non-finite values
+/// pass through — `∞ − ∞` must not manufacture a NaN bound).
+fn deflate(x: f64) -> f64 {
+    if x.is_finite() {
+        x - x.abs() * FLUX_SLACK
+    } else {
+        x
+    }
+}
+
+/// Round an upper-bound update up by the flux slack.
+fn inflate(x: f64) -> f64 {
+    if x.is_finite() {
+        x + x.abs() * FLUX_SLACK
+    } else {
+        x
+    }
+}
+
+/// An exact medoid maintained across insert/remove churn.
+///
+/// Elements are addressed by stable external ids (assigned by
+/// [`StreamingMedoid::insert`], never reused); internally they live in
+/// swap-remove slot order, the order a from-scratch run over
+/// [`StreamingMedoid::points`] sees. See the module docs for the bound
+/// algebra and the exactness argument.
+pub struct StreamingMedoid<M: StreamStore> {
+    metric: M,
+    /// Slot → stable external id.
+    ids: Vec<u64>,
+    /// Stable external id → slot (removals delete their entry, so a
+    /// tombstoned id is indistinguishable from one never issued).
+    slot_of: HashMap<u64, usize>,
+    next_id: u64,
+    /// Per-slot lower bounds on the current distance sum (always sound;
+    /// 0 is the vacuous bound).
+    lb: Vec<f64>,
+    /// Per-slot upper bounds on the current distance sum (∞ when no
+    /// incumbent anchor is available).
+    ub: Vec<f64>,
+    incumbent: Option<Incumbent>,
+    opts: StreamOpts,
+}
+
+impl StreamingMedoid<VectorMetric> {
+    /// Stream over an initial point set (ids `0..n` in row order).
+    pub fn new(points: Points, opts: StreamOpts) -> Self {
+        Self::with_store(VectorMetric::new(points), opts)
+    }
+}
+
+impl<M: StreamStore> StreamingMedoid<M> {
+    /// Stream over a prepared store (e.g. a [`Counted`] wrapper for
+    /// honest per-update distance accounting). Initial elements get ids
+    /// `0..len` in slot order.
+    pub fn with_store(metric: M, opts: StreamOpts) -> Self {
+        let n = metric.len();
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let slot_of = ids.iter().map(|&id| (id, id as usize)).collect();
+        StreamingMedoid {
+            metric,
+            ids,
+            slot_of,
+            next_id: n as u64,
+            lb: vec![0.0; n],
+            ub: vec![f64::INFINITY; n],
+            incumbent: None,
+            opts,
+        }
+    }
+
+    /// Live element count.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// True when no elements are live.
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// The live point set, in slot order.
+    pub fn points(&self) -> &Points {
+        self.metric.points()
+    }
+
+    /// The metric backend (e.g. to read a [`Counted`] wrapper's
+    /// counters).
+    pub fn metric(&self) -> &M {
+        &self.metric
+    }
+
+    /// Stable external ids in slot order.
+    pub fn live_ids(&self) -> &[u64] {
+        &self.ids
+    }
+
+    /// Current slot of a stable id, if it is live.
+    pub fn slot_of(&self, id: u64) -> Option<usize> {
+        self.slot_of.get(&id).copied()
+    }
+
+    /// The maintained per-slot sum bounds `(lb, ub)` — `lb[j] ≤ S(j) ≤
+    /// ub[j]` for every live slot `j` after every event (the churn-fuzz
+    /// suite asserts this directly).
+    pub fn bounds(&self) -> (&[f64], &[f64]) {
+        (&self.lb, &self.ub)
+    }
+
+    /// The incumbent medoid's `(stable id, exact sum)` from the last
+    /// query, if it is still live.
+    pub fn incumbent(&self) -> Option<(u64, f64)> {
+        self.incumbent.as_ref().map(|inc| (self.ids[inc.slot], inc.sum))
+    }
+
+    /// Insert a point; returns its stable id. Costs one counted
+    /// distance (new point to the incumbent) when an incumbent anchor
+    /// is live, zero otherwise.
+    ///
+    /// Flux decay, with `dx = d(x, m)`, `dj = d(m, j)` from the
+    /// incumbent row, and `n'` the post-insert count (all sums are over
+    /// the post-insert set):
+    /// `S'(j) = S(j) + d(x, j)` with `d(x, j) ∈ [|dx − dj|, dx + dj]`,
+    /// so `lb[j] += |dx − dj|` and `ub[j] += dx + dj`; the new element
+    /// is anchored through `m`: `S'(x) ∈ [|S'(m) − n'·dx| , S'(m) +
+    /// n'·dx]` evaluated against `m`'s (already shifted) bounds.
+    ///
+    /// # Panics
+    ///
+    /// If `p.len()` differs from the store's dimension.
+    pub fn insert(&mut self, p: &[f64]) -> u64 {
+        let d = self.metric.points().dim();
+        assert_eq!(p.len(), d, "insert dimension {} does not match store dimension {d}", p.len());
+        let new_slot = self.ids.len();
+        self.metric.points_mut().push(p);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.ids.push(id);
+        self.slot_of.insert(id, new_slot);
+        match &mut self.incumbent {
+            Some(inc) => {
+                let dx = self.metric.dist(inc.slot, new_slot);
+                let nf = (new_slot + 1) as f64;
+                for j in 0..new_slot {
+                    let dj = inc.row[j];
+                    self.lb[j] = deflate(self.lb[j] + (dx - dj).abs()).max(0.0);
+                    self.ub[j] = inflate(self.ub[j] + dx + dj);
+                }
+                let (lbm, ubm) = (self.lb[inc.slot], self.ub[inc.slot]);
+                let lbx = deflate(lbm - nf * dx).max(deflate(nf * dx - ubm)).max(0.0);
+                self.lb.push(lbx);
+                self.ub.push(inflate(ubm + nf * dx));
+                inc.row.push(dx);
+            }
+            None => {
+                // No anchor: lower bounds stay sound (sums only grow on
+                // insert) but every upper bound is now unknown.
+                for u in &mut self.ub {
+                    *u = f64::INFINITY;
+                }
+                self.lb.push(0.0);
+                self.ub.push(f64::INFINITY);
+            }
+        }
+        id
+    }
+
+    /// Remove a live element by stable id. Costs zero distances: the
+    /// incumbent row already holds `d(m, e)` exactly.
+    ///
+    /// Flux decay, with `de = d(m, e)`, `dj = d(m, j)`: removing `e ≠ m`
+    /// gives `S'(j) = S(j) − d(e, j)` with `d(e, j) ∈ [|de − dj|, de +
+    /// dj]`, so `lb[j] −= de + dj` and `ub[j] −= |de − dj|`. Removing
+    /// the incumbent itself shifts every bound by the exactly-known
+    /// `d(m, j)` and drops the anchor (subsequent events degrade until
+    /// the next query re-elects one).
+    ///
+    /// The element's slot is backfilled by the last slot
+    /// ([`Points::swap_remove`]), keeping slot order identical to what a
+    /// bulk rebuild of the surviving rows would produce.
+    ///
+    /// # Panics
+    ///
+    /// If `id` is unknown — never issued, or already removed.
+    pub fn remove(&mut self, id: u64) {
+        let Some(slot) = self.slot_of.remove(&id) else {
+            panic!("remove of unknown id {id}");
+        };
+        let n = self.ids.len();
+        match self.incumbent.take() {
+            Some(inc) if inc.slot == slot => {
+                for j in 0..n {
+                    if j == slot {
+                        continue;
+                    }
+                    let dj = inc.row[j];
+                    self.lb[j] = deflate(self.lb[j] - dj).max(0.0);
+                    self.ub[j] = inflate(self.ub[j] - dj);
+                }
+            }
+            Some(mut inc) => {
+                let de = inc.row[slot];
+                for j in 0..n {
+                    if j == slot {
+                        continue;
+                    }
+                    let dj = inc.row[j];
+                    self.lb[j] = deflate(self.lb[j] - (de + dj)).max(0.0);
+                    self.ub[j] = inflate(self.ub[j] - (de - dj).abs());
+                }
+                inc.row.swap_remove(slot);
+                if inc.slot == n - 1 {
+                    inc.slot = slot;
+                }
+                self.incumbent = Some(inc);
+            }
+            None => {
+                // No anchor to bound the removed element's contribution:
+                // lower bounds reset to vacuous. Upper bounds stay sound
+                // as-is — sums only shrink on remove.
+                for l in &mut self.lb {
+                    *l = 0.0;
+                }
+            }
+        }
+        self.metric.points_mut().swap_remove(slot);
+        self.ids.swap_remove(slot);
+        self.lb.swap_remove(slot);
+        self.ub.swap_remove(slot);
+        if slot < self.ids.len() {
+            self.slot_of.insert(self.ids[slot], slot);
+        }
+    }
+
+    /// Compute the exact medoid of the live set.
+    ///
+    /// Draws the seed's permutation over the live slots, filters it to
+    /// the straddle set (elements whose decayed `lb` does not exceed the
+    /// incumbent's `ub`), and runs the elimination engine over the full
+    /// live universe with the maintained bounds warm-started — see the
+    /// module docs for why this returns the same slot and bit-identical
+    /// energy as a from-scratch run. Afterwards the winner becomes the
+    /// incumbent: its canonical row is refreshed (one counted one-to-all
+    /// pass) and every upper bound is re-anchored through it
+    /// (`S(j) ≤ S(m) + n·d(m, j)`).
+    ///
+    /// # Panics
+    ///
+    /// If the live set is empty.
+    pub fn medoid(&mut self) -> StreamResult {
+        let n = self.ids.len();
+        assert!(n > 0, "medoid query on an empty stream");
+        if self.opts.threads > 0 {
+            self.metric.set_threads(self.opts.threads);
+        }
+        let perm = Rng::new(self.opts.seed).permutation(n);
+        let order: Vec<usize> = match &self.incumbent {
+            // Strict `>` so an exact tie (lb[j] == ub[m], e.g. an exact
+            // duplicate of a tight incumbent) is never dropped; `!(..)`
+            // keeps a NaN-poisoned bound in the straddle set rather
+            // than silently eliminating it.
+            Some(inc) => {
+                let cap = self.ub[inc.slot];
+                perm.into_iter().filter(|&j| !(self.lb[j] > cap)).collect()
+            }
+            None => perm,
+        };
+        let candidates = order.len();
+        let mut rule = BestSumRule::new();
+        let engine_opts = EngineOpts {
+            batch: self.opts.batch,
+            batch_auto: self.opts.batch_auto,
+            kernel: self.opts.kernel,
+            precision: self.opts.precision,
+            ..EngineOpts::default()
+        };
+        let space = FullSpace::new(&self.metric);
+        let run = run_elimination(&space, &order, &mut self.lb, &mut rule, &engine_opts);
+        let (w, sum) = (rule.best_item, rule.best_sum);
+        debug_assert!(w < n, "elimination over a non-empty order must elect a winner");
+        let mut row = vec![0.0; n];
+        self.metric.one_to_all(w, &mut row);
+        let nf = n as f64;
+        for (u, &dj) in self.ub.iter_mut().zip(&row) {
+            *u = inflate(sum + nf * dj);
+        }
+        self.lb[w] = sum;
+        self.ub[w] = sum;
+        self.incumbent = Some(Incumbent { slot: w, sum, row });
+        StreamResult {
+            id: self.ids[w],
+            slot: w,
+            sum,
+            energy: sum_to_energy(sum, n),
+            computed: run.computed,
+            refined: run.refined,
+            candidates,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{trimed_with_opts, TrimedOpts};
+    use crate::data::synthetic::uniform_cube;
+
+    fn opts(seed: u64) -> StreamOpts {
+        StreamOpts { seed, ..StreamOpts::default() }
+    }
+
+    #[test]
+    fn fresh_query_matches_trimed() {
+        let pts = uniform_cube(80, 3, 7);
+        let reference = trimed_with_opts(
+            &VectorMetric::new(pts.clone()),
+            &TrimedOpts { seed: 3, ..TrimedOpts::default() },
+        );
+        let mut s = StreamingMedoid::new(pts, opts(3));
+        let r = s.medoid();
+        assert_eq!(r.slot, reference.medoid);
+        assert!(r.energy == reference.energy, "{} vs {}", r.energy, reference.energy);
+        assert_eq!(r.candidates, 80);
+    }
+
+    #[test]
+    fn repeat_query_visits_only_the_straddle_set() {
+        let pts = uniform_cube(120, 3, 1);
+        let mut s = StreamingMedoid::new(pts, opts(0));
+        let first = s.medoid();
+        let again = s.medoid();
+        assert_eq!(again.slot, first.slot);
+        assert!(again.energy == first.energy);
+        // Post-query bounds are anchored, so a no-churn repeat query
+        // must not revisit the whole set.
+        assert!(again.candidates < 120, "straddle set {} did not shrink", again.candidates);
+    }
+
+    #[test]
+    fn ids_stay_stable_across_swap_remove() {
+        let pts = uniform_cube(10, 2, 5);
+        let mut s = StreamingMedoid::new(pts, opts(0));
+        let extra = s.insert(&[0.5, 0.5]);
+        assert_eq!(extra, 10);
+        s.remove(3); // last slot (the new point) backfills slot 3
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.slot_of(extra), Some(3));
+        assert_eq!(s.live_ids()[3], extra);
+        assert_eq!(s.slot_of(3), None);
+        s.remove(extra);
+        assert_eq!(s.len(), 9);
+        assert_eq!(s.slot_of(extra), None);
+    }
+
+    #[test]
+    fn bounds_stay_sound_through_churn() {
+        let pts = uniform_cube(40, 3, 11);
+        let mut s = StreamingMedoid::new(pts, opts(2));
+        s.medoid();
+        let mut gen = Rng::new(99);
+        for step in 0..30 {
+            if gen.bernoulli(0.5) && s.len() > 2 {
+                let ids = s.live_ids().to_vec();
+                s.remove(ids[gen.below(ids.len())]);
+            } else {
+                let p: Vec<f64> = (0..3).map(|_| gen.f64()).collect();
+                s.insert(&p);
+            }
+            let m = VectorMetric::new(s.points().clone());
+            let n = m.len();
+            let mut row = vec![0.0; n];
+            let (lb, ub) = s.bounds();
+            for j in 0..n {
+                m.one_to_all(j, &mut row);
+                let truth: f64 = row.iter().sum();
+                assert!(lb[j] <= truth * (1.0 + 1e-12) + 1e-9, "step {step} slot {j}: lb");
+                assert!(ub[j] >= truth * (1.0 - 1e-12) - 1e-9, "step {step} slot {j}: ub");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match store dimension")]
+    fn insert_wrong_dimension_panics() {
+        let mut s = StreamingMedoid::new(uniform_cube(5, 3, 0), opts(0));
+        s.insert(&[1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "remove of unknown id")]
+    fn remove_unknown_id_panics() {
+        let mut s = StreamingMedoid::new(uniform_cube(5, 2, 0), opts(0));
+        s.remove(17);
+    }
+
+    #[test]
+    #[should_panic(expected = "remove of unknown id")]
+    fn remove_tombstoned_id_panics() {
+        let mut s = StreamingMedoid::new(uniform_cube(5, 2, 0), opts(0));
+        s.remove(2);
+        s.remove(2);
+    }
+
+    #[test]
+    #[should_panic(expected = "medoid query on an empty stream")]
+    fn query_empty_stream_panics() {
+        let mut s = StreamingMedoid::new(Points::new(2, Vec::new()), opts(0));
+        s.medoid();
+    }
+}

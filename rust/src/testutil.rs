@@ -1,10 +1,18 @@
 //! Lightweight seeded property-testing helper (no proptest in the offline
-//! vendor set).
+//! vendor set), plus the shared dataset zoo the property suites run over.
 //!
 //! [`check`] runs a predicate over `cases` seeded RNGs and reports the
 //! failing seed, so a failure reproduces with
 //! `check_one(<seed>, |rng| ...)`.
+//!
+//! [`dataset_zoo`] is the single audited source of the stress datasets
+//! (`kernel_property.rs`, `engine_property.rs`, `streaming_property.rs`
+//! all draw from it): bit-level guarantees are only as strong as the
+//! data they are pinned on, so the adversarial shapes live in one place
+//! and every suite exercises the same bytes.
 
+use crate::data::synthetic::uniform_cube;
+use crate::data::Points;
 use crate::rng::Rng;
 
 /// Run `prop` over `cases` independent seeded RNGs derived from
@@ -41,6 +49,66 @@ pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
     }
 }
 
+/// The PR 2 adversarial dataset: uniform-cube shape blown up to ~1e12
+/// coordinates, where float rounding at the norm scale dwarfs distance
+/// gaps between near-ties.
+pub fn adversarial_points(n: usize, d: usize, seed: u64) -> Points {
+    let base = uniform_cube(n, d, seed);
+    let data: Vec<f64> = base.flat().iter().map(|v| 1e12 * (v + 1.0)).collect();
+    Points::new(d, data)
+}
+
+/// Ten exactly-duplicated clusters → exactly tied sums; the ordering
+/// contracts must hold under the guard band too.
+pub fn duplicate_points() -> Points {
+    let mut data = Vec::new();
+    for _ in 0..10 {
+        data.extend_from_slice(&[1.0, 1.0]);
+    }
+    for _ in 0..6 {
+        data.extend_from_slice(&[2.0, 2.0]);
+    }
+    data.extend_from_slice(&[5.0, 5.0, 0.0, 3.0]);
+    Points::new(2, data)
+}
+
+/// Uncentered norm-dominated data: a tiny cloud (spread ~1e-6) sitting
+/// at offset ~1e6, so squared norms (~1e12) dwarf squared distances
+/// (~1e-12) by ~24 decimal orders — far beyond f32's ~7 digits. The f32
+/// panel band can then exclude nothing, but the guard must make the
+/// answer *correct*, not fast.
+pub fn norm_dominated_points(n: usize, d: usize, seed: u64) -> Points {
+    let base = uniform_cube(n, d, seed);
+    let data: Vec<f64> = base.flat().iter().map(|v| 1e6 + 1e-6 * v).collect();
+    Points::new(d, data)
+}
+
+/// The stress-dataset zoo the property suites iterate: benign cubes at
+/// two dimensionalities, exact duplicates (tied sums), the 1e12-scale
+/// adversarial set and the uncentered norm-dominated set.
+pub fn dataset_zoo() -> Vec<(&'static str, Points)> {
+    if cfg!(miri) {
+        // Interpreted execution: same dataset *shapes* at sizes Miri can
+        // walk in reasonable time — the UB coverage (every branch of the
+        // portable kernels, the guard band, tie handling) is identical,
+        // only the statistics shrink.
+        return vec![
+            ("cube-60x3", uniform_cube(60, 3, 1)),
+            ("cube-40x10", uniform_cube(40, 10, 5)),
+            ("duplicates", duplicate_points()),
+            ("adversarial-1e12", adversarial_points(40, 3, 31)),
+            ("norm-dominated-1e6", norm_dominated_points(40, 3, 13)),
+        ];
+    }
+    vec![
+        ("cube-700x3", uniform_cube(700, 3, 1)),
+        ("cube-500x10", uniform_cube(500, 10, 5)),
+        ("duplicates", duplicate_points()),
+        ("adversarial-1e12", adversarial_points(400, 3, 31)),
+        ("norm-dominated-1e6", norm_dominated_points(300, 3, 13)),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -55,6 +123,22 @@ mod tests {
                 Err(format!("out of range {x}"))
             }
         });
+    }
+
+    #[test]
+    fn zoo_has_documented_shapes() {
+        let zoo = dataset_zoo();
+        assert_eq!(zoo.len(), 5);
+        assert!(zoo.iter().all(|(_, p)| !p.is_empty()));
+        // 10 + 6 + 2 points, exact duplicates leading.
+        let dup = duplicate_points();
+        assert_eq!(dup.len(), 18);
+        assert_eq!(dup.row(0), dup.row(9));
+        // ~1e12 coordinates → squared norms ~1e24.
+        assert!(adversarial_points(8, 3, 31).max_sq_norm() > 1e24);
+        // Offset ~1e6 with ~1e-6 spread.
+        let nd = norm_dominated_points(8, 3, 13);
+        assert!((nd.row(0)[0] - 1e6).abs() < 1.0);
     }
 
     #[test]

@@ -20,13 +20,13 @@
 
 use trimed::algo::{scan_medoid, trimed_with_opts, TrimedOpts};
 use trimed::data::synthetic::uniform_cube;
-use trimed::data::Points;
 use trimed::engine::Kernel;
 use trimed::graph::generators::preferential_attachment;
 use trimed::graph::GraphMetric;
 use trimed::harness::ExecConfig;
 use trimed::metric::{Counted, MetricSpace, VectorMetric};
 use trimed::rng::Rng;
+use trimed::testutil::adversarial_points;
 
 /// Frozen copy of the sequential trimed (paper Alg. 1), as the seed
 /// implemented it with one PR 2 amendment mirrored from the engine: a
@@ -323,9 +323,9 @@ fn computed_bounds_exact_at_adversarial_scale() {
     // the computed S(j). Computed elements' bounds must stay *bit-equal*
     // to their sums, and every bound must stay sound up to a relative
     // epsilon far below the old failure size.
-    let base = uniform_cube(if cfg!(miri) { 60 } else { 400 }, 3, 31);
-    let data: Vec<f64> = base.flat().iter().map(|v| 1e12 * (v + 1.0)).collect();
-    let m = VectorMetric::new(Points::new(3, data));
+    // The shared-zoo adversarial set (same bytes kernel_property and
+    // streaming_property pin their guarantees on).
+    let m = VectorMetric::new(adversarial_points(if cfg!(miri) { 60 } else { 400 }, 3, 31));
     let n = m.len();
     let mut row = vec![0.0; n];
     for (batch, auto) in [(1usize, false), (8, false), (64, true)] {

@@ -19,68 +19,14 @@ use trimed::algo::{
     trimed_topk_with_opts, trimed_with_opts, TrimedOpts,
 };
 use trimed::data::synthetic::uniform_cube;
-use trimed::data::Points;
 use trimed::engine::{Kernel, Precision};
 use trimed::kmedoids::trikmeds::TrikmedsInit;
 use trimed::kmedoids::{trikmeds, TrikmedsOpts};
 use trimed::metric::{Counted, MetricSpace, VectorMetric};
-
-/// The PR 2 adversarial dataset: uniform-cube shape blown up to ~1e12
-/// coordinates, where float rounding at the norm scale dwarfs distance
-/// gaps between near-ties.
-fn adversarial_points(n: usize, d: usize, seed: u64) -> Points {
-    let base = uniform_cube(n, d, seed);
-    let data: Vec<f64> = base.flat().iter().map(|v| 1e12 * (v + 1.0)).collect();
-    Points::new(d, data)
-}
-
-/// Ten exactly-duplicated clusters → exactly tied sums; the ordering
-/// contracts must hold under the guard band too.
-fn duplicate_points() -> Points {
-    let mut data = Vec::new();
-    for _ in 0..10 {
-        data.extend_from_slice(&[1.0, 1.0]);
-    }
-    for _ in 0..6 {
-        data.extend_from_slice(&[2.0, 2.0]);
-    }
-    data.extend_from_slice(&[5.0, 5.0, 0.0, 3.0]);
-    Points::new(2, data)
-}
-
-/// Uncentered norm-dominated data: a tiny cloud (spread ~1e-6) sitting
-/// at offset ~1e6, so squared norms (~1e12) dwarf squared distances
-/// (~1e-12) by ~24 decimal orders — far beyond f32's ~7 digits. The f32
-/// panel band can then exclude nothing, but the guard must make the
-/// answer *correct*, not fast.
-fn norm_dominated_points(n: usize, d: usize, seed: u64) -> Points {
-    let base = uniform_cube(n, d, seed);
-    let data: Vec<f64> = base.flat().iter().map(|v| 1e6 + 1e-6 * v).collect();
-    Points::new(d, data)
-}
-
-fn datasets() -> Vec<(&'static str, Points)> {
-    if cfg!(miri) {
-        // Interpreted execution: same dataset *shapes* at sizes Miri can
-        // walk in reasonable time — the UB coverage (every branch of the
-        // portable kernels, the guard band, tie handling) is identical,
-        // only the statistics shrink.
-        return vec![
-            ("cube-60x3", uniform_cube(60, 3, 1)),
-            ("cube-40x10", uniform_cube(40, 10, 5)),
-            ("duplicates", duplicate_points()),
-            ("adversarial-1e12", adversarial_points(40, 3, 31)),
-            ("norm-dominated-1e6", norm_dominated_points(40, 3, 13)),
-        ];
-    }
-    vec![
-        ("cube-700x3", uniform_cube(700, 3, 1)),
-        ("cube-500x10", uniform_cube(500, 10, 5)),
-        ("duplicates", duplicate_points()),
-        ("adversarial-1e12", adversarial_points(400, 3, 31)),
-        ("norm-dominated-1e6", norm_dominated_points(300, 3, 13)),
-    ]
-}
+// The stress datasets (duplicates, 1e12 adversarial, norm-dominated, the
+// miri-size switch) live in the shared zoo so every property suite pins
+// its guarantees on the same bytes.
+use trimed::testutil::{dataset_zoo as datasets, norm_dominated_points};
 
 #[test]
 fn fast_and_exact_trimed_identical_medoid_and_bits() {

@@ -1,0 +1,346 @@
+//! Differential churn-fuzz suite for the streaming medoid layer
+//! (`streaming` module docs, DESIGN.md §Streaming medoid maintenance):
+//!
+//! * **Bit-identity under churn**: at every query point of a seeded
+//!   insert/remove/query trace, [`StreamingMedoid::medoid`] returns the
+//!   same slot and bit-identical energy as a from-scratch
+//!   [`trimed_with_opts`] run over a fresh copy of the live set — across
+//!   the dataset zoo (duplicates and the 1e12 adversarial set included)
+//!   × kernel {exact, fast} × precision {f64, f32} × batch {1, auto} ×
+//!   thread counts.
+//! * **Bound-decay soundness**: the maintained `lb`/`ub` straddle every
+//!   live element's true sum after *every* flux event, including the
+//!   degraded incumbent-less path.
+//! * **Amortised accounting**: on a drift-trace workload the distances
+//!   charged to the incremental path stay strictly below re-running
+//!   trimed from scratch at every update, and each warm query's backend
+//!   passes match `computed + refined + 1` exactly.
+//! * The `TRIMED_*` env leg CI drives with `--kernel fast --precision
+//!   f32` over this suite, cross-checked against the sequential exact
+//!   kernel.
+
+use trimed::algo::{trimed_with_opts, TrimedOpts};
+use trimed::data::synthetic::uniform_cube;
+use trimed::data::Points;
+use trimed::engine::{Kernel, Precision};
+use trimed::harness::ExecConfig;
+use trimed::metric::{Counted, MetricSpace, VectorMetric};
+use trimed::rng::Rng;
+use trimed::streaming::{StreamOpts, StreamStore, StreamingMedoid};
+use trimed::testutil::dataset_zoo;
+
+/// The from-scratch options equivalent to a streaming query: same seed
+/// (hence the same visit permutation) and the same engine knobs.
+fn trimed_opts(o: &StreamOpts) -> TrimedOpts {
+    TrimedOpts {
+        seed: o.seed,
+        batch: o.batch,
+        batch_auto: o.batch_auto,
+        threads: o.threads,
+        kernel: o.kernel,
+        precision: o.precision,
+        ..TrimedOpts::default()
+    }
+}
+
+/// Query the stream and assert slot + energy-bit identity against a
+/// from-scratch trimed run over a fresh copy of the live set.
+fn assert_query<M: StreamStore>(name: &str, s: &mut StreamingMedoid<M>, opts: &StreamOpts) {
+    let reference = trimed_with_opts(&VectorMetric::new(s.points().clone()), &trimed_opts(opts));
+    let r = s.medoid();
+    assert!(r.candidates <= s.len());
+    assert_eq!(
+        r.slot,
+        reference.medoid,
+        "{name} n={}: streaming medoid slot diverged from from-scratch trimed",
+        s.len()
+    );
+    assert!(
+        r.energy == reference.energy,
+        "{name} n={}: energy bits diverged: {} vs {}",
+        s.len(),
+        r.energy,
+        reference.energy
+    );
+}
+
+/// Assert `lb[j] ≤ S(j) ≤ ub[j]` for every live slot against canonical
+/// sums (the suite-wide f64 tolerance convention).
+fn assert_bounds_sound<M: StreamStore>(name: &str, s: &StreamingMedoid<M>, step: usize) {
+    let m = VectorMetric::new(s.points().clone());
+    let n = m.len();
+    let mut row = vec![0.0; n];
+    let (lb, ub) = s.bounds();
+    for j in 0..n {
+        m.one_to_all(j, &mut row);
+        let truth: f64 = row.iter().sum();
+        assert!(
+            lb[j] <= truth * (1.0 + 1e-12) + 1e-9,
+            "{name} step {step} slot {j}: lb {} above true sum {truth}",
+            lb[j]
+        );
+        assert!(
+            ub[j] >= truth * (1.0 - 1e-12) - 1e-9,
+            "{name} step {step} slot {j}: ub {} below true sum {truth}",
+            ub[j]
+        );
+    }
+}
+
+/// Draw an insert near the live distribution: a random live row, exactly
+/// duplicated 30% of the time (tied sums must survive churn), otherwise
+/// perturbed relative to its own coordinate scale so the adversarial
+/// 1e12 and norm-dominated 1e6 sets stay at their stress scales.
+fn sample_insert(gen: &mut Rng, pts: &Points) -> Vec<f64> {
+    let base = pts.row(gen.below(pts.len()));
+    if gen.bernoulli(0.3) {
+        return base.to_vec();
+    }
+    base.iter()
+        .map(|&v| v * (1.0 + 1e-3 * (gen.f64() - 0.5)) + 1e-3 * (gen.f64() - 0.5))
+        .collect()
+}
+
+/// Drive one seeded churn trace: a cold query, then `events` random
+/// inserts/removes with a differential query every third event.
+fn run_churn_trace(name: &str, pts: &Points, opts: &StreamOpts, trace_seed: u64, events: usize) {
+    let mut s = StreamingMedoid::new(pts.clone(), opts.clone());
+    assert_query(name, &mut s, opts);
+    let mut gen = Rng::new(trace_seed);
+    for ev in 0..events {
+        if gen.bernoulli(0.4) && s.len() > 3 {
+            let ids = s.live_ids().to_vec();
+            s.remove(ids[gen.below(ids.len())]);
+        } else {
+            let p = sample_insert(&mut gen, s.points());
+            s.insert(&p);
+        }
+        if ev % 3 == 2 {
+            assert_query(name, &mut s, opts);
+        }
+    }
+}
+
+#[test]
+fn churn_differential_across_zoo_and_config_matrix() {
+    // The full exactness matrix from the module contract. Under Miri the
+    // zoo itself shrinks (testutil) and the trace/matrix shrink with it;
+    // the branch coverage (both kernels, both precisions, warm + cold
+    // queries, duplicate ties, swap-remove backfills) is identical.
+    let kernels: &[(Kernel, Precision)] = &[
+        (Kernel::Exact, Precision::F64),
+        (Kernel::Exact, Precision::F32),
+        (Kernel::Fast, Precision::F64),
+        (Kernel::Fast, Precision::F32),
+    ];
+    let batches: &[(usize, bool)] =
+        if cfg!(miri) { &[(1, false), (8, true)] } else { &[(1, false), (64, true)] };
+    let threads: &[usize] = if cfg!(miri) { &[1] } else { &[1, 4] };
+    let events = if cfg!(miri) { 9 } else { 36 };
+    for (name, pts) in dataset_zoo() {
+        for (ki, &(kernel, precision)) in kernels.iter().enumerate() {
+            for &(batch, batch_auto) in batches {
+                for &t in threads {
+                    let opts = StreamOpts {
+                        seed: 5,
+                        batch,
+                        batch_auto,
+                        threads: t,
+                        kernel,
+                        precision,
+                    };
+                    run_churn_trace(name, &pts, &opts, 0xC0FFEE + ki as u64, events);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bounds_sound_after_every_flux_event_across_zoo() {
+    for (i, (name, pts)) in dataset_zoo().into_iter().enumerate() {
+        let mut s = StreamingMedoid::new(pts, StreamOpts { seed: 4, ..StreamOpts::default() });
+        s.medoid();
+        // Kill the anchor first: the degraded incumbent-less decay paths
+        // (lb reset on remove, ub reset on insert) must stay sound too.
+        let (inc_id, _) = s.incumbent().expect("query just elected an incumbent");
+        s.remove(inc_id);
+        assert_bounds_sound(name, &s, 0);
+        let mut gen = Rng::new(1000 + i as u64);
+        let events = if cfg!(miri) { 8 } else { 24 };
+        for ev in 1..=events {
+            if gen.bernoulli(0.5) && s.len() > 3 {
+                let ids = s.live_ids().to_vec();
+                s.remove(ids[gen.below(ids.len())]);
+            } else {
+                let p = sample_insert(&mut gen, s.points());
+                s.insert(&p);
+            }
+            assert_bounds_sound(name, &s, ev);
+            // Re-anchor mid-trace so later events decay tight post-query
+            // bounds, not only loose drifted ones.
+            if ev % 6 == 0 {
+                s.medoid();
+                assert_bounds_sound(name, &s, ev);
+            }
+        }
+    }
+}
+
+#[test]
+fn counted_incremental_work_stays_below_from_scratch_per_update() {
+    // Sliding-window drift: every update inserts a fresh point near a
+    // moving center and retires the oldest live element, then queries.
+    // The incremental path must (a) stay differentially exact, (b)
+    // charge exactly `computed + refined + 1` backend passes per warm
+    // query (elimination passes plus the incumbent-row refresh) and one
+    // distance per insert, and (c) spend strictly fewer total distances
+    // than re-running trimed from scratch at every update.
+    let n0 = if cfg!(miri) { 40 } else { 300 };
+    let updates = if cfg!(miri) { 8 } else { 40 };
+    let d = 3;
+    let opts = StreamOpts { seed: 9, ..StreamOpts::default() };
+    let mut s = StreamingMedoid::with_store(
+        Counted::new(VectorMetric::new(uniform_cube(n0, d, 21))),
+        opts.clone(),
+    );
+    let mut oldest: std::collections::VecDeque<u64> = s.live_ids().to_vec().into();
+    let mut scratch_dists: u64 = 0;
+
+    // The warm-up query is a from-scratch run on both sides.
+    assert_query("drift", &mut s, &opts);
+    scratch_dists += counted_scratch_dists(s.points(), &opts);
+
+    let mut gen = Rng::new(77);
+    for upd in 0..updates {
+        let t = upd as f64 / updates as f64;
+        let p: Vec<f64> = (0..d).map(|_| t + 0.2 * gen.f64()).collect();
+        oldest.push_back(s.insert(&p));
+        s.remove(oldest.pop_front().expect("window is never empty"));
+
+        let before = s.metric().counts().one_to_all;
+        let reference = trimed_with_opts(
+            &VectorMetric::new(s.points().clone()),
+            &trimed_opts(&opts),
+        );
+        let r = s.medoid();
+        assert_eq!(r.slot, reference.medoid, "update {upd}: drift medoid diverged");
+        assert!(r.energy == reference.energy, "update {upd}: drift energy bits diverged");
+        assert_eq!(
+            s.metric().counts().one_to_all - before,
+            r.computed + r.refined + 1,
+            "update {upd}: per-query backend pass accounting"
+        );
+        scratch_dists += counted_scratch_dists(s.points(), &opts);
+    }
+
+    let incremental = s.metric().counts().dists;
+    assert!(
+        incremental < scratch_dists,
+        "incremental path spent {incremental} distances vs {scratch_dists} from scratch \
+         over {updates} updates — streaming amortisation regressed"
+    );
+}
+
+/// Distances a from-scratch trimed run over `pts` charges, measured with
+/// its own counter.
+fn counted_scratch_dists(pts: &Points, opts: &StreamOpts) -> u64 {
+    let cm = Counted::new(VectorMetric::new(pts.clone()));
+    trimed_with_opts(&cm, &trimed_opts(opts));
+    cm.counts().dists
+}
+
+#[test]
+fn churned_store_caches_match_bulk_rebuild() {
+    // Integration-level mirror coherence: materialize the f32 mirror,
+    // churn through the streaming layer (push + swap_remove underneath),
+    // then rebuild Points from the surviving rows. Every derived cache
+    // must be bitwise equal, and an f32 fast query on the churned store
+    // must match the exact kernel bit for bit.
+    let n = if cfg!(miri) { 24 } else { 60 };
+    let mut pts = uniform_cube(n, 4, 17);
+    let _ = pts.rows_f32();
+    let mut s = StreamingMedoid::new(pts, StreamOpts { seed: 2, ..StreamOpts::default() });
+    s.medoid();
+    let mut gen = Rng::new(3);
+    for _ in 0..(n / 2) {
+        if gen.bernoulli(0.5) && s.len() > 3 {
+            let ids = s.live_ids().to_vec();
+            s.remove(ids[gen.below(ids.len())]);
+        } else {
+            let p = sample_insert(&mut gen, s.points());
+            s.insert(&p);
+        }
+    }
+
+    let live = s.points();
+    let mut flat = Vec::with_capacity(live.len() * 4);
+    for j in 0..live.len() {
+        flat.extend_from_slice(live.row(j));
+    }
+    let rebuilt = Points::new(4, flat);
+    assert_eq!(live.flat(), rebuilt.flat());
+    assert_eq!(live.sq_norms(), rebuilt.sq_norms());
+    assert!(live.max_sq_norm() == rebuilt.max_sq_norm(), "max_sq_norm bits diverged");
+    assert!(
+        live.sum_root_norms() == rebuilt.sum_root_norms(),
+        "sum_root_norms bits diverged: {} vs {}",
+        live.sum_root_norms(),
+        rebuilt.sum_root_norms()
+    );
+    assert_eq!(live.rows_f32(), rebuilt.rows_f32());
+    assert_eq!(live.sq_norms_f32(), rebuilt.sq_norms_f32());
+    assert!(live.max_sq_norm_f32() == rebuilt.max_sq_norm_f32(), "f32 max norm bits diverged");
+
+    let run = |kernel, precision| {
+        trimed_with_opts(
+            &VectorMetric::new(s.points().clone()),
+            &TrimedOpts { seed: 6, batch: 8, kernel, precision, ..TrimedOpts::default() },
+        )
+    };
+    let e = run(Kernel::Exact, Precision::F64);
+    let f = run(Kernel::Fast, Precision::F32);
+    assert_eq!(f.medoid, e.medoid);
+    assert!(f.energy == e.energy, "churned-store f32 energy bits diverged");
+}
+
+#[test]
+fn env_exec_config_streaming_stays_exact() {
+    // The CI streaming env leg sets TRIMED_KERNEL / TRIMED_PRECISION /
+    // TRIMED_BATCH / TRIMED_THREADS and re-runs this test; locally it
+    // exercises the sequential fast/f64 default. Whatever the
+    // configuration, the trace must stay differentially exact against a
+    // from-scratch run under the *same* config, and the final answer
+    // must match the sequential exact kernel bit for bit.
+    let exec = ExecConfig::from_env();
+    let opts = StreamOpts::from_exec(&exec, 11);
+    let pts = uniform_cube(if cfg!(miri) { 40 } else { 250 }, 3, 29);
+    let mut s = StreamingMedoid::new(pts, opts.clone());
+    assert_query("env", &mut s, &opts);
+    let mut gen = Rng::new(0xE2);
+    let events = if cfg!(miri) { 9 } else { 30 };
+    for ev in 0..events {
+        if gen.bernoulli(0.4) && s.len() > 3 {
+            let ids = s.live_ids().to_vec();
+            s.remove(ids[gen.below(ids.len())]);
+        } else {
+            let p = sample_insert(&mut gen, s.points());
+            s.insert(&p);
+        }
+        if ev % 3 == 2 {
+            assert_query("env", &mut s, &opts);
+        }
+    }
+    let exact_ref = trimed_with_opts(
+        &VectorMetric::new(s.points().clone()),
+        &TrimedOpts { seed: opts.seed, kernel: Kernel::Exact, ..TrimedOpts::default() },
+    );
+    let r = s.medoid();
+    assert_eq!(r.slot, exact_ref.medoid, "env config diverged from sequential exact reference");
+    assert!(
+        r.energy == exact_ref.energy,
+        "env config energy bits diverged from sequential exact reference: {} vs {}",
+        r.energy,
+        exact_ref.energy
+    );
+}
