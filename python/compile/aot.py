@@ -31,6 +31,10 @@ N_PADS = (4096, 16384, 65536)
 DIMS = (2, 3, 4, 5, 6, 9, 50)
 # A tiny variant so tests exercise the full path quickly.
 SMOKE = (512, 2)
+# Queries per dispatch for the batched `many_to_all` artifact. Static (a
+# separate HLO per B would multiply the grid); the runtime chunks larger
+# requests and pads short final blocks by repeating the last real query.
+MANY_BATCH = 8
 
 
 def to_hlo_text(lowered) -> str:
@@ -63,6 +67,15 @@ def lower_one_to_all(n_pad: int, d: int) -> str:
     return to_hlo_text(lowered)
 
 
+def lower_many_to_all(n_pad: int, d: int) -> str:
+    spec_pts = jax.ShapeDtypeStruct((n_pad, d), jnp.float32)
+    spec_q = jax.ShapeDtypeStruct((MANY_BATCH, d), jnp.float32)
+    spec_1 = jax.ShapeDtypeStruct((1,), jnp.float32)
+    fn = functools.partial(model.many_to_all, tile=cpu_tile(n_pad))
+    lowered = jax.jit(fn).lower(spec_q, spec_pts, spec_1)
+    return to_hlo_text(lowered)
+
+
 def lower_trimed_step(n_pad: int, d: int) -> str:
     spec_pts = jax.ShapeDtypeStruct((n_pad, d), jnp.float32)
     spec_q = jax.ShapeDtypeStruct((d,), jnp.float32)
@@ -73,9 +86,12 @@ def lower_trimed_step(n_pad: int, d: int) -> str:
     return to_hlo_text(lowered)
 
 
+# op -> (lowering fn, queries per dispatch). b lands in the manifest so
+# the Rust registry knows each artifact's query-block shape.
 OPS = {
-    "one_to_all": lower_one_to_all,
-    "trimed_step": lower_trimed_step,
+    "one_to_all": (lower_one_to_all, 1),
+    "many_to_all": (lower_many_to_all, MANY_BATCH),
+    "trimed_step": (lower_trimed_step, 1),
 }
 
 
@@ -95,19 +111,19 @@ def main() -> None:
     ]
 
     rows = []
-    for op, lower in OPS.items():
+    for op, (lower, b) in OPS.items():
         for n_pad, d in variants:
             name = f"{op}_n{n_pad}_d{d}"
             path = os.path.join(args.out, f"{name}.hlo.txt")
             text = lower(n_pad, d)
             with open(path, "w") as f:
                 f.write(text)
-            rows.append((name, op, n_pad, d, cpu_tile(n_pad), f"{name}.hlo.txt"))
+            rows.append((name, op, n_pad, d, cpu_tile(n_pad), b, f"{name}.hlo.txt"))
             print(f"wrote {path} ({len(text)} chars)")
 
     manifest = os.path.join(args.out, "manifest.tsv")
     with open(manifest, "w") as f:
-        f.write("# name\top\tn_pad\td\ttile\tfile\n")
+        f.write("# name\top\tn_pad\td\ttile\tb\tfile\n")
         for r in rows:
             f.write("\t".join(str(x) for x in r) + "\n")
     print(f"wrote {manifest} ({len(rows)} artifacts)")

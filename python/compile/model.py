@@ -12,6 +12,7 @@ is identical to the last row), so the Rust side gets the true sum without a
 second pass. `n_true` (the unpadded N) scales the bound update.
 """
 
+import jax
 import jax.numpy as jnp
 
 from .kernels.bound import bound_update
@@ -40,6 +41,30 @@ def one_to_all(query, points, pad_count, *, tile=None):
     dists = one_to_all_dists(query, points, **kw)
     s = jnp.sum(dists) - pad_count[0] * dists[-1]
     return dists, s.reshape(1)
+
+
+def many_to_all(queries, points, pad_count, *, tile=None):
+    """Distances from B queries to all rows plus per-query corrected sums.
+
+    The multi-query variant of `one_to_all` for the engine's batched
+    rounds (k-medoids candidate blocks, the elimination engine's panel
+    rows): one dispatch amortises the per-execute host round-trip that
+    dominates when the Rust side loops the single-query artifact B times.
+
+    Args:
+      queries: (B, d) f32 — B is static (baked into the artifact); the
+        runtime pads short final blocks by repeating the last real query.
+      points: (N_pad, d) f32, tail-padded.
+      pad_count: (1,) f32.
+      tile: Pallas grid tile (static), as in `one_to_all`.
+
+    Returns `(dists (B, N_pad), sums (B,))`, each sum pad-corrected the
+    same way as `one_to_all` (exact because pads copy the last real row).
+    """
+    kw = {} if tile is None else {"tile": tile}
+    dists = jax.vmap(lambda q: one_to_all_dists(q, points, **kw))(queries)
+    sums = jnp.sum(dists, axis=1) - pad_count[0] * dists[:, -1]
+    return dists, sums
 
 
 def trimed_step(query, points, lb, n_true, pad_count, *, tile=None):

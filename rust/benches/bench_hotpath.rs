@@ -20,23 +20,32 @@
 //!   and fanned out across threads;
 //! * end-to-end trimed wall time: sequential vs fixed-batch vs adaptive
 //!   (`--batch auto`) engine rounds at several thread counts, fast
-//!   (default) and exact kernels.
+//!   (default) and exact kernels;
+//! * FasterPAM swap-phase wall time (`fasterpam_swap` records) across
+//!   swap strategies and thread counts, with the fast-vs-exact trajectory
+//!   asserted identical before timing;
+//! * the three-way k-medoids A/B (`kmedoids_ab` records): KMEDS vs
+//!   trikmeds vs FasterPAM from one shared init.
 //!
 //! Run: cargo bench --bench bench_hotpath
 //! Set TRIMED_BENCH_JSON=path to also write the records as JSON
-//! (BENCH_PR6.json schema, a superset of BENCH_PR2/PR5's). Set
+//! (BENCH_PR9.json schema, a superset of BENCH_PR2/PR5/PR6's). Set
 //! TRIMED_BENCH_N to shrink the point count (CI smoke runs use 4000; the
 //! default 50000 is the acceptance size).
 
 use trimed::algo::{trimed_medoid, trimed_with_opts, TrimedOpts};
 use trimed::data::simd::{kernel_name, squared_euclidean_portable};
-use trimed::data::synthetic::uniform_cube;
+use trimed::data::synthetic::{gauss_mix, uniform_cube};
 use trimed::engine::{Kernel, Precision};
 use trimed::graph::dijkstra::dijkstra_all;
 use trimed::graph::generators::road_network;
 use trimed::harness::available_threads;
 use trimed::harness::bench::{fmt_ns, time_block};
-use trimed::metric::{FastScratch, MetricSpace, VectorMetric, XlaVectorMetric};
+use trimed::kmedoids::trikmeds::TrikmedsInit;
+use trimed::kmedoids::{
+    fasterpam, kmeds, trikmeds, FasterPamOpts, Init, KmedsOpts, SwapStrategy, TrikmedsOpts,
+};
+use trimed::metric::{Counted, FastScratch, MetricSpace, VectorMetric, XlaVectorMetric};
 use trimed::runtime::{artifacts_available, Runtime};
 
 /// One benchmark record for the JSON perf trajectory.
@@ -426,7 +435,142 @@ fn main() {
         }
     }
 
-    println!("\nBENCH_PR6 records:\n{}", json(&records));
+    // FasterPAM swap phase (PR 9): wall time per full local search across
+    // swap strategies and thread counts. The fast-kernel trajectory is
+    // asserted identical to the exact-kernel one before timing — the
+    // guard-band invariance contract of kmedoids/fasterpam.rs.
+    println!();
+    {
+        let nk = n.min(5_000);
+        let k = 20usize.min(nk);
+        let pts = gauss_mix(nk, 3, k, 0.05, 7);
+        let m = VectorMetric::new(pts);
+        for swap in [SwapStrategy::Eager, SwapStrategy::Steepest] {
+            let reference = fasterpam(
+                &m,
+                &FasterPamOpts {
+                    init: Init::Uniform(11),
+                    swap,
+                    kernel: Kernel::Exact,
+                    batch: 1,
+                    threads: 1,
+                    ..FasterPamOpts::new(k)
+                },
+            );
+            for threads in [1usize, max_threads] {
+                let opts = FasterPamOpts {
+                    init: Init::Uniform(11),
+                    swap,
+                    batch: 64,
+                    threads,
+                    ..FasterPamOpts::new(k)
+                };
+                let cm = Counted::new(&m);
+                let r = fasterpam(&cm, &opts);
+                assert_eq!(r.medoids, reference.medoids, "fast/exact trajectories diverged");
+                assert!(r.loss == reference.loss, "loss bits diverged");
+                let rows = cm.counts().one_to_all;
+                let stats = time_block(1, 5, || {
+                    let _ = fasterpam(&m, &opts);
+                });
+                println!(
+                    "fasterpam {}  N={nk} K={k} t={threads}: {} per search \
+                     (loss {:.3}, {} sweeps, {} swaps, {rows} rows)",
+                    swap.name(),
+                    fmt_ns(stats.median_ns),
+                    r.loss,
+                    r.iterations,
+                    r.swaps
+                );
+                records.push(Record {
+                    name: "fasterpam_swap",
+                    n: nk,
+                    d: 3,
+                    threads,
+                    batch: 64,
+                    computed: rows,
+                    wall_ns: stats.median_ns,
+                    kernel: swap.name(),
+                });
+                if max_threads == 1 {
+                    break;
+                }
+            }
+        }
+        m.set_threads(1);
+    }
+
+    // K-medoids A/B (PR 9): KMEDS vs trikmeds vs FasterPAM from one
+    // shared uniform init — the record-form of `trimed exp --id
+    // kmedoids-ab`. `kernel` carries the algorithm label; `computed` is
+    // the Counted distance total.
+    {
+        let nab = n.min(2_000);
+        let k = 10usize.min(nab);
+        let pts = gauss_mix(nab, 3, k, 0.05, 13);
+        let seed = 5u64;
+        type AbMetric<'a> = Counted<&'a VectorMetric>;
+        let mut ab = |label: &'static str, run: &dyn Fn(&AbMetric) -> (f64, usize)| {
+            let m = VectorMetric::new(pts.clone());
+            let cm = Counted::new(&m);
+            let (loss, swaps) = run(&cm);
+            // Snapshot before timing: the timed reruns only inflate the
+            // counters, the record keeps the single-run total.
+            let dists = cm.counts().dists;
+            let stats = time_block(1, 3, || {
+                let _ = run(&cm);
+            });
+            println!(
+                "kmedoids_ab {label:<19} N={nab} K={k}: {} (loss {loss:.3}, {swaps} swaps)",
+                fmt_ns(stats.median_ns)
+            );
+            records.push(Record {
+                name: "kmedoids_ab",
+                n: nab,
+                d: 3,
+                threads: 1,
+                batch: 1,
+                computed: dists,
+                wall_ns: stats.median_ns,
+                kernel: label,
+            });
+        };
+        ab("kmeds", &|m| {
+            let r = kmeds(m, &KmedsOpts { k, uniform_seed: Some(seed), max_iters: 100 });
+            (r.loss, r.swaps)
+        });
+        ab("trikmeds", &|m| {
+            let r = trikmeds(
+                m,
+                &TrikmedsOpts { init: TrikmedsInit::Uniform(seed), ..TrikmedsOpts::new(k) },
+            );
+            (r.loss, r.swaps)
+        });
+        ab("fasterpam_eager", &|m| {
+            let r = fasterpam(
+                m,
+                &FasterPamOpts {
+                    init: Init::Uniform(seed),
+                    swap: SwapStrategy::Eager,
+                    ..FasterPamOpts::new(k)
+                },
+            );
+            (r.loss, r.swaps)
+        });
+        ab("fasterpam_steepest", &|m| {
+            let r = fasterpam(
+                m,
+                &FasterPamOpts {
+                    init: Init::Uniform(seed),
+                    swap: SwapStrategy::Steepest,
+                    ..FasterPamOpts::new(k)
+                },
+            );
+            (r.loss, r.swaps)
+        });
+    }
+
+    println!("\nBENCH_PR9 records:\n{}", json(&records));
     if let Ok(path) = std::env::var("TRIMED_BENCH_JSON") {
         std::fs::write(&path, json(&records)).expect("write TRIMED_BENCH_JSON");
         println!("wrote {path}");

@@ -10,9 +10,12 @@ use crate::algo::{
 };
 use crate::engine::Kernel;
 use crate::data::synthetic as syn;
-use crate::kmedoids::{kmeds, trikmeds, KmedsOpts, TrikmedsOpts};
 use crate::kmedoids::trikmeds::TrikmedsInit;
-use crate::metric::{Counted, MetricSpace, VectorMetric};
+use crate::kmedoids::{
+    fasterpam, kmeds, trikmeds, ClusteringResult, FasterPamOpts, Init, KmedsOpts, SwapStrategy,
+    TrikmedsOpts,
+};
+use crate::metric::{Counted, Counts, MetricSpace, VectorMetric};
 
 /// Trimed options for paper-table regeneration: sequential defaults with
 /// the **exact** kernel pinned, so the n̂/N_c columns count precisely what
@@ -212,6 +215,79 @@ pub fn table2(scale: Scale, seed: u64) -> Table {
                 fnum(e2 / e0),
                 iters.to_string(),
             ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// K-medoids A/B: KMEDS vs trikmeds vs FasterPAM on the Table-2 datasets.
+// ---------------------------------------------------------------------
+
+/// Head-to-head of the three k-medoids algorithms from one *shared*
+/// uniform initialisation per (dataset, K): final loss, iterations
+/// (candidate sweeps for FasterPAM), `Counted` distance work, and applied
+/// medoid swaps. The FasterPAM rows quantify what the eager-swap local
+/// search buys over Voronoi iteration (lower loss, more swaps); the KMEDS
+/// row anchors the Θ(N²) upfront-matrix cost both accelerate away. All
+/// three draw their initial medoids from `init::uniform_init` with the
+/// same seed, so the loss columns are directly comparable.
+pub fn kmedoids_ab(scale: Scale, seed: u64) -> Table {
+    let mut t = Table::new(
+        "K-medoids A/B: loss / iterations / distance work / swaps (shared init)",
+        &["dataset", "N", "d", "K", "algorithm", "loss", "iters", "dists", "1-to-all", "swaps"],
+    );
+    for (name, pts) in table2_datasets(scale, seed) {
+        let n = pts.len();
+        let d = pts.dim();
+        let ks = [10usize.min(n), ((n as f64).sqrt().ceil() as usize).min(n)];
+        for k in ks {
+            let init_seed = seed + k as u64;
+            let mut row = |algo: String, r: &ClusteringResult, c: Counts| {
+                t.push_row(vec![
+                    name.to_string(),
+                    n.to_string(),
+                    d.to_string(),
+                    k.to_string(),
+                    algo,
+                    fnum(r.loss),
+                    r.iterations.to_string(),
+                    c.dists.to_string(),
+                    c.one_to_all.to_string(),
+                    r.swaps.to_string(),
+                ]);
+            };
+            {
+                let m = Counted::new(VectorMetric::new(pts.clone()));
+                let r = kmeds(
+                    &m,
+                    &KmedsOpts { k, uniform_seed: Some(init_seed), max_iters: 100 },
+                );
+                row("kmeds".into(), &r, m.counts());
+            }
+            {
+                let m = Counted::new(VectorMetric::new(pts.clone()));
+                let r = trikmeds(
+                    &m,
+                    &TrikmedsOpts {
+                        init: TrikmedsInit::Uniform(init_seed),
+                        ..TrikmedsOpts::new(k)
+                    },
+                );
+                row("trikmeds".into(), &r, m.counts());
+            }
+            for swap in [SwapStrategy::Eager, SwapStrategy::Steepest] {
+                let m = Counted::new(VectorMetric::new(pts.clone()));
+                let r = fasterpam(
+                    &m,
+                    &FasterPamOpts {
+                        init: Init::Uniform(init_seed),
+                        swap,
+                        ..FasterPamOpts::new(k)
+                    },
+                );
+                row(format!("fasterpam-{}", swap.name()), &r, m.counts());
+            }
         }
     }
     t
@@ -511,6 +587,7 @@ pub fn run_by_id(id: &str, scale: Scale, seed: u64) -> Option<Table> {
         "fig3" => Some(fig3(scale, seed)),
         "table1" => Some(table1(scale, seed)),
         "table2" => Some(table2(scale, seed)),
+        "kmedoids-ab" => Some(kmedoids_ab(scale, seed)),
         "table3" => Some(table3(scale, seed)),
         "fig4" => Some(fig4(scale, seed)),
         "fig7" => Some(fig7(scale, seed)),
@@ -523,7 +600,8 @@ pub fn run_by_id(id: &str, scale: Scale, seed: u64) -> Option<Table> {
 
 /// All experiment ids, in paper order (ablations last).
 pub const ALL_IDS: &[&str] = &[
-    "fig3", "table1", "table2", "table3", "fig4", "fig7", "rand-quality", "alpha-prime", "order",
+    "fig3", "table1", "table2", "kmedoids-ab", "table3", "fig4", "fig7", "rand-quality",
+    "alpha-prime", "order",
 ];
 
 #[cfg(test)]
@@ -556,5 +634,8 @@ mod tests {
     fn run_by_id_dispatch() {
         assert!(run_by_id("nope", Scale::Small, 0).is_none());
         assert!(run_by_id("fig7", Scale::Small, 0).is_some());
+        // The A/B harness is bench/CLI-tier at every scale (KMEDS builds
+        // the Θ(N²) matrix); here just pin its registration.
+        assert!(ALL_IDS.contains(&"kmedoids-ab"));
     }
 }

@@ -15,6 +15,7 @@ pub use bench::{time_block, BenchStats};
 pub use table::Table;
 
 use crate::engine::{Kernel, Precision};
+use crate::kmedoids::KmedoidsAlgo;
 
 /// Workload scale for experiment regeneration.
 ///
@@ -130,6 +131,10 @@ pub struct ExecConfig {
     /// results stay identical, only refinement counts and wall clock
     /// move (DESIGN.md §Mixed-precision panels under the guard band).
     pub precision: Precision,
+    /// K-medoids algorithm selection (`--algo` /
+    /// `TRIMED_KMEDOIDS_ALGO`): trikmeds (default), fasterpam, or the
+    /// KMEDS baseline. Only the `kmedoids` workload reads it.
+    pub kmedoids_algo: KmedoidsAlgo,
 }
 
 impl Default for ExecConfig {
@@ -140,6 +145,7 @@ impl Default for ExecConfig {
             batch_auto: false,
             kernel: Kernel::Fast,
             precision: Precision::F64,
+            kmedoids_algo: KmedoidsAlgo::Trikmeds,
         }
     }
 }
@@ -151,8 +157,10 @@ impl ExecConfig {
     pub const AUTO_BATCH_MAX: usize = 64;
 
     /// From `TRIMED_THREADS` / `TRIMED_BATCH` / `TRIMED_KERNEL` /
-    /// `TRIMED_PRECISION`, defaulting to sequential rounds on the fast
-    /// f64 kernel. `TRIMED_BATCH=auto` selects the adaptive schedule.
+    /// `TRIMED_PRECISION` / `TRIMED_KMEDOIDS_ALGO`, defaulting to
+    /// sequential rounds on the fast f64 kernel with trikmeds as the
+    /// k-medoids algorithm. `TRIMED_BATCH=auto` selects the adaptive
+    /// schedule.
     pub fn from_env() -> ExecConfig {
         let threads = Self::env_threads().unwrap_or(1);
         let (batch, batch_auto) = match Self::env_batch_spec() {
@@ -161,7 +169,14 @@ impl ExecConfig {
         };
         let kernel = Self::env_kernel().unwrap_or(Kernel::Fast);
         let precision = Self::env_precision().unwrap_or(Precision::F64);
-        ExecConfig { threads, batch, batch_auto, kernel, precision }
+        let kmedoids_algo = Self::env_kmedoids_algo().unwrap_or(KmedoidsAlgo::Trikmeds);
+        ExecConfig { threads, batch, batch_auto, kernel, precision, kmedoids_algo }
+    }
+
+    /// `TRIMED_KMEDOIDS_ALGO`, if set to `trikmeds`, `fasterpam` or
+    /// `kmeds`.
+    pub fn env_kmedoids_algo() -> Option<KmedoidsAlgo> {
+        std::env::var("TRIMED_KMEDOIDS_ALGO").ok().and_then(|v| KmedoidsAlgo::parse(&v))
     }
 
     /// `TRIMED_KERNEL`, if set to `exact` or `fast`.
@@ -234,6 +249,7 @@ mod tests {
                 batch_auto: false,
                 kernel: Kernel::Fast,
                 precision: Precision::F64,
+                kmedoids_algo: KmedoidsAlgo::Trikmeds,
             }
         );
         assert_eq!(ExecConfig::batch_for(1), 8);

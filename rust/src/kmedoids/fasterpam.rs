@@ -1,0 +1,723 @@
+//! FasterPAM (Schubert & Rousseeuw, arxiv 1810.05691 / 2008.05171): the
+//! PAM swap phase without the O(K) factor per point, on the engine's
+//! batched metric surface.
+//!
+//! # Removal-loss algebra
+//!
+//! PAM improves a medoid set by swaps: replace medoid `m_i` by a
+//! non-medoid candidate `x_c` whenever the loss change is negative.
+//! Naively each `(x_c, m_i)` pair costs O(N) to evaluate and there are
+//! K(N−K) pairs per iteration. FasterPAM caches, per point `o`, the
+//! nearest-medoid slot/distance `(a1, d1)` and the second-nearest
+//! `(a2, d2)`, plus a per-slot *removal loss*
+//!
+//! ```text
+//!   ΔTD⁻(i) = Σ_{o : a1(o)=i} (d2(o) − d1(o))
+//! ```
+//!
+//! (the cost of deleting medoid `i` with no replacement). For candidate
+//! `x_c` with distance row `d(o,c)` the loss change of the swap
+//! `(x_c, m_i)` decomposes as `ΔTD(c,i) = ΔTD⁺(c) + delta(i)` where
+//!
+//! ```text
+//!   ΔTD⁺(c)  = Σ_o min(0, d(o,c) − d1(o))          (shared over slots)
+//!   delta(i) = ΔTD⁻(i)
+//!            + Σ_{o: a1(o)=i, d(o,c) < d1(o)} (d1(o) − d2(o))
+//!            + Σ_{o: a1(o)=i, d1(o) ≤ d(o,c) < d2(o)} (d(o,c) − d2(o))
+//! ```
+//!
+//! so *one* pass over the candidate's row updates ΔTD⁺ and all K
+//! `delta` accumulators in O(1) per point — O(N + K) per candidate, no
+//! O(K) inner loop over medoids. The candidate rows themselves are the
+//! only distance work and they go through
+//! [`MetricSpace::many_to_all`] in `batch`-sized blocks: threaded,
+//! panel-fast and precision-aware exactly like every other scan in the
+//! library.
+//!
+//! # Eager first-improvement swaps
+//!
+//! The classic sweep ([`SwapStrategy::Steepest`]) scans all candidates
+//! and applies the single best improving swap per iteration. The eager
+//! variant ([`SwapStrategy::Eager`], the 2008.05171 default) applies an
+//! improving swap the moment it is found and keeps sweeping. Both stop
+//! at the same kind of fixpoint — a full sweep in which *no* candidate
+//! improves, i.e. a PAM local optimum — and 2008.05171's argument for
+//! eager applies unchanged here: any sequence of strictly-improving
+//! swaps monotonically decreases the loss and terminates in a swap-free
+//! sweep, so eager reaches a local optimum of the *same* optimality
+//! class as steepest (neither dominates the other in quality; eager
+//! just reaches its optimum in far fewer full scans because early
+//! iterations are rich in improving swaps). `iterations` reports full
+//! sweeps; `swaps` reports applied swaps.
+//!
+//! # Fast kernel, precisions, and the invariance contract
+//!
+//! Candidate rows may be served by the guarded panel kernels
+//! ([`MetricSpace::many_to_all_fast`], [`Kernel::Fast`], either
+//! [`Precision`]). The swap gain is a sum over points of 1-Lipschitz
+//! functions of the row distances, so `|gain_fast − gain_exact| ≤
+//! guard_sum[q]` for *every* slot simultaneously; adding an explicit
+//! f64 summation-error slack ([`gain_slack`]) gives a rigorous bound
+//! `E`. A candidate whose optimistic fast gain `gain_fast − E` cannot
+//! cross the acceptance threshold is provably non-improving (exact
+//! sweeps would skip it too); anything closer is *refined* — its
+//! canonical row is recomputed and the decision re-made from exact
+//! values. Accepted swaps and all cache/removal-loss updates use
+//! canonical rows only. Decisions therefore never depend on kernel,
+//! precision, thread count or block width, and the trajectory — final
+//! medoids, assignments and loss, bit for bit — is invariant across
+//! all of them (pinned by `tests/kmedoids_property.rs`).
+//!
+//! Cache maintenance after an accepted swap is O(1) per point except
+//! for points whose nearest or second-nearest was the replaced medoid
+//! and whose new second is not determined locally; those (~2N/K in
+//! expectation) are rescanned against the K medoids in one threaded
+//! [`MetricSpace::many_to_many`] rectangle.
+
+use super::{init, ClusteringResult, Init};
+use crate::engine::{Kernel, Precision};
+use crate::metric::{FastScratch, MetricSpace};
+
+/// Swap-acceptance strategy for [`fasterpam`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapStrategy {
+    /// First-improvement (2008.05171): apply an improving swap as soon
+    /// as it is found, continue the sweep with updated caches.
+    Eager,
+    /// Classic steepest descent: scan every candidate, apply the single
+    /// best improving swap per sweep.
+    Steepest,
+}
+
+impl SwapStrategy {
+    /// Parse `"eager"` or `"steepest"`; anything else is `None`.
+    pub fn parse(s: &str) -> Option<SwapStrategy> {
+        match s {
+            "eager" => Some(SwapStrategy::Eager),
+            "steepest" => Some(SwapStrategy::Steepest),
+            _ => None,
+        }
+    }
+
+    /// The CLI/env token for this strategy.
+    pub fn name(self) -> &'static str {
+        match self {
+            SwapStrategy::Eager => "eager",
+            SwapStrategy::Steepest => "steepest",
+        }
+    }
+}
+
+/// Options for [`fasterpam`].
+#[derive(Clone, Debug)]
+pub struct FasterPamOpts {
+    /// Number of clusters.
+    pub k: usize,
+    /// Seed for uniform medoid initialisation (the paper-recommended
+    /// scheme, shared with trikmeds), or explicit initial medoids.
+    pub init: Init,
+    /// Swap-acceptance strategy (`--swap`).
+    pub swap: SwapStrategy,
+    /// Cap on full candidate sweeps.
+    pub max_iters: usize,
+    /// Candidate rows computed per [`MetricSpace::many_to_all`] block
+    /// (`--batch`). Any width produces the identical trajectory (see
+    /// the module docs); wider blocks amortise the scan across queries
+    /// and across threads.
+    pub batch: usize,
+    /// Adaptive block schedule (`--batch auto`): the block width starts
+    /// at 1 and doubles toward `batch` as blocks are issued, so tiny
+    /// problems never pay for a full-width first block.
+    pub batch_auto: bool,
+    /// Parallelism hint forwarded to the metric backend; 0 leaves the
+    /// backend's current setting untouched.
+    pub threads: usize,
+    /// Distance kernel for candidate rows (`--kernel`). Under
+    /// [`Kernel::Fast`] rows come from the guarded panel scans and are
+    /// refined back to canonical wherever a decision could flip.
+    pub kernel: Kernel,
+    /// Fast-panel arithmetic (`--precision`); meaningful only under
+    /// [`Kernel::Fast`]. Results are identical at either precision.
+    pub precision: Precision,
+}
+
+impl FasterPamOpts {
+    /// Defaults: uniform init with seed 0, eager swaps, 100-sweep cap,
+    /// 64-wide blocks, fast kernel at f64 (all result-invariant
+    /// choices — only wall time moves).
+    pub fn new(k: usize) -> Self {
+        FasterPamOpts {
+            k,
+            init: Init::Uniform(0),
+            swap: SwapStrategy::Eager,
+            max_iters: 100,
+            batch: 64,
+            batch_auto: false,
+            threads: 0,
+            kernel: Kernel::Fast,
+            precision: Precision::F64,
+        }
+    }
+}
+
+/// Swap-phase cache state (module docs): nearest/second-nearest slots
+/// and distances per point, removal losses per slot, and the Σd1/Σd2
+/// accumulators feeding the rounding slack.
+struct State {
+    k: usize,
+    medoids: Vec<usize>,
+    is_medoid: Vec<bool>,
+    /// a1(i): slot of the nearest medoid.
+    a1: Vec<usize>,
+    /// d1(i): distance to the nearest medoid (canonical values).
+    d1: Vec<f64>,
+    /// a2(i): slot of the second-nearest medoid (meaningless at K = 1).
+    a2: Vec<usize>,
+    /// d2(i): distance to the second-nearest medoid (+∞ at K = 1).
+    d2: Vec<f64>,
+    /// ΔTD⁻ per slot (unused at K = 1).
+    removal_loss: Vec<f64>,
+    /// Σ d1 — the current loss.
+    td: f64,
+    /// Σ d2 (0 at K = 1; feeds the rounding slack only).
+    td2: f64,
+}
+
+/// Reusable buffers for the sweep loop; contents between uses are
+/// unspecified.
+#[derive(Default)]
+struct Buffers {
+    ids: Vec<usize>,
+    rows: Vec<f64>,
+    guard: Vec<f64>,
+    guard_sum: Vec<f64>,
+    scratch: FastScratch,
+    delta: Vec<f64>,
+    exact_row: Vec<f64>,
+    best_row: Vec<f64>,
+}
+
+/// Run FasterPAM over any metric space.
+pub fn fasterpam<M: MetricSpace>(metric: &M, opts: &FasterPamOpts) -> ClusteringResult {
+    fasterpam_impl(metric, opts).0
+}
+
+/// Implementation that also returns the final cache state, so the unit
+/// tests can audit the swap-cache invariants directly.
+fn fasterpam_impl<M: MetricSpace>(metric: &M, opts: &FasterPamOpts) -> (ClusteringResult, State) {
+    let n = metric.len();
+    let k = opts.k;
+    assert!(k >= 1 && k <= n);
+    if opts.threads > 0 {
+        metric.set_threads(opts.threads);
+    }
+
+    let medoids: Vec<usize> = match &opts.init {
+        Init::Uniform(seed) => init::uniform_init(n, k, *seed),
+        Init::Given(m) => {
+            assert_eq!(m.len(), k);
+            m.clone()
+        }
+    };
+    let mut st = State {
+        k,
+        medoids,
+        is_medoid: vec![false; n],
+        a1: vec![0; n],
+        d1: vec![f64::INFINITY; n],
+        a2: vec![0; n],
+        d2: vec![f64::INFINITY; n],
+        removal_loss: vec![0.0; k],
+        td: 0.0,
+        td2: 0.0,
+    };
+    for &m in &st.medoids {
+        st.is_medoid[m] = true;
+    }
+    let distinct = st.is_medoid.iter().filter(|&&b| b).count();
+    assert_eq!(distinct, k, "initial medoids must be distinct");
+
+    let mut bufs = Buffers::default();
+    build_caches(metric, &mut st, opts.batch, &mut bufs);
+    refresh_removal_loss(&mut st);
+
+    let mut iterations = 0;
+    let mut converged = false;
+    let mut swaps = 0usize;
+    // Adaptive block width persists across sweeps: after log2(batch)
+    // blocks it sits at full width for the rest of the run.
+    let mut width = if opts.batch_auto { 1 } else { opts.batch.max(1) };
+    for _ in 0..opts.max_iters {
+        iterations += 1;
+        let applied = sweep(metric, &mut st, opts, &mut bufs, &mut width, &mut swaps);
+        if applied == 0 {
+            converged = true;
+            break;
+        }
+    }
+
+    let loss: f64 = st.d1.iter().sum();
+    let result = ClusteringResult {
+        medoids: st.medoids.clone(),
+        assignments: st.a1.clone(),
+        loss,
+        iterations,
+        converged,
+        swaps,
+    };
+    (result, st)
+}
+
+/// One full candidate sweep. Returns the number of swaps applied (0 ⇒
+/// local optimum reached; steepest applies at most 1).
+fn sweep<M: MetricSpace>(
+    metric: &M,
+    st: &mut State,
+    opts: &FasterPamOpts,
+    bufs: &mut Buffers,
+    width: &mut usize,
+    swaps: &mut usize,
+) -> usize {
+    let n = metric.len();
+    let max_width = opts.batch.max(1);
+    let mut applied = 0usize;
+    // Steepest incumbent: only strictly-negative gains are tracked, so
+    // for eager (which never updates it) this doubles as the fixed
+    // acceptance threshold 0.
+    let mut best_gain = 0.0f64;
+    let mut best_cand = 0usize;
+    let mut best_slot = 0usize;
+    let mut have_best = false;
+
+    let mut next = 0usize;
+    while next < n {
+        // Assemble the next block of non-medoid candidates in index
+        // order (the order is block-width-invariant by construction).
+        bufs.ids.clear();
+        while next < n && bufs.ids.len() < (*width).max(1) {
+            if !st.is_medoid[next] {
+                bufs.ids.push(next);
+            }
+            next += 1;
+        }
+        *width = (*width * 2).min(max_width);
+        if bufs.ids.is_empty() {
+            continue;
+        }
+        let b = bufs.ids.len();
+        bufs.rows.resize(b * n, 0.0);
+        bufs.guard.resize(b, 0.0);
+        bufs.guard_sum.resize(b, 0.0);
+        let fast = opts.kernel == Kernel::Fast
+            && metric.many_to_all_fast(
+                &bufs.ids,
+                &mut bufs.rows[..b * n],
+                &mut bufs.guard,
+                &mut bufs.guard_sum,
+                &mut bufs.scratch,
+                opts.precision,
+            );
+        if !fast {
+            metric.many_to_all(&bufs.ids, &mut bufs.rows[..b * n]);
+        }
+
+        for q in 0..b {
+            let c = bufs.ids[q];
+            if st.is_medoid[c] {
+                // Only the candidate itself can be promoted mid-block,
+                // and each candidate appears once — defensive skip.
+                continue;
+            }
+            let (mut slot, mut gain, rowsum) =
+                eval_gains(st, &bufs.rows[q * n..(q + 1) * n], &mut bufs.delta);
+            if fast {
+                let e = bufs.guard_sum[q] + gain_slack(n, st, rowsum, bufs.guard_sum[q]);
+                if gain - e >= best_gain {
+                    // Provably cannot cross the acceptance threshold:
+                    // gain_exact ≥ gain_fast − E ≥ threshold.
+                    continue;
+                }
+                // Refine: canonical row, exact decision.
+                bufs.exact_row.resize(n, 0.0);
+                metric.many_to_all(&[c], &mut bufs.exact_row);
+                let (s2, g2, _) = eval_gains(st, &bufs.exact_row, &mut bufs.delta);
+                slot = s2;
+                gain = g2;
+            }
+            match opts.swap {
+                SwapStrategy::Eager => {
+                    if gain < 0.0 {
+                        if fast {
+                            apply_swap(metric, st, slot, c, &bufs.exact_row);
+                        } else {
+                            apply_swap(metric, st, slot, c, &bufs.rows[q * n..(q + 1) * n]);
+                        }
+                        applied += 1;
+                        *swaps += 1;
+                    }
+                }
+                SwapStrategy::Steepest => {
+                    if gain < best_gain {
+                        best_gain = gain;
+                        best_cand = c;
+                        best_slot = slot;
+                        have_best = true;
+                        bufs.best_row.clear();
+                        if fast {
+                            bufs.best_row.extend_from_slice(&bufs.exact_row);
+                        } else {
+                            bufs.best_row.extend_from_slice(&bufs.rows[q * n..(q + 1) * n]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    if opts.swap == SwapStrategy::Steepest && have_best {
+        apply_swap(metric, st, best_slot, best_cand, &bufs.best_row);
+        applied = 1;
+        *swaps += 1;
+    }
+    applied
+}
+
+/// Evaluate every swap slot for one candidate row in a single O(N + K)
+/// pass (module docs): returns the best slot (lowest index on ties),
+/// its gain `ΔTD⁺ + delta[slot]` (negative = improvement) and the row
+/// sum (for the rounding slack).
+fn eval_gains(st: &State, row: &[f64], delta: &mut Vec<f64>) -> (usize, f64, f64) {
+    let mut rowsum = 0.0f64;
+    if st.k == 1 {
+        for &doc in row {
+            rowsum += doc;
+        }
+        // Single slot: the swap replaces the only medoid, so the new
+        // loss is the candidate's row sum.
+        return (0, rowsum - st.td, rowsum);
+    }
+    delta.clear();
+    delta.extend_from_slice(&st.removal_loss);
+    let mut dplus = 0.0f64;
+    for (((&doc, &d1o), &d2o), &a1o) in row.iter().zip(&st.d1).zip(&st.d2).zip(&st.a1) {
+        rowsum += doc;
+        if doc < d1o {
+            dplus += doc - d1o;
+            delta[a1o] += d1o - d2o;
+        } else if doc < d2o {
+            delta[a1o] += doc - d2o;
+        }
+    }
+    let mut best = (0usize, delta[0]);
+    for (i, &g) in delta.iter().enumerate().skip(1) {
+        if g < best.1 {
+            best = (i, g);
+        }
+    }
+    (best.0, dplus + best.1, rowsum)
+}
+
+/// Rigorous bound on the f64 evaluation error of a fast-row gain
+/// against the canonical-row gain's own f64 value: the Lipschitz part
+/// is `guard_sum` (module docs); the summation-rounding part is
+/// bounded by `n·ε` times the total magnitude of the summed terms,
+/// each of which is dominated by `d1 + d2 + d(o,c)`; the factor 8
+/// absorbs the constant of the standard recursive-summation bound for
+/// both the fast and the canonical evaluation.
+fn gain_slack(n: usize, st: &State, rowsum: f64, guard_sum: f64) -> f64 {
+    8.0 * (n as f64) * f64::EPSILON * (st.td + st.td2 + rowsum + guard_sum)
+}
+
+/// Apply the swap `(cand → slot)` given the candidate's **canonical**
+/// distance row: O(1) cache update per point, one batched
+/// [`MetricSpace::many_to_many`] rescan rectangle for the points whose
+/// new second-nearest is not locally determined, then an O(N + K)
+/// removal-loss refresh.
+fn apply_swap<M: MetricSpace>(metric: &M, st: &mut State, slot: usize, cand: usize, row: &[f64]) {
+    let old = st.medoids[slot];
+    st.medoids[slot] = cand;
+    st.is_medoid[old] = false;
+    st.is_medoid[cand] = true;
+    let k = st.k;
+    let mut rescan: Vec<usize> = Vec::new();
+    for (o, &doc) in row.iter().enumerate() {
+        if k == 1 {
+            st.a1[o] = 0;
+            st.d1[o] = doc;
+            continue;
+        }
+        if st.a1[o] == slot {
+            if doc < st.d2[o] {
+                // Replacement is closer than the second: it stays the
+                // nearest at the same slot; the second is untouched.
+                st.d1[o] = doc;
+            } else {
+                // The nearest was removed and its replacement is no
+                // closer than the old second: the new second is
+                // min(doc, third-nearest) — unknown, rescan.
+                rescan.push(o);
+            }
+        } else if st.a2[o] == slot {
+            if doc < st.d1[o] {
+                st.a2[o] = st.a1[o];
+                st.d2[o] = st.d1[o];
+                st.a1[o] = slot;
+                st.d1[o] = doc;
+            } else if doc <= st.d2[o] {
+                // Third-nearest ≥ old d2 ≥ doc, so the replacement
+                // stays the second at the same slot.
+                st.d2[o] = doc;
+            } else {
+                rescan.push(o);
+            }
+        } else if doc < st.d1[o] {
+            st.a2[o] = st.a1[o];
+            st.d2[o] = st.d1[o];
+            st.a1[o] = slot;
+            st.d1[o] = doc;
+        } else if doc < st.d2[o] {
+            st.a2[o] = slot;
+            st.d2[o] = doc;
+        }
+    }
+    if !rescan.is_empty() {
+        let mut rect = vec![0.0f64; rescan.len() * k];
+        metric.many_to_many(&rescan, &st.medoids, &mut rect);
+        for (q, &o) in rescan.iter().enumerate() {
+            let r = &rect[q * k..(q + 1) * k];
+            let (mut b1, mut v1) = (0usize, f64::INFINITY);
+            let (mut b2, mut v2) = (0usize, f64::INFINITY);
+            for (c, &dd) in r.iter().enumerate() {
+                if dd < v1 {
+                    b2 = b1;
+                    v2 = v1;
+                    b1 = c;
+                    v1 = dd;
+                } else if dd < v2 {
+                    b2 = c;
+                    v2 = dd;
+                }
+            }
+            st.a1[o] = b1;
+            st.d1[o] = v1;
+            st.a2[o] = b2;
+            st.d2[o] = v2;
+        }
+    }
+    refresh_removal_loss(st);
+}
+
+/// Initial cache build: one blocked [`MetricSpace::many_to_all`] pass
+/// over the K medoids (slot-ascending, so ties resolve to the lowest
+/// slot under the strict comparisons).
+fn build_caches<M: MetricSpace>(metric: &M, st: &mut State, batch: usize, bufs: &mut Buffers) {
+    let n = metric.len();
+    let k = st.k;
+    let b = batch.max(1);
+    let mut start = 0usize;
+    while start < k {
+        let end = (start + b).min(k);
+        let rows = end - start;
+        bufs.rows.resize(rows * n, 0.0);
+        metric.many_to_all(&st.medoids[start..end], &mut bufs.rows[..rows * n]);
+        for (bi, slot) in (start..end).enumerate() {
+            let row = &bufs.rows[bi * n..(bi + 1) * n];
+            for (o, &dd) in row.iter().enumerate() {
+                if dd < st.d1[o] {
+                    st.a2[o] = st.a1[o];
+                    st.d2[o] = st.d1[o];
+                    st.a1[o] = slot;
+                    st.d1[o] = dd;
+                } else if dd < st.d2[o] {
+                    st.a2[o] = slot;
+                    st.d2[o] = dd;
+                }
+            }
+        }
+        start = end;
+    }
+}
+
+/// Recompute ΔTD⁻ per slot and the Σd1/Σd2 accumulators: O(N + K).
+fn refresh_removal_loss(st: &mut State) {
+    let State { removal_loss, a1, d1, d2, td, td2, k, .. } = st;
+    *td = d1.iter().sum();
+    if *k == 1 {
+        *td2 = 0.0;
+        return;
+    }
+    *td2 = d2.iter().sum();
+    for r in removal_loss.iter_mut() {
+        *r = 0.0;
+    }
+    for ((&a, &v1), &v2) in a1.iter().zip(d1.iter()).zip(d2.iter()) {
+        removal_loss[a] += v2 - v1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{gauss_mix, uniform_cube};
+    use crate::kmedoids::{loss as recompute_loss, trikmeds, TrikmedsOpts};
+    use crate::metric::VectorMetric;
+
+    fn run(m: &VectorMetric, opts: &FasterPamOpts) -> ClusteringResult {
+        let r = fasterpam(m, opts);
+        let l = recompute_loss(m, &r.medoids, &r.assignments);
+        assert!((l - r.loss).abs() < 1e-6, "stored loss {} vs recomputed {}", r.loss, l);
+        r
+    }
+
+    #[test]
+    fn improves_on_trikmeds_fixpoint_or_matches_it() {
+        // Provable ordering: started *from* the trikmeds result, every
+        // accepted swap strictly improves, so the final loss cannot be
+        // worse than trikmeds'.
+        for seed in 0..3u64 {
+            let m = VectorMetric::new(gauss_mix(240, 2, 5, 0.05, seed + 30));
+            let rt = trikmeds(&m, &TrikmedsOpts { init: Init::Uniform(seed), ..TrikmedsOpts::new(5) });
+            let rf = run(
+                &m,
+                &FasterPamOpts { init: Init::Given(rt.medoids.clone()), ..FasterPamOpts::new(5) },
+            );
+            assert!(rf.loss <= rt.loss + 1e-9, "seed {seed}: {} vs {}", rf.loss, rt.loss);
+        }
+    }
+
+    #[test]
+    fn eager_and_steepest_reach_comparable_optima() {
+        for seed in 0..3u64 {
+            let m = VectorMetric::new(gauss_mix(260, 2, 5, 0.04, seed + 60));
+            let base = FasterPamOpts { init: Init::Uniform(seed), ..FasterPamOpts::new(5) };
+            let re = run(&m, &FasterPamOpts { swap: SwapStrategy::Eager, ..base.clone() });
+            let rs = run(&m, &FasterPamOpts { swap: SwapStrategy::Steepest, ..base });
+            assert!(re.converged && rs.converged, "seed {seed}");
+            let lo = re.loss.min(rs.loss);
+            assert!(
+                (re.loss - rs.loss).abs() <= 0.25 * lo,
+                "seed {seed}: eager {} vs steepest {}",
+                re.loss,
+                rs.loss
+            );
+        }
+    }
+
+    #[test]
+    fn k_one_finds_dataset_medoid() {
+        use crate::algo::scan_medoid;
+        let m = VectorMetric::new(uniform_cube(150, 2, 33));
+        let r = run(&m, &FasterPamOpts::new(1));
+        let s = scan_medoid(&m);
+        assert!((s.energies[r.medoids[0]] - s.energy).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k_equals_n_gives_zero_loss() {
+        let m = VectorMetric::new(gauss_mix(20, 2, 2, 0.1, 4));
+        let r = run(&m, &FasterPamOpts::new(20));
+        assert!(r.loss < 1e-12);
+        assert_eq!(r.swaps, 0);
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn swap_caches_consistent_after_run() {
+        for seed in 0..3u64 {
+            let m = VectorMetric::new(gauss_mix(220, 3, 6, 0.08, seed + 9));
+            let (r, st) = fasterpam_impl(
+                &m,
+                &FasterPamOpts { init: Init::Uniform(seed), ..FasterPamOpts::new(6) },
+            );
+            assert!(r.swaps > 0, "seed {seed}: no swaps to audit");
+            for i in 0..m.len() {
+                let dd: Vec<f64> = st.medoids.iter().map(|&mm| m.dist(i, mm)).collect();
+                let mut v1 = f64::INFINITY;
+                let mut v2 = f64::INFINITY;
+                for &d in &dd {
+                    if d < v1 {
+                        v2 = v1;
+                        v1 = d;
+                    } else if d < v2 {
+                        v2 = d;
+                    }
+                }
+                assert!(st.d1[i] <= st.d2[i], "element {i}");
+                assert_ne!(st.a1[i], st.a2[i], "element {i}");
+                assert!((st.d1[i] - v1).abs() < 1e-9, "element {i}: d1 {} vs {v1}", st.d1[i]);
+                assert!((st.d2[i] - v2).abs() < 1e-9, "element {i}: d2 {} vs {v2}", st.d2[i]);
+                assert!((st.d1[i] - dd[st.a1[i]]).abs() < 1e-9, "element {i}: a1 slot");
+                assert!((st.d2[i] - dd[st.a2[i]]).abs() < 1e-9, "element {i}: a2 slot");
+            }
+            // Removal losses match their definition.
+            for (c, &rl) in st.removal_loss.iter().enumerate() {
+                let want: f64 = (0..m.len())
+                    .filter(|&i| st.a1[i] == c)
+                    .map(|i| st.d2[i] - st.d1[i])
+                    .sum();
+                assert!((rl - want).abs() < 1e-6, "slot {c}: {rl} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_precision_batch_invariance() {
+        let m = VectorMetric::new(gauss_mix(250, 3, 5, 0.06, 77));
+        let reference = run(
+            &m,
+            &FasterPamOpts {
+                init: Init::Uniform(1),
+                kernel: Kernel::Exact,
+                batch: 1,
+                ..FasterPamOpts::new(5)
+            },
+        );
+        for (kernel, precision) in
+            [(Kernel::Fast, Precision::F64), (Kernel::Fast, Precision::F32)]
+        {
+            for (batch, auto) in [(1usize, false), (16, false), (64, true)] {
+                let r = run(
+                    &m,
+                    &FasterPamOpts {
+                        init: Init::Uniform(1),
+                        kernel,
+                        precision,
+                        batch,
+                        batch_auto: auto,
+                        ..FasterPamOpts::new(5)
+                    },
+                );
+                assert_eq!(r.medoids, reference.medoids, "{kernel:?} {precision:?} {batch}");
+                assert_eq!(r.assignments, reference.assignments, "{kernel:?} {batch}");
+                assert_eq!(
+                    r.loss.to_bits(),
+                    reference.loss.to_bits(),
+                    "{kernel:?} {precision:?} {batch} {auto}"
+                );
+                assert_eq!(r.swaps, reference.swaps, "{kernel:?} {precision:?} {batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn restart_from_fixpoint_applies_no_swaps() {
+        let m = VectorMetric::new(gauss_mix(200, 2, 4, 0.05, 13));
+        let r1 = run(&m, &FasterPamOpts::new(4));
+        assert!(r1.converged);
+        let r2 = run(&m, &FasterPamOpts { init: Init::Given(r1.medoids.clone()), ..FasterPamOpts::new(4) });
+        assert_eq!(r2.swaps, 0);
+        assert_eq!(r2.iterations, 1);
+        assert!((r2.loss - r1.loss).abs() < 1e-9);
+    }
+
+    #[test]
+    fn works_on_graphs() {
+        use crate::graph::generators::sensor_net;
+        use crate::graph::GraphMetric;
+        let sg = sensor_net(300, 1.8, false, 3);
+        let gm = GraphMetric::new(sg.graph);
+        let r = fasterpam(&gm, &FasterPamOpts::new(5));
+        assert_eq!(r.assignments.len(), gm.len());
+        assert!(r.loss.is_finite());
+    }
+}

@@ -8,6 +8,14 @@
 use super::{init, ClusteringResult};
 use crate::metric::MetricSpace;
 
+/// Rows per [`MetricSpace::many_to_all`] block of the upfront matrix
+/// build: batched rows let a threaded backend fan the Θ(N²) pass out
+/// across OS threads ([`MetricSpace::set_threads`]) while the buffer
+/// stays the caller-visible matrix itself (rows are contiguous). The
+/// values, and the `Counted` n̂ accounting (N one-to-all passes, N²
+/// distances), are identical to the sequential per-row loop.
+const MATRIX_BLOCK_ROWS: usize = 64;
+
 /// Options for [`kmeds`].
 #[derive(Clone, Debug)]
 pub struct KmedsOpts {
@@ -34,13 +42,16 @@ pub fn kmeds<M: MetricSpace>(metric: &M, opts: &KmedsOpts) -> ClusteringResult {
     let k = opts.k;
     assert!(k >= 1 && k <= n);
 
-    // Full distance matrix (row i = one-to-all from i).
+    // Full distance matrix (row i = one-to-all from i), built in
+    // MATRIX_BLOCK_ROWS-row batched passes straight into the matrix.
     let mut dmat: Vec<f64> = vec![0.0; n * n];
     {
-        let mut row = vec![0.0f64; n];
-        for i in 0..n {
-            metric.one_to_all(i, &mut row);
-            dmat[i * n..(i + 1) * n].copy_from_slice(&row);
+        let ids: Vec<usize> = (0..n).collect();
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + MATRIX_BLOCK_ROWS).min(n);
+            metric.many_to_all(&ids[start..end], &mut dmat[start * n..end * n]);
+            start = end;
         }
     }
     let d = |i: usize, j: usize| dmat[i * n + j];
@@ -61,6 +72,7 @@ pub fn kmeds<M: MetricSpace>(metric: &M, opts: &KmedsOpts) -> ClusteringResult {
     let mut assignments = vec![0usize; n];
     let mut converged = false;
     let mut iterations = 0;
+    let mut swaps = 0usize;
 
     // Tie-breaking convention (shared with trikmeds so that trikmeds-0
     // reproduces KMEDS trajectories exactly, §5.2): the incumbent
@@ -109,7 +121,10 @@ pub fn kmeds<M: MetricSpace>(metric: &M, opts: &KmedsOpts) -> ClusteringResult {
                     best = (i, s);
                 }
             }
-            medoids[c] = best.0;
+            if medoids[c] != best.0 {
+                medoids[c] = best.0;
+                swaps += 1;
+            }
         }
         if !changed && iterations > 1 {
             converged = true;
@@ -118,7 +133,7 @@ pub fn kmeds<M: MetricSpace>(metric: &M, opts: &KmedsOpts) -> ClusteringResult {
     }
 
     let loss: f64 = (0..n).map(|i| d(i, medoids[assignments[i]])).sum();
-    ClusteringResult { medoids, assignments, loss, iterations, converged }
+    ClusteringResult { medoids, assignments, loss, iterations, converged, swaps }
 }
 
 #[cfg(test)]

@@ -1,15 +1,65 @@
-//! K-medoids clustering: the paper's accelerated `trikmeds` (Algs. 6–11)
-//! and the KMEDS baseline of Park & Jun (2009) it is measured against.
+//! K-medoids clustering: the paper's accelerated `trikmeds` (Algs. 6–11),
+//! the KMEDS baseline of Park & Jun (2009) it is measured against, and
+//! the FasterPAM eager-swap algorithm of Schubert & Rousseeuw
+//! (arxiv 1810.05691 / 2008.05171) that accelerates the swap phase the
+//! way trikmeds accelerates the medoid-update phase.
 
+pub mod fasterpam;
 pub mod init;
 pub mod kmeds;
 pub mod trikmeds;
 
+pub use fasterpam::{fasterpam, FasterPamOpts, SwapStrategy};
 pub use init::{park_jun_init, uniform_init};
 pub use kmeds::{kmeds, KmedsOpts};
 pub use trikmeds::{trikmeds, TrikmedsOpts};
 
-/// Result of a K-medoids run (either algorithm).
+/// Medoid initialisation choice, shared by trikmeds and FasterPAM (the
+/// paper recommends uniform after SM-E; `Given` mirrors another run).
+#[derive(Clone, Debug)]
+pub enum Init {
+    /// K distinct uniform indices from the given seed.
+    Uniform(u64),
+    /// Caller-provided medoid indices (e.g. to mirror a KMEDS run).
+    Given(Vec<usize>),
+}
+
+/// Which k-medoids algorithm a run should use — the CLI `--algo` /
+/// `TRIMED_KMEDOIDS_ALGO` selection threaded through
+/// [`crate::harness::ExecConfig`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KmedoidsAlgo {
+    /// The paper's trikmeds (bound-accelerated Voronoi iteration).
+    Trikmeds,
+    /// FasterPAM eager-swap local search ([`fasterpam`]).
+    Fasterpam,
+    /// Park-Jun KMEDS (Θ(N²) upfront matrix) — the exactness baseline.
+    Kmeds,
+}
+
+impl KmedoidsAlgo {
+    /// Parse `"trikmeds"`, `"fasterpam"` or `"kmeds"`; anything else is
+    /// `None`.
+    pub fn parse(s: &str) -> Option<KmedoidsAlgo> {
+        match s {
+            "trikmeds" => Some(KmedoidsAlgo::Trikmeds),
+            "fasterpam" => Some(KmedoidsAlgo::Fasterpam),
+            "kmeds" => Some(KmedoidsAlgo::Kmeds),
+            _ => None,
+        }
+    }
+
+    /// The CLI/env token for this algorithm.
+    pub fn name(self) -> &'static str {
+        match self {
+            KmedoidsAlgo::Trikmeds => "trikmeds",
+            KmedoidsAlgo::Fasterpam => "fasterpam",
+            KmedoidsAlgo::Kmeds => "kmeds",
+        }
+    }
+}
+
+/// Result of a K-medoids run (any algorithm).
 #[derive(Clone, Debug)]
 pub struct ClusteringResult {
     /// Dataset indices of the K medoids.
@@ -18,10 +68,14 @@ pub struct ClusteringResult {
     pub assignments: Vec<usize>,
     /// Final loss L(M) = Σ_i dist(x(i), x(m(a(i)))).
     pub loss: f64,
-    /// Iterations until convergence (assignment fixpoint or cap).
+    /// Iterations until convergence (assignment fixpoint or cap; for
+    /// FasterPAM: full candidate sweeps).
     pub iterations: usize,
     /// Whether the run converged before hitting the iteration cap.
     pub converged: bool,
+    /// Medoid replacements applied: accepted swaps for FasterPAM,
+    /// medoid moves in the update steps for trikmeds/KMEDS.
+    pub swaps: usize,
 }
 
 impl ClusteringResult {

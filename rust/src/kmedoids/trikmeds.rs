@@ -93,14 +93,10 @@ pub struct TrikmedsOpts {
     pub precision: Precision,
 }
 
-/// Initialisation choice for trikmeds.
-#[derive(Clone, Debug)]
-pub enum TrikmedsInit {
-    /// K distinct uniform indices from the given seed.
-    Uniform(u64),
-    /// Caller-provided medoid indices (e.g. to mirror a KMEDS run).
-    Given(Vec<usize>),
-}
+/// Initialisation choice for trikmeds — the shared
+/// [`Init`](super::Init) enum (FasterPAM uses the same one), re-exported
+/// under its historical name.
+pub use super::Init as TrikmedsInit;
 
 impl TrikmedsOpts {
     /// Defaults: uniform init with seed 0, exact (ε = 0), 100-iter cap,
@@ -204,12 +200,14 @@ fn trikmeds_impl<M: MetricSpace>(metric: &M, opts: &TrikmedsOpts) -> (Clustering
     // ---- main loop (Alg. 6) --------------------------------------------
     let mut iterations = 0;
     let mut converged = false;
+    let mut swaps = 0usize;
     for _ in 0..opts.max_iters {
         iterations += 1;
-        let medoids_changed = update_medoids(metric, &mut st, opts);
+        let moved = update_medoids(metric, &mut st, opts);
         let assignments_changed = assign_to_clusters(metric, &mut st, opts.eps);
         update_sum_bounds(&mut st);
-        if !medoids_changed && !assignments_changed {
+        swaps += moved;
+        if moved == 0 && !assignments_changed {
             converged = true;
             break;
         }
@@ -222,6 +220,7 @@ fn trikmeds_impl<M: MetricSpace>(metric: &M, opts: &TrikmedsOpts) -> (Clustering
         loss,
         iterations,
         converged,
+        swaps,
     };
     (result, st)
 }
@@ -229,9 +228,9 @@ fn trikmeds_impl<M: MetricSpace>(metric: &M, opts: &TrikmedsOpts) -> (Clustering
 /// Alg. 8, as an engine run per cluster: the member list is the universe
 /// ([`SubsetSpace`]), the incumbent medoid's exact sum is the threshold,
 /// and bound propagation `S(j) >= |S(i) - v·dist(i,j)|` is the engine's
-/// shared pass. Returns true if any medoid moved.
-fn update_medoids<M: MetricSpace>(metric: &M, st: &mut State, opts: &TrikmedsOpts) -> bool {
-    let mut any_moved = false;
+/// shared pass. Returns the number of medoids that moved.
+fn update_medoids<M: MetricSpace>(metric: &M, st: &mut State, opts: &TrikmedsOpts) -> usize {
+    let mut moved = 0usize;
     let mut lb: Vec<f64> = Vec::new();
     let mut order: Vec<usize> = Vec::new();
     for c in 0..st.k {
@@ -281,14 +280,14 @@ fn update_medoids<M: MetricSpace>(metric: &M, st: &mut State, opts: &TrikmedsOpt
         // the tolerance of every bound use.
         st.ls[st.medoids[c]] = st.s[c];
         if st.medoids[c] != old_medoid {
-            any_moved = true;
+            moved += 1;
             st.p[c] = metric.dist(old_medoid, st.medoids[c]);
         } else {
             st.p[c] = 0.0;
         }
         st.members[c] = mem;
     }
-    any_moved
+    moved
 }
 
 /// Alg. 9, block-batched. Returns true if any assignment changed.

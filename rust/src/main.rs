@@ -6,7 +6,8 @@
 //!   natively or over the XLA runtime (`--xla`).
 //! * `stream`    — maintain an exact medoid over insert/remove churn,
 //!   reporting per-query work and amortised distance counts.
-//! * `kmedoids`  — cluster with trikmeds-ε or KMEDS.
+//! * `kmedoids`  — cluster with trikmeds-ε, FasterPAM eager/steepest
+//!   swaps, or KMEDS.
 //! * `exp`       — regenerate a paper table/figure (`--id fig3|table1|...`).
 //! * `artifacts` — verify the AOT artifact registry loads and compiles.
 
@@ -21,8 +22,10 @@ use trimed::data::{io as data_io, Points};
 use trimed::engine::{Kernel, Precision};
 use trimed::harness::experiments;
 use trimed::harness::{BatchSpec, ExecConfig, Scale};
-use trimed::kmedoids::{kmeds, trikmeds, KmedsOpts, TrikmedsOpts};
-use trimed::kmedoids::trikmeds::TrikmedsInit;
+use trimed::kmedoids::{
+    fasterpam, kmeds, trikmeds, FasterPamOpts, Init, KmedoidsAlgo, KmedsOpts, SwapStrategy,
+    TrikmedsOpts,
+};
 use trimed::metric::{Counted, MetricSpace, VectorMetric, XlaVectorMetric};
 use trimed::rng::Rng;
 use trimed::runtime::{Registry, Runtime};
@@ -42,7 +45,7 @@ USAGE:
   trimed kmedoids [--data SPEC] [--n N] [--d D] [--seed S] [--k K] [--eps E]
                   [--threads T] [--batch B] [--kernel exact|fast]
                   [--precision f64|f32] [--center auto|on|off]
-                  [--algo trikmeds|kmeds]
+                  [--algo trikmeds|fasterpam|kmeds] [--swap eager|steepest]
   trimed exp      --id fig3|table1|table2|table3|fig4|fig7|all [--scale small|medium|full] [--seed S] [--save DIR]
   trimed artifacts [--dir DIR]
 
@@ -60,6 +63,20 @@ STREAMING (stream):
                (default 10); every query returns the same slot and
                bit-identical energy as a from-scratch trimed run over the
                live set (see the streaming module docs)
+
+K-MEDOIDS (kmedoids):
+  --algo A     trikmeds (default, or $TRIMED_KMEDOIDS_ALGO): the paper's
+               bound-accelerated Voronoi iteration; fasterpam: the
+               Schubert-Rousseeuw swap-phase local search — per-point
+               nearest/second-nearest caches and per-medoid removal
+               losses make each candidate swap O(1) per point, with
+               candidate rows served as batched (threaded, panel-fast)
+               scans; kmeds: the Park-Jun Θ(N²) baseline
+  --swap S     fasterpam swap acceptance (default eager): `eager`
+               applies an improving swap immediately (fewest sweeps),
+               `steepest` applies the single best swap per sweep. Both
+               reach a PAM local optimum; results for either are
+               invariant across kernel/precision/threads/batch
 
 PARALLELISM:
   --threads T  OS threads per batched distance pass (default
@@ -159,7 +176,11 @@ fn exec_config(args: &Args, batch_heuristic: bool) -> Result<ExecConfig> {
             None => bail!("--precision expects `f64` or `f32`, got {v:?}"),
         }
     }
-    Ok(ExecConfig { threads, batch: batch.max(1), batch_auto, kernel, precision })
+    // `--algo` for kmedoids is resolved by cmd_kmedoids (the medoid
+    // subcommand reuses the same key for its own algorithms); the env
+    // default is carried through here.
+    let kmedoids_algo = ExecConfig::env_kmedoids_algo().unwrap_or(KmedoidsAlgo::Trikmeds);
+    Ok(ExecConfig { threads, batch: batch.max(1), batch_auto, kernel, precision, kmedoids_algo })
 }
 
 /// Resolve `--center`: `on`/`off` are explicit; `auto` (the default)
@@ -390,12 +411,27 @@ fn cmd_kmedoids(args: &Args) -> Result<()> {
     let seed = args.get_parsed("seed", 0u64)?;
     let k = args.get_parsed("k", 10usize)?;
     let eps = args.get_parsed("eps", 0.0f64)?;
-    let algo = args.get("algo").unwrap_or("trikmeds");
-    // trikmeds' hot loops are batched rectangles, so a lone --threads
-    // deserves the same widened default batch as `medoid`; KMEDS is the
-    // plain quadratic reference and takes no engine options.
-    let exec = exec_config(args, algo == "trikmeds")?;
-    let fast_engine = algo == "trikmeds";
+    let algo = match args.get("algo") {
+        None => ExecConfig::env_kmedoids_algo().unwrap_or(KmedoidsAlgo::Trikmeds),
+        Some(v) => match KmedoidsAlgo::parse(v) {
+            Some(a) => a,
+            None => bail!("--algo expects trikmeds|fasterpam|kmeds, got {v:?}"),
+        },
+    };
+    let swap = match args.get("swap") {
+        None => SwapStrategy::Eager,
+        Some(v) => match SwapStrategy::parse(v) {
+            Some(s) => s,
+            None => bail!("--swap expects eager|steepest, got {v:?}"),
+        },
+    };
+    // trikmeds' and fasterpam's hot loops are batched rectangles/scans,
+    // so a lone --threads deserves the same widened default batch as
+    // `medoid`; KMEDS is the plain quadratic reference whose matrix
+    // build is threaded but takes no other engine options.
+    let fast_engine = algo != KmedoidsAlgo::Kmeds;
+    let mut exec = exec_config(args, fast_engine)?;
+    exec.kmedoids_algo = algo;
     let effective_kernel = if fast_engine { exec.kernel.name() } else { "exact" };
     let effective_precision = if fast_engine && exec.kernel == Kernel::Fast {
         exec.precision.name()
@@ -407,8 +443,14 @@ fn cmd_kmedoids(args: &Args) -> Result<()> {
         pts.center();
     }
     let (n, d) = (pts.len(), pts.dim());
+    let swap_note = if algo == KmedoidsAlgo::Fasterpam {
+        format!(" swap={}", swap.name())
+    } else {
+        String::new()
+    };
     println!(
-        "dataset: N={n} d={d} algo={algo} K={k} threads={} batch={}{} kernel={} precision={} center={}",
+        "dataset: N={n} d={d} algo={}{swap_note} K={k} threads={} batch={}{} kernel={} precision={} center={}",
+        algo.name(),
         exec.threads,
         exec.batch,
         if exec.batch_auto { " (auto)" } else { "" },
@@ -419,10 +461,10 @@ fn cmd_kmedoids(args: &Args) -> Result<()> {
     let m = Counted::new(VectorMetric::new(pts));
     let t0 = std::time::Instant::now();
     let r = match algo {
-        "trikmeds" => trikmeds(
+        KmedoidsAlgo::Trikmeds => trikmeds(
             &m,
             &TrikmedsOpts {
-                init: TrikmedsInit::Uniform(seed),
+                init: Init::Uniform(seed),
                 eps,
                 batch: exec.batch,
                 batch_auto: exec.batch_auto,
@@ -432,14 +474,33 @@ fn cmd_kmedoids(args: &Args) -> Result<()> {
                 ..TrikmedsOpts::new(k)
             },
         ),
-        "kmeds" => kmeds(&m, &KmedsOpts { k, uniform_seed: Some(seed), max_iters: 100 }),
-        other => bail!("unknown --algo {other:?}"),
+        KmedoidsAlgo::Fasterpam => fasterpam(
+            &m,
+            &FasterPamOpts {
+                init: Init::Uniform(seed),
+                swap,
+                batch: exec.batch,
+                batch_auto: exec.batch_auto,
+                threads: exec.threads,
+                kernel: exec.kernel,
+                precision: exec.precision,
+                ..FasterPamOpts::new(k)
+            },
+        ),
+        KmedoidsAlgo::Kmeds => {
+            // The Θ(N²) matrix build goes through blocked many_to_all,
+            // so the threads hint applies to the baseline too.
+            m.set_threads(exec.threads);
+            kmeds(&m, &KmedsOpts { k, uniform_seed: Some(seed), max_iters: 100 })
+        }
     };
     let c = m.counts();
     println!(
-        "algo={algo} K={k} eps={eps} loss={:.4} iters={} converged={} distances={} ({}% of N^2) wall={:.1?}",
+        "algo={} K={k} eps={eps} loss={:.4} iters={} swaps={} converged={} distances={} ({}% of N^2) wall={:.1?}",
+        algo.name(),
         r.loss,
         r.iterations,
+        r.swaps,
         r.converged,
         c.dists,
         (100.0 * c.dists as f64 / (n as f64 * n as f64)).round(),
@@ -505,7 +566,7 @@ fn main() {
     }
     let keys = [
         "data", "n", "d", "seed", "algo", "eps", "k", "id", "scale", "save", "dir", "threads",
-        "batch", "kernel", "precision", "center", "updates", "queries",
+        "batch", "kernel", "precision", "center", "updates", "queries", "swap",
     ];
     let flags = ["xla"];
     let result = Args::parse(argv, &keys, &flags).and_then(|args| {

@@ -6,7 +6,16 @@
 //! one query in and one distance vector out. Point-pair queries
 //! ([`MetricSpace::dist`]) stay native — they are off the hot path.
 //!
-//! Numerics: the artifact computes in f32 with the MXU norm-decomposition,
+//! Batched passes ([`MetricSpace::many_to_all`]) use the multi-query
+//! `many_to_all` artifact when the artifact set carries one: a whole
+//! `(B, d)` query block per dispatch instead of B executes of the
+//! single-query graph, which removes the per-execute host round-trip
+//! (~0.5 ms on the CPU PJRT; EXPERIMENTS.md §Perf) from all but one call
+//! per block. With a pre-PR-9 artifact set the batched pass transparently
+//! falls back to looping the single-query artifact — values identical,
+//! only the dispatch count differs.
+//!
+//! Numerics: the artifacts compute in f32 with the MXU norm-decomposition,
 //! so distances carry ~1e-3·scale absolute error (see
 //! `python/compile/kernels/distance.py`). Algorithms that need exact
 //! triangle-inequality soundness on top of this metric should use a small
@@ -14,31 +23,44 @@
 
 use super::MetricSpace;
 use crate::data::Points;
-use crate::runtime::{OneToAllExec, Runtime};
+use crate::runtime::{ManyToAllExec, OneToAllExec, Runtime};
 use anyhow::Result;
 use std::cell::Cell;
 
-/// Vector metric backed by the `one_to_all` XLA artifact.
+/// Vector metric backed by the `one_to_all` / `many_to_all` XLA artifacts.
 pub struct XlaVectorMetric {
     points: Points,
     exec: OneToAllExec,
-    /// Executions performed (for the hot-path benches).
+    /// Batched executor; `None` when the artifact set has no
+    /// `many_to_all` variant for this `(n, d)` (pre-PR-9 artifacts).
+    many: Option<ManyToAllExec>,
+    /// Executions performed (for the hot-path benches). A batched
+    /// dispatch counts once — the point of the multi-query artifact.
     dispatches: Cell<u64>,
 }
 
 impl XlaVectorMetric {
-    /// Build from a point set: picks an artifact variant, uploads the
-    /// padded dataset to the device once.
+    /// Build from a point set: picks artifact variants, uploads the
+    /// padded dataset to the device once per executor.
     ///
-    /// Errors if no artifact covers `(n, d)` — run `make artifacts` or
-    /// extend the variant grid in `python/compile/aot.py`.
+    /// Errors if no `one_to_all` artifact covers `(n, d)` — run
+    /// `make artifacts` or extend the variant grid in
+    /// `python/compile/aot.py`. A missing `many_to_all` variant is not an
+    /// error (batched passes fall back to the single-query loop).
     pub fn new(runtime: &Runtime, points: Points) -> Result<Self> {
         let n = points.len();
         let d = points.dim();
         let mut exec = runtime.one_to_all(n, d)?;
         let flat: Vec<f32> = points.flat().iter().map(|&v| v as f32).collect();
         exec.load_points(&flat)?;
-        Ok(XlaVectorMetric { points, exec, dispatches: Cell::new(0) })
+        let many = match runtime.many_to_all(n, d) {
+            Ok(mut m) => {
+                m.load_points(&flat)?;
+                Some(m)
+            }
+            Err(_) => None,
+        };
+        Ok(XlaVectorMetric { points, exec, many, dispatches: Cell::new(0) })
     }
 
     /// Underlying point set.
@@ -49,6 +71,12 @@ impl XlaVectorMetric {
     /// Number of artifact executions so far.
     pub fn dispatches(&self) -> u64 {
         self.dispatches.get()
+    }
+
+    /// Whether batched passes run on the multi-query artifact (as opposed
+    /// to the single-query fallback loop).
+    pub fn batched(&self) -> bool {
+        self.many.is_some()
     }
 }
 
@@ -73,6 +101,37 @@ impl MetricSpace for XlaVectorMetric {
         // The f32 norm-decomposition can leave a tiny positive residue at
         // the self-distance; clamp it for metric hygiene.
         out[i] = 0.0;
+    }
+
+    fn many_to_all(&self, ids: &[usize], out: &mut [f64]) {
+        let n = self.points.len();
+        assert_eq!(out.len(), ids.len() * n, "out must be ids.len() × len()");
+        let Some(many) = &self.many else {
+            // Pre-PR-9 artifact set: loop the single-query artifact.
+            for (&i, row) in ids.iter().zip(out.chunks_mut(n.max(1))) {
+                self.one_to_all(i, row);
+            }
+            return;
+        };
+        let d = self.points.dim();
+        let b = many.batch();
+        let mut start = 0usize;
+        while start < ids.len() {
+            let end = (start + b).min(ids.len());
+            let mut queries = Vec::with_capacity((end - start) * d);
+            for &i in &ids[start..end] {
+                queries.extend(self.points.row(i).iter().map(|&v| v as f32));
+            }
+            self.dispatches.set(self.dispatches.get() + 1);
+            many.run(&queries, &mut out[start * n..end * n]).unwrap_or_else(|e| {
+                panic!("XLA many_to_all({:?}) failed (d={d}): {e:#}", &ids[start..end])
+            });
+            start = end;
+        }
+        // Self-distance clamp, as in one_to_all.
+        for (qi, &i) in ids.iter().enumerate() {
+            out[qi * n + i] = 0.0;
+        }
     }
 }
 

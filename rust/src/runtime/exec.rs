@@ -1,10 +1,13 @@
 //! Typed executors over the compiled artifacts.
 //!
-//! Both executors follow the padding contract of `python/compile/model.py`:
+//! All executors follow the padding contract of `python/compile/model.py`:
 //! the dataset is tail-padded to the artifact's `n_pad` with copies of the
 //! last real row; `pad_count` and the true `n` ride along as `f32[1]`
 //! device buffers. Points and constants are uploaded once; per call only
-//! the query (and for `trimed_step` the bounds) cross the host boundary.
+//! the queries (and for `trimed_step` the bounds) cross the host boundary.
+//! The batched `many_to_all` executor adds a second padding axis: its
+//! query block is a static `(B, d)`, and short final blocks are padded by
+//! repeating the last real query (those rows are computed and discarded).
 
 use super::registry::ArtifactInfo;
 use anyhow::{anyhow, bail, Context, Result};
@@ -121,6 +124,99 @@ impl OneToAllExec {
             .copied()
             .context("empty sum output")?;
         Ok(s as f64)
+    }
+}
+
+/// Executor for the batched `many_to_all` artifact: distances and
+/// pad-corrected sums for up to `b` queries in one dispatch, amortising
+/// the per-execute host round-trip that dominates when the single-query
+/// artifact is looped.
+pub struct ManyToAllExec {
+    client: xla::PjRtClient,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    info: ArtifactInfo,
+    n: usize,
+    loaded: Option<Loaded>,
+}
+
+impl ManyToAllExec {
+    pub(super) fn new(
+        client: xla::PjRtClient,
+        exe: Rc<xla::PjRtLoadedExecutable>,
+        info: ArtifactInfo,
+        n: usize,
+    ) -> Self {
+        ManyToAllExec { client, exe, info, n, loaded: None }
+    }
+
+    /// The artifact backing this executor.
+    pub fn info(&self) -> &ArtifactInfo {
+        &self.info
+    }
+
+    /// Number of real (unpadded) points.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Queries per dispatch (the artifact's static B). Callers chunk
+    /// longer query lists into blocks of this width.
+    pub fn batch(&self) -> usize {
+        self.info.b
+    }
+
+    /// Upload the dataset (row-major n×d f32). Must be called once before
+    /// [`Self::run`].
+    pub fn load_points(&mut self, flat: &[f32]) -> Result<()> {
+        self.loaded = Some(load_dataset(&self.client, &self.info, self.n, flat)?);
+        Ok(())
+    }
+
+    /// Distances from `nq = queries.len()/d` queries (row-major, `nq ≤ b`)
+    /// to all points, written row-major into `out[0..nq*n]` as f64.
+    /// Returns the `nq` pad-corrected sums. A short block is padded up to
+    /// `b` by repeating the last query; the pad rows never reach `out`.
+    pub fn run(&self, queries: &[f32], out: &mut [f64]) -> Result<Vec<f64>> {
+        let loaded = self.loaded.as_ref().context("load_points not called")?;
+        let d = self.info.d;
+        let b = self.info.b;
+        if queries.is_empty() || queries.len() % d != 0 {
+            bail!("queries len {} not a positive multiple of d = {d}", queries.len());
+        }
+        let nq = queries.len() / d;
+        if nq > b {
+            bail!("{nq} queries exceed the artifact's block width {b}");
+        }
+        if out.len() != nq * self.n {
+            bail!("out len {} != nq*n = {}*{}", out.len(), nq, self.n);
+        }
+        let mut block = Vec::with_capacity(b * d);
+        block.extend_from_slice(queries);
+        let last = &queries[(nq - 1) * d..];
+        for _ in nq..b {
+            block.extend_from_slice(last);
+        }
+        let qbuf = upload(&self.client, &block, &[b, d])?;
+        // many_to_all takes (queries, points, pad_count) — like
+        // one_to_all, n_true would be dead in the graph.
+        let results = self
+            .exe
+            .execute_b(&[&qbuf, &loaded.points, &loaded.pad_count])
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.info.name))?;
+        let tuple = results[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let (dists, sums) = tuple.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let dvec: Vec<f32> = dists.to_vec().map_err(|e| anyhow!("dists to_vec: {e:?}"))?;
+        let n_pad = self.info.n_pad;
+        for qi in 0..nq {
+            let src = &dvec[qi * n_pad..qi * n_pad + self.n];
+            for (o, &v) in out[qi * self.n..(qi + 1) * self.n].iter_mut().zip(src.iter()) {
+                *o = v as f64;
+            }
+        }
+        let svec: Vec<f32> = sums.to_vec().map_err(|e| anyhow!("sums to_vec: {e:?}"))?;
+        Ok(svec[..nq].iter().map(|&v| v as f64).collect())
     }
 }
 

@@ -9,6 +9,8 @@
 //!
 //! * `one_to_all`  — distances from a query to every (padded) point plus
 //!   the pad-corrected distance sum;
+//! * `many_to_all` — the batched multi-query variant: a static `(B, d)`
+//!   query block per dispatch, for the engine's batched rounds;
 //! * `trimed_step` — the full trimed inner step (distances + sum + bound
 //!   tightening) in a single dispatch.
 //!
@@ -32,11 +34,13 @@ pub mod exec;
 #[cfg(feature = "xla")]
 mod pjrt;
 #[cfg(feature = "xla")]
-pub use exec::{OneToAllExec, StepOut, TrimedStepExec};
+pub use exec::{ManyToAllExec, OneToAllExec, StepOut, TrimedStepExec};
 #[cfg(feature = "xla")]
 pub use pjrt::{artifacts_available, Runtime};
 
 #[cfg(not(feature = "xla"))]
 mod stub;
 #[cfg(not(feature = "xla"))]
-pub use stub::{artifacts_available, OneToAllExec, Runtime, StepOut, TrimedStepExec};
+pub use stub::{
+    artifacts_available, ManyToAllExec, OneToAllExec, Runtime, StepOut, TrimedStepExec,
+};

@@ -6,7 +6,7 @@
 //! across calls (`execute_b`), so the steady-state per-call traffic is one
 //! query vector in and one distance vector out.
 
-use super::exec::{OneToAllExec, TrimedStepExec};
+use super::exec::{ManyToAllExec, OneToAllExec, TrimedStepExec};
 use super::registry::Registry;
 use anyhow::{Context, Result};
 use std::cell::RefCell;
@@ -88,6 +88,21 @@ impl Runtime {
             .clone();
         let exe = self.executable(&info.name)?;
         Ok(OneToAllExec::new(self.client.clone(), exe, info, n))
+    }
+
+    /// Typed batched multi-query executor for `n` real points of
+    /// dimension `d` (up to the artifact's static B queries per
+    /// dispatch; see [`ManyToAllExec::batch`]). Errors when the artifact
+    /// set predates the `many_to_all` op — callers fall back to looping
+    /// [`Self::one_to_all`].
+    pub fn many_to_all(&self, n: usize, d: usize) -> Result<ManyToAllExec> {
+        let info = self
+            .registry
+            .best_variant("many_to_all", n, d)
+            .with_context(|| format!("no many_to_all artifact fits n={n} d={d}"))?
+            .clone();
+        let exe = self.executable(&info.name)?;
+        Ok(ManyToAllExec::new(self.client.clone(), exe, info, n))
     }
 
     /// Typed trimed-step executor (distances + sum + bound update).

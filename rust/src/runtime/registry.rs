@@ -1,9 +1,10 @@
 //! Artifact manifest parsing and variant selection.
 //!
 //! `python/compile/aot.py` writes `manifest.tsv` with one row per emitted
-//! HLO artifact: `name  op  n_pad  d  tile  file`. The registry picks,
+//! HLO artifact: `name  op  n_pad  d  tile  b  file`. The registry picks,
 //! for a requested `(op, n, d)`, the smallest `n_pad >= n` variant with an
-//! exact dimension match.
+//! exact dimension match. Pre-PR-9 manifests without the `b` (queries per
+//! dispatch) column still parse — `b` defaults to 1.
 
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -13,7 +14,7 @@ use std::path::Path;
 pub struct ArtifactInfo {
     /// Unique artifact name, e.g. `one_to_all_n4096_d2`.
     pub name: String,
-    /// Operation: `one_to_all` or `trimed_step`.
+    /// Operation: `one_to_all`, `many_to_all` or `trimed_step`.
     pub op: String,
     /// Padded point count the HLO was lowered for.
     pub n_pad: usize,
@@ -21,6 +22,9 @@ pub struct ArtifactInfo {
     pub d: usize,
     /// Pallas tile size used at lowering (informational).
     pub tile: usize,
+    /// Queries per dispatch (1 for the single-query ops; the static B of
+    /// the batched `many_to_all` artifact).
+    pub b: usize,
     /// File name within the artifact directory.
     pub file: String,
 }
@@ -47,16 +51,23 @@ impl Registry {
                 continue;
             }
             let f: Vec<&str> = line.split('\t').collect();
-            if f.len() != 6 {
-                bail!("manifest line {}: expected 6 fields, got {}", lineno + 1, f.len());
+            // 6 fields: pre-PR-9 manifest without the `b` column (b = 1).
+            if f.len() != 6 && f.len() != 7 {
+                bail!("manifest line {}: expected 6 or 7 fields, got {}", lineno + 1, f.len());
             }
+            let b = if f.len() == 7 {
+                f[5].parse().with_context(|| format!("line {}: b", lineno + 1))?
+            } else {
+                1
+            };
             artifacts.push(ArtifactInfo {
                 name: f[0].to_string(),
                 op: f[1].to_string(),
                 n_pad: f[2].parse().with_context(|| format!("line {}: n_pad", lineno + 1))?,
                 d: f[3].parse().with_context(|| format!("line {}: d", lineno + 1))?,
                 tile: f[4].parse().with_context(|| format!("line {}: tile", lineno + 1))?,
-                file: f[5].to_string(),
+                b,
+                file: f[f.len() - 1].to_string(),
             });
         }
         Ok(Registry { artifacts })
@@ -95,19 +106,33 @@ mod tests {
     use super::*;
 
     const SAMPLE: &str = "\
-# name\top\tn_pad\td\ttile\tfile
-one_to_all_n512_d2\tone_to_all\t512\t2\t512\tone_to_all_n512_d2.hlo.txt
-one_to_all_n4096_d2\tone_to_all\t4096\t2\t512\tone_to_all_n4096_d2.hlo.txt
-one_to_all_n4096_d3\tone_to_all\t4096\t3\t512\tone_to_all_n4096_d3.hlo.txt
-trimed_step_n4096_d2\ttrimed_step\t4096\t2\t512\ttrimed_step_n4096_d2.hlo.txt
+# name\top\tn_pad\td\ttile\tb\tfile
+one_to_all_n512_d2\tone_to_all\t512\t2\t512\t1\tone_to_all_n512_d2.hlo.txt
+one_to_all_n4096_d2\tone_to_all\t4096\t2\t512\t1\tone_to_all_n4096_d2.hlo.txt
+one_to_all_n4096_d3\tone_to_all\t4096\t3\t512\t1\tone_to_all_n4096_d3.hlo.txt
+many_to_all_n4096_d2\tmany_to_all\t4096\t2\t512\t8\tmany_to_all_n4096_d2.hlo.txt
+trimed_step_n4096_d2\ttrimed_step\t4096\t2\t512\t1\ttrimed_step_n4096_d2.hlo.txt
 ";
 
     #[test]
     fn parse_and_lookup() {
         let r = Registry::parse(SAMPLE).unwrap();
-        assert_eq!(r.artifacts().len(), 4);
+        assert_eq!(r.artifacts().len(), 5);
         assert!(r.by_name("one_to_all_n4096_d3").is_some());
         assert!(r.by_name("nope").is_none());
+        assert_eq!(r.by_name("many_to_all_n4096_d2").unwrap().b, 8);
+        assert_eq!(r.by_name("one_to_all_n512_d2").unwrap().b, 1);
+    }
+
+    #[test]
+    fn legacy_six_field_manifest_parses_with_b_one() {
+        let r = Registry::parse(
+            "one_to_all_n512_d2\tone_to_all\t512\t2\t512\tone_to_all_n512_d2.hlo.txt\n",
+        )
+        .unwrap();
+        let a = r.by_name("one_to_all_n512_d2").unwrap();
+        assert_eq!(a.b, 1);
+        assert_eq!(a.file, "one_to_all_n512_d2.hlo.txt");
     }
 
     #[test]

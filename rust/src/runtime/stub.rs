@@ -61,6 +61,11 @@ impl Runtime {
     }
 
     /// Always fails in stub builds.
+    pub fn many_to_all(&self, _n: usize, _d: usize) -> Result<ManyToAllExec> {
+        bail!(NO_XLA)
+    }
+
+    /// Always fails in stub builds.
     pub fn trimed_step(&self, _n: usize, _d: usize) -> Result<TrimedStepExec> {
         bail!(NO_XLA)
     }
@@ -94,6 +99,38 @@ impl OneToAllExec {
 
     /// Always fails in stub builds.
     pub fn run(&self, _query: &[f32], _out: &mut [f64]) -> Result<f64> {
+        bail!(NO_XLA)
+    }
+}
+
+/// Stub batched multi-query executor (never constructed).
+pub struct ManyToAllExec {
+    _private: (),
+}
+
+impl ManyToAllExec {
+    /// Unreachable: stub executors are never constructed.
+    pub fn info(&self) -> &ArtifactInfo {
+        unreachable!("stub ManyToAllExec cannot be constructed")
+    }
+
+    /// Number of real (unpadded) points.
+    pub fn n(&self) -> usize {
+        0
+    }
+
+    /// Queries per dispatch (the artifact's static B).
+    pub fn batch(&self) -> usize {
+        0
+    }
+
+    /// Always fails in stub builds.
+    pub fn load_points(&mut self, _flat: &[f32]) -> Result<()> {
+        bail!(NO_XLA)
+    }
+
+    /// Always fails in stub builds.
+    pub fn run(&self, _queries: &[f32], _out: &mut [f64]) -> Result<Vec<f64>> {
         bail!(NO_XLA)
     }
 }

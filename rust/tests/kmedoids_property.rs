@@ -1,0 +1,345 @@
+//! Property tests for the FasterPAM swap phase and its A/B contract with
+//! trikmeds/KMEDS: descent from any fixpoint, same-init quality, eager vs
+//! steepest comparability, bit-level invariance across kernel × precision
+//! × threads × batch, and the O(N)-rows-per-sweep work budget.
+//!
+//! Run under Miri these shrink with `testutil::dataset_zoo`'s reduced
+//! shapes; the branch coverage (guard band, tie handling, cache updates)
+//! is identical.
+
+use trimed::data::synthetic as syn;
+use trimed::engine::{Kernel, Precision};
+use trimed::kmedoids::trikmeds::TrikmedsInit;
+use trimed::kmedoids::{
+    fasterpam, kmeds, loss as recompute_loss, trikmeds, uniform_init, FasterPamOpts, Init,
+    KmedsOpts, SwapStrategy, TrikmedsOpts,
+};
+use trimed::metric::{Counted, VectorMetric};
+use trimed::testutil::{check, dataset_zoo};
+
+/// FasterPAM options pinned for trajectory comparisons: everything fixed
+/// except what the test varies.
+fn base_opts(k: usize, init: Init, swap: SwapStrategy) -> FasterPamOpts {
+    FasterPamOpts { init, swap, ..FasterPamOpts::new(k) }
+}
+
+#[test]
+fn prop_descends_from_trikmeds_fixpoint() {
+    // Local search started at another algorithm's output can only keep or
+    // lower the loss — this direction is provable, unlike same-init
+    // comparisons, so it gets the tight tolerance.
+    let cases = if cfg!(miri) { 3 } else { 10 };
+    check(4100, cases, |rng| {
+        let n = if cfg!(miri) { 40 + rng.below(30) } else { 80 + rng.below(220) };
+        let k = 2 + rng.below(6.min(n / 5));
+        let pts = syn::gauss_mix(n, 2, k, 0.02 + rng.f64() * 0.1, rng.next_u64());
+        let m = VectorMetric::new(pts);
+        let t = trikmeds(
+            &m,
+            &TrikmedsOpts { init: TrikmedsInit::Uniform(rng.next_u64()), ..TrikmedsOpts::new(k) },
+        );
+        for swap in [SwapStrategy::Eager, SwapStrategy::Steepest] {
+            let f = fasterpam(&m, &base_opts(k, Init::Given(t.medoids.clone()), swap));
+            if f.loss > t.loss + 1e-9 {
+                return Err(format!(
+                    "fasterpam-{} from trikmeds fixpoint worsened loss: {} vs {}",
+                    swap.name(),
+                    f.loss,
+                    t.loss
+                ));
+            }
+            let l = recompute_loss(&m, &f.medoids, &f.assignments);
+            if (l - f.loss).abs() > 1e-6 {
+                return Err(format!("stored loss {} vs recomputed {}", f.loss, l));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_descends_from_kmeds_fixpoint() {
+    // Same provable direction against the Θ(N²) baseline (small N: KMEDS
+    // stores the full matrix).
+    let cases = if cfg!(miri) { 2 } else { 8 };
+    check(4200, cases, |rng| {
+        let n = if cfg!(miri) { 30 + rng.below(20) } else { 60 + rng.below(120) };
+        let k = 2 + rng.below(5.min(n / 5));
+        let pts = syn::gauss_mix(n, 3, k, 0.05, rng.next_u64());
+        let m = VectorMetric::new(pts);
+        let b = kmeds(&m, &KmedsOpts { k, uniform_seed: Some(rng.next_u64()), max_iters: 100 });
+        let f = fasterpam(&m, &base_opts(k, Init::Given(b.medoids.clone()), SwapStrategy::Eager));
+        if f.loss > b.loss + 1e-9 {
+            return Err(format!(
+                "fasterpam from kmeds fixpoint worsened loss: {} vs {}",
+                f.loss, b.loss
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_same_init_quality_comparable() {
+    // From the *same* uniform init neither local optimum provably
+    // dominates, but the PAM-type search should never be far behind
+    // Voronoi iteration. Loose one-sided bound.
+    let cases = if cfg!(miri) { 2 } else { 8 };
+    check(4300, cases, |rng| {
+        let n = if cfg!(miri) { 40 + rng.below(20) } else { 100 + rng.below(200) };
+        let k = 3 + rng.below(5.min(n / 6));
+        let pts = syn::gauss_mix(n, 2, k, 0.04, rng.next_u64());
+        let seed = rng.next_u64();
+        let m = VectorMetric::new(pts);
+        let t = trikmeds(
+            &m,
+            &TrikmedsOpts { init: TrikmedsInit::Uniform(seed), ..TrikmedsOpts::new(k) },
+        );
+        let f = fasterpam(&m, &base_opts(k, Init::Uniform(seed), SwapStrategy::Eager));
+        if f.loss > t.loss * 1.25 + 1e-9 {
+            return Err(format!(
+                "fasterpam much worse than trikmeds from shared init: {} vs {}",
+                f.loss, t.loss
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eager_and_steepest_comparable() {
+    // Both strategies converge to (possibly different) swap-local optima;
+    // neither should be far better than the other.
+    let cases = if cfg!(miri) { 2 } else { 8 };
+    check(4400, cases, |rng| {
+        let n = if cfg!(miri) { 40 + rng.below(20) } else { 100 + rng.below(200) };
+        let k = 2 + rng.below(6.min(n / 6));
+        let pts = syn::gauss_mix(n, 2, k, 0.05, rng.next_u64());
+        let seed = rng.next_u64();
+        let m = VectorMetric::new(pts);
+        let e = fasterpam(&m, &base_opts(k, Init::Uniform(seed), SwapStrategy::Eager));
+        let s = fasterpam(&m, &base_opts(k, Init::Uniform(seed), SwapStrategy::Steepest));
+        let lo = e.loss.min(s.loss).max(1e-12);
+        if (e.loss - s.loss).abs() > 0.25 * lo + 1e-9 {
+            return Err(format!("eager {} vs steepest {} diverge", e.loss, s.loss));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zoo_invariance_kernel_precision_threads_batch() {
+    // The PR-9 headline contract: the guard band refines any row distance
+    // a decision could depend on back to the canonical kernel, so the
+    // whole trajectory — medoids, assignments, loss *bits*, sweep and
+    // swap counts — is identical across engine configurations. Reference:
+    // exact kernel, sequential, width-1 blocks.
+    struct Variant {
+        kernel: Kernel,
+        precision: Precision,
+        threads: usize,
+        batch: usize,
+        batch_auto: bool,
+    }
+    let variants = if cfg!(miri) {
+        vec![
+            Variant {
+                kernel: Kernel::Fast,
+                precision: Precision::F64,
+                threads: 1,
+                batch: 16,
+                batch_auto: false,
+            },
+            Variant {
+                kernel: Kernel::Fast,
+                precision: Precision::F32,
+                threads: 1,
+                batch: 64,
+                batch_auto: true,
+            },
+        ]
+    } else {
+        // Curated cross-section of the kernel × precision × threads ×
+        // batch cube (the full cube would re-prove the same branches at
+        // debug-build cost): both precisions, both thread regimes, all
+        // three batch shapes including width-1 and the adaptive schedule.
+        vec![
+            Variant {
+                kernel: Kernel::Fast,
+                precision: Precision::F64,
+                threads: 1,
+                batch: 16,
+                batch_auto: false,
+            },
+            Variant {
+                kernel: Kernel::Fast,
+                precision: Precision::F64,
+                threads: 4,
+                batch: 64,
+                batch_auto: true,
+            },
+            Variant {
+                kernel: Kernel::Fast,
+                precision: Precision::F32,
+                threads: 1,
+                batch: 1,
+                batch_auto: false,
+            },
+            Variant {
+                kernel: Kernel::Fast,
+                precision: Precision::F32,
+                threads: 4,
+                batch: 16,
+                batch_auto: false,
+            },
+            Variant {
+                kernel: Kernel::Fast,
+                precision: Precision::F32,
+                threads: 1,
+                batch: 64,
+                batch_auto: true,
+            },
+        ]
+    };
+    for (name, pts) in dataset_zoo() {
+        let n = pts.len();
+        let ks = if cfg!(miri) { vec![3.min(n)] } else { vec![1, 4.min(n), 9.min(n)] };
+        for k in ks {
+            for swap in [SwapStrategy::Eager, SwapStrategy::Steepest] {
+                let m = VectorMetric::new(pts.clone());
+                let reference = fasterpam(
+                    &m,
+                    &FasterPamOpts {
+                        kernel: Kernel::Exact,
+                        batch: 1,
+                        threads: 1,
+                        ..base_opts(k, Init::Uniform(7), swap)
+                    },
+                );
+                for v in &variants {
+                    let m2 = VectorMetric::new(pts.clone());
+                    let r = fasterpam(
+                        &m2,
+                        &FasterPamOpts {
+                            kernel: v.kernel,
+                            precision: v.precision,
+                            threads: v.threads,
+                            batch: v.batch,
+                            batch_auto: v.batch_auto,
+                            ..base_opts(k, Init::Uniform(7), swap)
+                        },
+                    );
+                    let tag = format!(
+                        "{name} k={k} swap={} kernel={} prec={} threads={} batch={}{}",
+                        swap.name(),
+                        v.kernel.name(),
+                        v.precision.name(),
+                        v.threads,
+                        v.batch,
+                        if v.batch_auto { " auto" } else { "" },
+                    );
+                    assert_eq!(r.medoids, reference.medoids, "medoids differ: {tag}");
+                    assert_eq!(r.assignments, reference.assignments, "assignments differ: {tag}");
+                    assert_eq!(
+                        r.loss.to_bits(),
+                        reference.loss.to_bits(),
+                        "loss bits differ: {tag} ({} vs {})",
+                        r.loss,
+                        reference.loss
+                    );
+                    assert_eq!(r.iterations, reference.iterations, "sweep count differs: {tag}");
+                    assert_eq!(r.swaps, reference.swaps, "swap count differs: {tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn row_budget_is_linear_per_sweep() {
+    // The acceptance bound: FasterPAM does O(N) one-to-all rows per sweep
+    // — the removal-loss decomposition evaluates all K slots from ONE row
+    // per candidate, so the row count carries no O(K) factor. Classic PAM
+    // needs a row per (candidate, slot) pair: K·(N−K) rows per sweep.
+    //
+    // Deviation from the issue wording: "far fewer distance calls than
+    // KMEDS" cannot hold as stated — one full candidate sweep already
+    // computes ≈ N² distances, which *is* KMEDS's total. The meaningful
+    // (and paper-faithful) pin is rows-per-sweep: linear in N and
+    // independent of K, versus PAM's K·(N−K).
+    let (n, k) = if cfg!(miri) { (60, 6) } else { (700, 15) };
+    let pts = syn::gauss_mix(n, 3, k, 0.05, 17);
+    let m = Counted::new(VectorMetric::new(pts));
+    // Exact kernel: no guard-band refinement rows, so the count is the
+    // algorithmic minimum and exactly reproducible.
+    let r = fasterpam(
+        &m,
+        &FasterPamOpts { kernel: Kernel::Exact, ..base_opts(k, Init::Uniform(3), SwapStrategy::Eager) },
+    );
+    let sweeps = r.iterations as u64;
+    let rows = m.counts().one_to_all;
+    let linear_budget = k as u64 + sweeps * n as u64;
+    assert!(
+        rows <= linear_budget,
+        "one-to-all rows {rows} exceed k + sweeps·n = {linear_budget} (sweeps={sweeps})"
+    );
+    let pam_rows = k as u64 * (n - k) as u64 * sweeps;
+    assert!(
+        rows * 5 <= pam_rows,
+        "rows {rows} not ≪ PAM's k·(n−k)·sweeps = {pam_rows}"
+    );
+    assert!(r.converged, "must converge well inside the sweep cap");
+}
+
+#[test]
+fn zoo_loss_consistent_and_k_extremes() {
+    // Stored loss must equal a from-scratch recomputation on every zoo
+    // dataset, and the K extremes stay exact: K=1 matches the KMEDS
+    // medoid energy, K=N has zero loss and no swaps.
+    for (name, pts) in dataset_zoo() {
+        let n = pts.len();
+        let m = VectorMetric::new(pts.clone());
+        let r = fasterpam(&m, &base_opts(5.min(n), Init::Uniform(11), SwapStrategy::Eager));
+        let l = recompute_loss(&m, &r.medoids, &r.assignments);
+        assert!(
+            (l - r.loss).abs() <= 1e-6 * l.max(1.0),
+            "{name}: stored {} vs recomputed {l}",
+            r.loss
+        );
+        let r1 = fasterpam(&m, &base_opts(1, Init::Uniform(2), SwapStrategy::Steepest));
+        let b1 = kmeds(&m, &KmedsOpts { k: 1, uniform_seed: Some(2), max_iters: 100 });
+        assert!(
+            (r1.loss - b1.loss).abs() <= 1e-6 * b1.loss.max(1.0),
+            "{name}: K=1 loss {} vs kmeds {}",
+            r1.loss,
+            b1.loss
+        );
+        if cfg!(miri) {
+            continue; // K=N pass adds little UB coverage for its cost
+        }
+        let init: Vec<usize> = (0..n).collect();
+        let rn = fasterpam(&m, &base_opts(n, Init::Given(init), SwapStrategy::Eager));
+        assert!(rn.loss < 1e-9, "{name}: K=N loss {}", rn.loss);
+        assert_eq!(rn.swaps, 0, "{name}: K=N must apply no swaps");
+    }
+}
+
+#[test]
+fn given_init_matches_uniform_init_trajectory() {
+    // Init::Given(uniform_init(..)) must reproduce Init::Uniform(seed)
+    // exactly — the CLI's --algo A/B comparisons rely on this to share
+    // starting medoids across algorithms.
+    let n = if cfg!(miri) { 40 } else { 300 };
+    let pts = syn::uniform_cube(n, 3, 23);
+    let m = VectorMetric::new(pts);
+    let k = 6;
+    let seed = 41;
+    let a = fasterpam(&m, &base_opts(k, Init::Uniform(seed), SwapStrategy::Eager));
+    let b = fasterpam(
+        &m,
+        &base_opts(k, Init::Given(uniform_init(n, k, seed)), SwapStrategy::Eager),
+    );
+    assert_eq!(a.medoids, b.medoids);
+    assert_eq!(a.assignments, b.assignments);
+    assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+}

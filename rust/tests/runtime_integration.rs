@@ -74,6 +74,54 @@ fn one_to_all_sum_is_pad_corrected() {
 }
 
 #[test]
+fn many_to_all_matches_looped_one_to_all() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let pts = uniform_cube(700, 2, 23);
+    let xm = XlaVectorMetric::new(&rt, pts).expect("xla metric");
+    if !xm.batched() {
+        eprintln!("skipping: artifact set has no many_to_all variant");
+        return;
+    }
+    let n = xm.len();
+    // 19 ids: two full blocks of the B=8 artifact plus a padded tail.
+    let ids: Vec<usize> = (0..19).map(|q| (q * 37) % n).collect();
+    let mut batched = vec![0.0; ids.len() * n];
+    xm.many_to_all(&ids, &mut batched);
+    let mut single = vec![0.0; n];
+    for (qi, &i) in ids.iter().enumerate() {
+        xm.one_to_all(i, &mut single);
+        for j in 0..n {
+            let b = batched[qi * n + j];
+            assert!(
+                (single[j] - b).abs() < 1e-6,
+                "id {i} j={j}: single {} batched {b}",
+                single[j]
+            );
+        }
+        assert_eq!(batched[qi * n + i], 0.0, "self-distance clamped");
+    }
+}
+
+#[test]
+fn many_to_all_amortises_dispatches() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let pts = uniform_cube(512, 2, 9);
+    let xm = XlaVectorMetric::new(&rt, pts).expect("xla metric");
+    if !xm.batched() {
+        eprintln!("skipping: artifact set has no many_to_all variant");
+        return;
+    }
+    let n = xm.len();
+    let ids: Vec<usize> = (0..16).collect();
+    let mut out = vec![0.0; ids.len() * n];
+    let before = xm.dispatches();
+    xm.many_to_all(&ids, &mut out);
+    // 16 queries through the B=8 artifact: 2 dispatches, not 16.
+    let used = xm.dispatches() - before;
+    assert!(used < ids.len() as u64, "batched pass used {used} dispatches");
+}
+
+#[test]
 fn trimed_step_tightens_bounds_soundly() {
     let Some(rt) = runtime_or_skip() else { return };
     let pts = uniform_cube(600, 2, 11);
