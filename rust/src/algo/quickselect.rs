@@ -69,6 +69,8 @@ pub fn medoid_1d(xs: &[f64], seed: u64) -> usize {
 }
 
 fn index_of(xs: &[f64], v: f64) -> usize {
+    // PANICS: unreachable — `v` is a quickselect result drawn from `xs`
+    // itself, and quickselect only permutes; bit-equality must hold.
     xs.iter().position(|&x| x == v).expect("value came from xs")
 }
 

@@ -107,7 +107,8 @@ fn exact_pass<M: MetricSpace>(
         .zip(candidates.iter())
         .map(|(&s, &c)| (sum_to_energy(s, n), c))
         .collect();
-    ranked.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a poisoned energy must rank (worst), not panic the sort.
+    ranked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
     let kk = k.min(ranked.len());
     (
         ranked[..kk].iter().map(|&(_, c)| c).collect(),
@@ -130,7 +131,7 @@ pub fn toprank<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult 
 
     let rand = rand_energies_batched(metric, l, opts.seed, opts.batch);
     let mut est_sorted = rand.est_energies.clone();
-    est_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    est_sorted.sort_by(|a, b| a.total_cmp(b));
     let e_k = est_sorted[opts.k - 1];
     let threshold = e_k + 2.0 * opts.alpha_prime * rand.delta_hat * (ln_n / l as f64).sqrt();
 
@@ -176,7 +177,7 @@ pub fn toprank2<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult
         let scale = nf / (l as f64 * (n.max(2) - 1) as f64);
         let mut est: Vec<f64> = sums.iter().map(|s| s * scale).collect();
         let mut sorted = est.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let thr =
             sorted[opts.k - 1] + 2.0 * opts.alpha_prime * delta_hat * (ln_n / l as f64).sqrt();
         est.retain(|&e| e <= thr);
@@ -211,7 +212,7 @@ pub fn toprank2<M: MetricSpace>(metric: &M, opts: &TopRankOpts) -> TopRankResult
     let scale = nf / (n_anchors as f64 * (n.max(2) - 1) as f64);
     let est: Vec<f64> = sums.iter().map(|s| s * scale).collect();
     let mut sorted = est.clone();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let thr =
         sorted[opts.k - 1] + 2.0 * opts.alpha_prime * delta_hat * (ln_n / n_anchors as f64).sqrt();
     let survivors: Vec<usize> = (0..n).filter(|&i| est[i] <= thr).collect();

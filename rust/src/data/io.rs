@@ -3,10 +3,44 @@
 //! No serde in the offline vendor set, so the on-disk format is plain TSV:
 //! a `# d=<dim>` header line followed by one tab-separated row per point.
 
-use super::Points;
+use super::{DataError, Points};
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
+
+/// Quarantine policy for rows carrying non-finite coordinates
+/// (`--on-bad-data` on the CLI).
+///
+/// Shape errors — ragged columns, unparseable tokens — are always hard
+/// errors under either policy: a malformed *file* is a caller bug, while
+/// a poisoned *row* is a data-quality event the caller may legitimately
+/// want to quarantine and keep serving past.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum OnBadData {
+    /// Fail the whole load with a typed [`DataError`] naming the line.
+    Reject,
+    /// Skip poisoned rows; the loader reports how many were dropped.
+    Drop,
+}
+
+impl OnBadData {
+    /// Parse a CLI/env spelling.
+    pub fn parse(s: &str) -> Option<OnBadData> {
+        match s {
+            "reject" => Some(OnBadData::Reject),
+            "drop" => Some(OnBadData::Drop),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            OnBadData::Reject => "reject",
+            OnBadData::Drop => "drop",
+        }
+    }
+}
 
 /// Write a point set to a TSV file.
 pub fn save_points(path: &Path, pts: &Points) -> Result<()> {
@@ -27,12 +61,29 @@ pub fn save_points(path: &Path, pts: &Points) -> Result<()> {
     Ok(())
 }
 
-/// Read a point set written by [`save_points`].
+/// Read a point set written by [`save_points`], rejecting poisoned rows
+/// (equivalent to [`load_points_with`] under [`OnBadData::Reject`]).
 pub fn load_points(path: &Path) -> Result<Points> {
+    Ok(load_points_with(path, OnBadData::Reject)?.0)
+}
+
+/// Read a point set with an explicit quarantine `policy` for rows whose
+/// coordinates are non-finite (`f64::from_str` happily parses "NaN" and
+/// "inf", so a textual file can smuggle poison past the tokenizer).
+///
+/// Returns the loaded set and the number of rows dropped (always 0 under
+/// [`OnBadData::Reject`], which instead fails with a typed
+/// [`DataError::NonFinite`] carrying the offending line number as
+/// context). Ragged columns and unparseable tokens are hard errors under
+/// both policies, and dropped rows still participate in the column-count
+/// consistency check.
+pub fn load_points_with(path: &Path, policy: OnBadData) -> Result<(Points, usize)> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let reader = std::io::BufReader::new(f);
     let mut d: Option<usize> = None;
     let mut data = Vec::new();
+    let mut dropped = 0usize;
+    let mut rows = 0usize;
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
         let line = line.trim();
@@ -56,10 +107,25 @@ pub fn load_points(path: &Path) -> Result<Points> {
             }
             _ => {}
         }
+        if let Some(coord) = row.iter().position(|v| !v.is_finite()) {
+            match policy {
+                OnBadData::Reject => {
+                    return Err(DataError::NonFinite { row: rows, coord, value: row[coord] })
+                        .with_context(|| format!("{path:?} line {}", lineno + 1));
+                }
+                OnBadData::Drop => {
+                    dropped += 1;
+                    continue;
+                }
+            }
+        }
+        rows += 1;
         data.extend(row);
     }
     let d = d.context("empty points file")?;
-    Ok(Points::new(d, data))
+    // Every retained row was gated above, so the permissive constructor
+    // cannot admit poison here.
+    Ok((Points::new(d, data), dropped))
 }
 
 #[cfg(test)]
@@ -85,5 +151,51 @@ mod tests {
     #[test]
     fn missing_file_errors() {
         assert!(load_points(Path::new("/nonexistent/nope.tsv")).is_err());
+    }
+
+    fn write_tsv(name: &str, body: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("trimed_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        std::fs::write(&path, body).unwrap();
+        path
+    }
+
+    #[test]
+    fn reject_policy_names_the_poisoned_line() {
+        let path = write_tsv("poison_reject.tsv", "# d=2\n1.0\t2.0\nNaN\t4.0\n5.0\t6.0\n");
+        let err = load_points(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 3"), "{msg}");
+        assert!(msg.contains("non-finite"), "{msg}");
+        // The typed error survives underneath the anyhow context.
+        assert!(err.chain().any(|c| c.downcast_ref::<DataError>().is_some()), "{msg}");
+    }
+
+    #[test]
+    fn drop_policy_skips_poisoned_rows_and_counts_them() {
+        let path =
+            write_tsv("poison_drop.tsv", "# d=2\n1.0\t2.0\ninf\t4.0\n5.0\t6.0\n7.0\t-inf\n");
+        let (pts, dropped) = load_points_with(&path, OnBadData::Drop).unwrap();
+        assert_eq!(dropped, 2);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts.row(0), &[1.0, 2.0]);
+        assert_eq!(pts.row(1), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn drop_policy_still_rejects_ragged_columns() {
+        let path = write_tsv("poison_ragged.tsv", "1.0\t2.0\nNaN\t4.0\t5.0\n");
+        let err = load_points_with(&path, OnBadData::Drop).unwrap_err();
+        assert!(format!("{err:#}").contains("expected 2 columns"), "{err:#}");
+    }
+
+    #[test]
+    fn on_bad_data_parse_roundtrip() {
+        assert_eq!(OnBadData::parse("reject"), Some(OnBadData::Reject));
+        assert_eq!(OnBadData::parse("drop"), Some(OnBadData::Drop));
+        assert_eq!(OnBadData::parse("ignore"), None);
+        assert_eq!(OnBadData::Reject.name(), "reject");
+        assert_eq!(OnBadData::Drop.name(), "drop");
     }
 }

@@ -7,6 +7,59 @@ pub mod synthetic;
 
 use std::sync::OnceLock;
 
+/// Typed validation failure from the checked [`Points`] constructors
+/// ([`Points::try_new`] / [`Points::try_push`]) and the quarantining
+/// loader ([`io::load_points_with`]).
+///
+/// Non-finite coordinates are the poison the fault-tolerance layer
+/// quarantines at the boundary: a single NaN/inf row admitted into a
+/// `Points` set corrupts the norm caches and every downstream sum bound
+/// (DESIGN.md §Fault tolerance). The permissive `new`/`push` remain for
+/// trusted internal producers (generators, projections); anything
+/// crossing a trust boundary — file loads, CLI input, streaming inserts —
+/// goes through the `try_` constructors.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataError {
+    /// A coordinate was NaN or ±inf. `row`/`coord` locate it in the
+    /// candidate data (0-based); loaders re-anchor `row` to the source
+    /// line via their own context.
+    NonFinite { row: usize, coord: usize, value: f64 },
+    /// A row's length does not match the set's dimensionality.
+    DimMismatch { expected: usize, got: usize },
+    /// Flat data length is not a multiple of the dimensionality.
+    Ragged { len: usize, d: usize },
+    /// Dimensionality zero.
+    ZeroDim,
+}
+
+impl std::fmt::Display for DataError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DataError::NonFinite { row, coord, value } => {
+                write!(f, "non-finite coordinate {value} at row {row} column {coord}")
+            }
+            DataError::DimMismatch { expected, got } => {
+                write!(f, "row has {got} coordinates, expected {expected}")
+            }
+            DataError::Ragged { len, d } => {
+                write!(f, "data length {len} is not a multiple of d={d}")
+            }
+            DataError::ZeroDim => write!(f, "dimension must be positive"),
+        }
+    }
+}
+
+impl std::error::Error for DataError {}
+
+/// First non-finite coordinate in a row, as a [`DataError::NonFinite`]
+/// at the given row index.
+fn check_row_finite(row: &[f64], row_idx: usize) -> Result<(), DataError> {
+    match row.iter().position(|v| !v.is_finite()) {
+        Some(coord) => Err(DataError::NonFinite { row: row_idx, coord, value: row[coord] }),
+        None => Ok(()),
+    }
+}
+
 /// A dense row-major set of `n` points in R^d.
 ///
 /// This is the single vector-data container used across the library: the
@@ -101,6 +154,23 @@ impl Points {
         Points { d, data, sq_norms, max_sq_norm, sum_root_norms, f32: OnceLock::new() }
     }
 
+    /// Checked counterpart of [`Points::new`]: validates the shape and
+    /// every coordinate's finiteness before building any cache, so a
+    /// poisoned row can never reach the norm folds. Empty data is valid
+    /// (an empty set of dimension `d`).
+    pub fn try_new(d: usize, data: Vec<f64>) -> Result<Self, DataError> {
+        if d == 0 {
+            return Err(DataError::ZeroDim);
+        }
+        if data.len() % d != 0 {
+            return Err(DataError::Ragged { len: data.len(), d });
+        }
+        for (i, row) in data.chunks_exact(d).enumerate() {
+            check_row_finite(row, i)?;
+        }
+        Ok(Points::new(d, data))
+    }
+
     /// Empty set with capacity for `n` points.
     pub fn with_capacity(d: usize, n: usize) -> Self {
         assert!(d > 0);
@@ -157,6 +227,20 @@ impl Points {
             m.sq_norms.push(nf);
             m.max_sq_norm = m.max_sq_norm.max(nf);
         }
+    }
+
+    /// Checked counterpart of [`Points::push`]: rejects a wrong-length
+    /// or non-finite row with a typed [`DataError`] *before* touching
+    /// any storage or cache, leaving the set untouched on failure — the
+    /// gate the streaming insert path uses so churn cannot poison live
+    /// bounds.
+    pub fn try_push(&mut self, p: &[f64]) -> Result<(), DataError> {
+        if p.len() != self.d {
+            return Err(DataError::DimMismatch { expected: self.d, got: p.len() });
+        }
+        check_row_finite(p, self.len())?;
+        self.push(p);
+        Ok(())
     }
 
     /// Remove row `i` by moving the last row into its slot (O(d), like
@@ -528,6 +612,61 @@ mod tests {
         assert_eq!(a, b);
         let c = Points::new(2, vec![1.0, 2.0, 3.0, 5.0]);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn try_new_accepts_clean_and_empty_data() {
+        let p = Points::try_new(2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(p.len(), 2);
+        // Empty data of a positive dimension is a valid empty set (the
+        // streaming store starts from exactly this state).
+        let e = Points::try_new(3, Vec::new()).unwrap();
+        assert!(e.is_empty());
+        assert_eq!(e.dim(), 3);
+    }
+
+    #[test]
+    fn try_new_rejects_poison_shape_and_zero_dim() {
+        // NaN never compares equal (even inside a derived PartialEq), so
+        // NaN-carrying variants are matched structurally.
+        let err = Points::try_new(2, vec![1.0, f64::NAN, 3.0, 4.0]).unwrap_err();
+        assert!(matches!(err, DataError::NonFinite { row: 0, coord: 1, value } if value.is_nan()));
+        assert_eq!(
+            Points::try_new(2, vec![1.0, 2.0, f64::INFINITY, 4.0]),
+            Err(DataError::NonFinite { row: 1, coord: 0, value: f64::INFINITY })
+        );
+        assert_eq!(Points::try_new(2, vec![1.0, 2.0, 3.0]), Err(DataError::Ragged { len: 3, d: 2 }));
+        assert_eq!(Points::try_new(0, Vec::new()), Err(DataError::ZeroDim));
+    }
+
+    #[test]
+    fn try_push_rejects_poison_and_leaves_set_untouched() {
+        let mut p = Points::new(2, vec![3.0, 4.0]);
+        let _ = p.rows_f32(); // materialize the mirror: it must not grow on a rejected push
+        assert_eq!(
+            p.try_push(&[1.0, f64::NEG_INFINITY]),
+            Err(DataError::NonFinite { row: 1, coord: 1, value: f64::NEG_INFINITY })
+        );
+        assert_eq!(p.try_push(&[1.0]), Err(DataError::DimMismatch { expected: 2, got: 1 }));
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.rows_f32().len(), 2);
+        assert_eq!(p.max_sq_norm(), 25.0);
+        p.try_push(&[6.0, 8.0]).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.max_sq_norm(), 100.0);
+    }
+
+    #[test]
+    fn data_error_display_is_one_line() {
+        for e in [
+            DataError::NonFinite { row: 3, coord: 1, value: f64::NAN },
+            DataError::DimMismatch { expected: 2, got: 5 },
+            DataError::Ragged { len: 7, d: 2 },
+            DataError::ZeroDim,
+        ] {
+            let s = e.to_string();
+            assert!(!s.is_empty() && !s.contains('\n'), "{s:?}");
+        }
     }
 
     #[test]

@@ -344,11 +344,18 @@ pub fn run_elimination<S: EliminationSpace, R: EliminationRule>(
                 g = guards[q].sqrt();
                 let gs = guard_sums[q];
                 e = gs + 2.0 * nf * f64::EPSILON * (s_out.abs() + gs);
-                // Written as a negated >= so that a non-finite Ŝ or
-                // guard (f32 overflow defense — NaN/inf compares false)
-                // always lands in the refine branch; for finite values
-                // this is exactly `s_out - e < threshold`.
-                if !(s_out - e >= rule.threshold()) {
+                // Poison defense: a fast row carrying any non-finite
+                // entry (backend overflow, injected fault) makes Ŝ — and
+                // hence `s_out`/`e` — non-finite, and such a row must be
+                // recomputed canonically no matter how the comparison
+                // lands. The explicit finiteness test is load-bearing: a
+                // NaN Ŝ compares false and falls through to the refine
+                // branch anyway, but a +inf Ŝ satisfies `Ŝ − e ≥
+                // threshold` and would otherwise be *kept*, poisoning
+                // `lb[i]` to +inf and eliminating the whole universe.
+                // For finite values the negated `>=` is exactly
+                // `s_out - e < threshold`.
+                if !s_out.is_finite() || !e.is_finite() || !(s_out - e >= rule.threshold()) {
                     space.compute_batch(std::slice::from_ref(&ids[q]), row);
                     s_out = row.iter().sum();
                     refined += 1;

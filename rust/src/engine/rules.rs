@@ -94,7 +94,9 @@ impl TopKSumRule {
     pub fn into_ranked(self) -> Vec<(f64, usize)> {
         let mut ranked: Vec<(f64, usize, usize)> =
             self.heap.into_iter().map(|(s, seq, i)| (s.0, seq, i)).collect();
-        ranked.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+        // total_cmp keeps this a total order even if a poisoned (NaN)
+        // sum ever reached the heap — same order OrdF64 gave it there.
+        ranked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         ranked.into_iter().map(|(s, _, i)| (s, i)).collect()
     }
 }
@@ -102,6 +104,8 @@ impl TopKSumRule {
 impl EliminationRule for TopKSumRule {
     fn threshold(&self) -> f64 {
         if self.heap.len() == self.k {
+            // PANICS: unreachable — peek on a heap just checked to hold
+            // k ≥ 1 entries.
             self.heap.peek().unwrap().0 .0
         } else {
             f64::INFINITY
@@ -115,6 +119,8 @@ impl EliminationRule for TopKSumRule {
             self.heap.push((OrdF64(sum), seq, item));
             return;
         }
+        // PANICS: unreachable — the early return above guarantees the
+        // heap holds k ≥ 1 entries here.
         let &(top_sum, top_seq, _) = self.heap.peek().unwrap();
         // `seq` exceeds every stored sequence number, so on a sum tie the
         // incumbent wins — later equal-sum observations are rejected in
@@ -167,7 +173,19 @@ impl EliminationRule for ClusterMedoidRule {
     }
 }
 
-/// f64 wrapper with total order (finite, non-NaN values only).
+/// f64 wrapper ordered by [`f64::total_cmp`] — a *documented total
+/// order*, not a panic on NaN: `-NaN < -inf < … < +inf < +NaN`.
+///
+/// The engine's guard band means rule state normally only ever absorbs
+/// canonical finite sums, but a poisoned observation must degrade
+/// gracefully rather than abort the process (the fault-tolerance
+/// contract). Under this order a NaN sum ranks *worst* (greater than
+/// +inf), so in the top-k max-heap it sits at the top and is evicted
+/// first — a poisoned sum can displace a real one only as long as fewer
+/// than k finite sums have been seen, and `threshold()` then returns the
+/// NaN/inf top, which every strict `<` elimination test treats as
+/// "nothing eliminated" (comparisons with NaN are false). Sound, never
+/// a crash.
 #[derive(Copy, Clone, Debug, PartialEq)]
 struct OrdF64(f64);
 impl Eq for OrdF64 {}
@@ -178,7 +196,7 @@ impl PartialOrd for OrdF64 {
 }
 impl Ord for OrdF64 {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.partial_cmp(&other.0).expect("NaN in OrdF64")
+        self.0.total_cmp(&other.0)
     }
 }
 
@@ -227,6 +245,54 @@ mod tests {
         r.observe(3, 7.0, &[]);
         r.observe(1, 2.0, &[]);
         assert_eq!(r.into_ranked(), vec![(2.0, 1), (7.0, 8)]);
+    }
+
+    #[test]
+    fn poisoned_sum_does_not_panic_topk() {
+        // Regression for the old `expect("NaN in OrdF64")` abort: a
+        // NaN/inf sum reaching the heap must degrade, never panic. Under
+        // total_cmp NaN ranks worst (> +inf), so it is the first evicted
+        // and real sums rank ahead of it in the result.
+        let mut r = TopKSumRule::new(2);
+        r.observe(0, f64::NAN, &[]);
+        r.observe(1, f64::INFINITY, &[]);
+        // Heap is full of poison; threshold is NaN — strict `<`
+        // elimination tests are all false, so nothing gets skipped.
+        assert!(r.threshold().is_nan());
+        r.observe(2, 5.0, &[]); // evicts the NaN top
+        r.observe(3, 3.0, &[]); // evicts the inf top
+        assert_eq!(r.threshold(), 5.0);
+        assert_eq!(r.into_ranked(), vec![(3.0, 3), (5.0, 2)]);
+    }
+
+    #[test]
+    fn poisoned_sum_ranks_last_when_underfull() {
+        // Fewer than k finite observations: the poison stays in the kept
+        // set but sorts after every real sum, and into_ranked must not
+        // panic on it.
+        let mut r = TopKSumRule::new(3);
+        r.observe(7, f64::NAN, &[]);
+        r.observe(8, 4.0, &[]);
+        let ranked = r.into_ranked();
+        assert_eq!(ranked.len(), 2);
+        assert_eq!(ranked[0], (4.0, 8));
+        assert!(ranked[1].0.is_nan());
+        assert_eq!(ranked[1].1, 7);
+    }
+
+    #[test]
+    fn poisoned_sum_never_becomes_best() {
+        let mut r = BestSumRule::new();
+        r.observe(0, f64::NAN, &[]); // NaN < inf is false: ignored
+        assert_eq!(r.best_item, usize::MAX);
+        r.observe(1, 9.0, &[]);
+        r.observe(2, f64::NAN, &[]);
+        r.observe(3, f64::INFINITY, &[]);
+        assert_eq!(r.best_item, 1);
+        assert_eq!(r.best_sum, 9.0);
+        let mut c = ClusterMedoidRule::new(6.0);
+        c.observe(0, f64::NAN, &[1.0]);
+        assert!(!c.improved());
     }
 
     #[test]

@@ -1,0 +1,475 @@
+//! Deterministic chaos injection for the fault-tolerance suite.
+//!
+//! [`FaultyMetric`] wraps any [`MetricSpace`] and misbehaves on a
+//! seeded schedule ([`FaultPlan`]): it poisons fast-path output rows
+//! with NaN/±inf (modeling backend overflow or a corrupted device
+//! buffer), refuses fast batches outright (modeling a truncated or
+//! unavailable kernel), and injects transient dispatch errors into the
+//! canonical batched passes, which it absorbs through the same
+//! bounded-retry/circuit-breaker ladder the XLA backend uses
+//! ([`crate::runtime::resilience`]) with the canonical inner metric as
+//! the fallback server.
+//!
+//! The injection schedule is a pure function of [`FaultPlan::seed`], so
+//! every chaos run reproduces bit for bit; backoff delays are recorded,
+//! never served, so the suite spends no wall time and stays
+//! deterministic under Miri. The wrapper never changes a value the
+//! caller is allowed to rely on: canonical passes are always served
+//! (after retries, natively on exhaustion), and fast-path corruption is
+//! exactly the hostile input the engine's guard-band poison defense
+//! (see `engine` module docs) must convert into canonical refinement.
+//! The headline chaos property — every query under every plan returns
+//! the bit-identical medoid/energy of a clean run or a typed error,
+//! never a panic — lives in `tests/chaos_property.rs`.
+//!
+//! Like [`crate::testutil`] this module ships in the library proper so
+//! integration tests can use it; it has no cost to production callers
+//! that never construct it.
+
+use crate::engine::Precision;
+use crate::metric::{FastScratch, MetricSpace};
+use crate::rng::Rng;
+use crate::runtime::{with_retry, CircuitBreaker, RetryPolicy};
+use std::cell::{Cell, RefCell};
+use std::time::Duration;
+
+/// Seeded description of how a [`FaultyMetric`] misbehaves.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Seed of the injection schedule: same seed, same faults, bit for
+    /// bit.
+    pub seed: u64,
+    /// Per fast-path call: probability that one output entry is
+    /// overwritten with NaN, +inf or −inf (drawn uniformly) after the
+    /// inner kernel has produced the row.
+    pub poison: f64,
+    /// Per fast-path call: probability the call is refused (`false`
+    /// with scribbled output — a truncated batch the caller must treat
+    /// as unspecified and serve canonically).
+    pub decline: f64,
+    /// Budget of injected transient dispatch errors, consumed from the
+    /// front: the first `dispatch_failures` canonical dispatch attempts
+    /// fail. Sized below the retry budget this models a flaky backend
+    /// that recovers; sized far above it, a dead backend that must trip
+    /// the breaker into permanent native serving.
+    pub dispatch_failures: u32,
+}
+
+impl FaultPlan {
+    /// No faults at all: the wrapper becomes pure delegation (harness
+    /// sanity check).
+    pub fn clean(seed: u64) -> Self {
+        FaultPlan { seed, poison: 0.0, decline: 0.0, dispatch_failures: 0 }
+    }
+
+    /// Heavy fast-path corruption, healthy dispatch.
+    pub fn poison_storm(seed: u64) -> Self {
+        FaultPlan { seed, poison: 0.6, decline: 0.25, dispatch_failures: 0 }
+    }
+
+    /// Healthy fast path, `failures` transient dispatch errors.
+    pub fn flaky_backend(seed: u64, failures: u32) -> Self {
+        FaultPlan { seed, poison: 0.0, decline: 0.0, dispatch_failures: failures }
+    }
+
+    /// Everything at once: corruption, refusals and a flaky dispatcher.
+    pub fn chaos(seed: u64) -> Self {
+        FaultPlan { seed, poison: 0.5, decline: 0.2, dispatch_failures: 7 }
+    }
+}
+
+/// Injection and recovery counters accumulated by a [`FaultyMetric`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Fast-path calls whose output got a NaN/±inf entry.
+    pub poisoned: u64,
+    /// Fast-path calls refused (truncated batch, `false`).
+    pub declined: u64,
+    /// Transient dispatch errors actually raised.
+    pub injected_errors: u64,
+    /// Backoff retries the resilience ladder performed absorbing them.
+    pub retries: u64,
+    /// Calls served by the canonical fallback (retry budget exhausted
+    /// or breaker already open).
+    pub fallbacks: u64,
+}
+
+/// A [`MetricSpace`] wrapper that misbehaves on a seeded schedule.
+///
+/// Interior mutability (`Cell`/`RefCell`) keeps the trait surface
+/// `&self`; the wrapper itself is driven from a single thread — inner
+/// backends parallelise internally ([`MetricSpace::set_threads`] is
+/// forwarded), exactly as with [`crate::metric::Counted`].
+pub struct FaultyMetric<M: MetricSpace> {
+    inner: M,
+    plan: FaultPlan,
+    rng: RefCell<Rng>,
+    policy: RetryPolicy,
+    breaker: CircuitBreaker,
+    /// Remaining injected transient dispatch errors.
+    failures_left: Cell<u32>,
+    poisoned: Cell<u64>,
+    declined: Cell<u64>,
+    injected_errors: Cell<u64>,
+    retries: Cell<u64>,
+    fallbacks: Cell<u64>,
+    /// Backoff delays recorded instead of served.
+    slept: RefCell<Vec<Duration>>,
+}
+
+impl<M: MetricSpace> FaultyMetric<M> {
+    /// Wrap `inner` under `plan`, with the default retry policy (whose
+    /// delays are only ever recorded, never slept).
+    pub fn new(inner: M, plan: FaultPlan) -> Self {
+        let rng = RefCell::new(Rng::new(plan.seed));
+        let failures_left = Cell::new(plan.dispatch_failures);
+        FaultyMetric {
+            inner,
+            plan,
+            rng,
+            policy: RetryPolicy::default(),
+            breaker: CircuitBreaker::default(),
+            failures_left,
+            poisoned: Cell::new(0),
+            declined: Cell::new(0),
+            injected_errors: Cell::new(0),
+            retries: Cell::new(0),
+            fallbacks: Cell::new(0),
+            slept: RefCell::new(Vec::new()),
+        }
+    }
+
+    /// Override the retry/backoff schedule.
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy) {
+        self.policy = policy;
+    }
+
+    /// Snapshot of the injection/recovery counters.
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            poisoned: self.poisoned.get(),
+            declined: self.declined.get(),
+            injected_errors: self.injected_errors.get(),
+            retries: self.retries.get(),
+            fallbacks: self.fallbacks.get(),
+        }
+    }
+
+    /// Whether the breaker has tripped permanent canonical serving.
+    pub fn degraded(&self) -> bool {
+        self.breaker.is_open()
+    }
+
+    /// The backoff delays recorded so far (in schedule order).
+    pub fn recorded_sleeps(&self) -> Vec<Duration> {
+        self.slept.borrow().clone()
+    }
+
+    /// The wrapped metric.
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+
+    /// One simulated dispatch of a canonical batched pass: `serve`
+    /// writes the pass via the inner metric. While injected failures
+    /// remain, attempts error and are absorbed by the retry ladder; a
+    /// call that exhausts its budget (or finds the breaker already
+    /// open) is served by the same canonical path directly — so the
+    /// values the caller sees are identical in every branch, which is
+    /// the degradation contract under test.
+    fn dispatch(&self, mut serve: impl FnMut()) {
+        if self.breaker.is_open() {
+            self.fallbacks.set(self.fallbacks.get() + 1);
+            serve();
+            return;
+        }
+        let attempted = with_retry(
+            &self.policy,
+            |d| self.slept.borrow_mut().push(d),
+            || {
+                let left = self.failures_left.get();
+                if left > 0 {
+                    self.failures_left.set(left - 1);
+                    self.injected_errors.set(self.injected_errors.get() + 1);
+                    return Err(anyhow::anyhow!(
+                        "injected transient dispatch failure ({left} queued)"
+                    ));
+                }
+                serve();
+                Ok(())
+            },
+        );
+        self.retries.set(self.retries.get() + u64::from(attempted.retries));
+        match attempted.result {
+            Ok(()) => {
+                self.breaker.record_success();
+            }
+            Err(_) => {
+                self.breaker.record_failure();
+                self.fallbacks.set(self.fallbacks.get() + 1);
+                serve();
+            }
+        }
+    }
+
+    /// Roll the fast-path fault dice: `Some(false)` refuses the call,
+    /// `Some(true)` poisons one entry of `out` after the inner kernel
+    /// ran, `None` passes the call through untouched. All randomness is
+    /// drawn up front so the RefCell borrow never spans the inner call.
+    fn fast_fault(&self, out_len: usize) -> FastFault {
+        if out_len == 0 {
+            return FastFault::None;
+        }
+        let mut rng = self.rng.borrow_mut();
+        if rng.bernoulli(self.plan.decline) {
+            return FastFault::Decline;
+        }
+        if rng.bernoulli(self.plan.poison) {
+            let idx = rng.below(out_len);
+            let value = match rng.below(3) {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                _ => f64::NEG_INFINITY,
+            };
+            return FastFault::Poison { idx, value };
+        }
+        FastFault::None
+    }
+}
+
+/// Outcome of one fast-path fault roll.
+enum FastFault {
+    None,
+    Decline,
+    Poison { idx: usize, value: f64 },
+}
+
+impl<M: MetricSpace> MetricSpace for FaultyMetric<M> {
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    /// Point queries are off the hot path and stay undisturbed.
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.inner.dist(i, j)
+    }
+
+    fn symmetric(&self) -> bool {
+        self.inner.symmetric()
+    }
+
+    fn one_to_all(&self, i: usize, out: &mut [f64]) {
+        self.dispatch(|| self.inner.one_to_all(i, out));
+    }
+
+    fn all_to_one(&self, i: usize, out: &mut [f64]) {
+        self.dispatch(|| self.inner.all_to_one(i, out));
+    }
+
+    fn many_to_all(&self, ids: &[usize], out: &mut [f64]) {
+        self.dispatch(|| self.inner.many_to_all(ids, out));
+    }
+
+    fn all_to_many(&self, ids: &[usize], out: &mut [f64]) {
+        self.dispatch(|| self.inner.all_to_many(ids, out));
+    }
+
+    fn many_to_many(&self, ids: &[usize], targets: &[usize], out: &mut [f64]) {
+        self.dispatch(|| self.inner.many_to_many(ids, targets, out));
+    }
+
+    fn many_to_all_fast(
+        &self,
+        ids: &[usize],
+        out: &mut [f64],
+        guard: &mut [f64],
+        guard_sum: &mut [f64],
+        scratch: &mut FastScratch,
+        precision: Precision,
+    ) -> bool {
+        match self.fast_fault(out.len()) {
+            FastFault::Decline => {
+                self.declined.set(self.declined.get() + 1);
+                // Scribble: a refused call's buffers are unspecified by
+                // contract, and callers must not read them.
+                out[0] = f64::NAN;
+                false
+            }
+            FastFault::Poison { idx, value } => {
+                if !self.inner.many_to_all_fast(ids, out, guard, guard_sum, scratch, precision)
+                {
+                    return false;
+                }
+                out[idx] = value;
+                self.poisoned.set(self.poisoned.get() + 1);
+                true
+            }
+            FastFault::None => {
+                self.inner.many_to_all_fast(ids, out, guard, guard_sum, scratch, precision)
+            }
+        }
+    }
+
+    fn many_to_many_fast(
+        &self,
+        ids: &[usize],
+        targets: &[usize],
+        out: &mut [f64],
+        guard: &mut [f64],
+        guard_sum: &mut [f64],
+        scratch: &mut FastScratch,
+        precision: Precision,
+    ) -> bool {
+        match self.fast_fault(out.len()) {
+            FastFault::Decline => {
+                self.declined.set(self.declined.get() + 1);
+                out[0] = f64::NAN;
+                false
+            }
+            FastFault::Poison { idx, value } => {
+                if !self
+                    .inner
+                    .many_to_many_fast(ids, targets, out, guard, guard_sum, scratch, precision)
+                {
+                    return false;
+                }
+                out[idx] = value;
+                self.poisoned.set(self.poisoned.get() + 1);
+                true
+            }
+            FastFault::None => self
+                .inner
+                .many_to_many_fast(ids, targets, out, guard, guard_sum, scratch, precision),
+        }
+    }
+
+    fn set_threads(&self, threads: usize) {
+        self.inner.set_threads(threads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::uniform_cube;
+    use crate::metric::VectorMetric;
+
+    fn cube_metric() -> VectorMetric {
+        VectorMetric::new(uniform_cube(30, 3, 7))
+    }
+
+    #[test]
+    fn clean_plan_is_pure_delegation() {
+        let inner = cube_metric();
+        let m = FaultyMetric::new(cube_metric(), FaultPlan::clean(1));
+        let n = inner.len();
+        let mut a = vec![0.0; 2 * n];
+        let mut b = vec![0.0; 2 * n];
+        inner.many_to_all(&[0, 17], &mut a);
+        m.many_to_all(&[0, 17], &mut b);
+        assert_eq!(a, b);
+        assert_eq!(m.stats(), FaultStats::default());
+        assert!(!m.degraded());
+        assert!(m.recorded_sleeps().is_empty());
+    }
+
+    #[test]
+    fn same_seed_injects_the_same_faults_bit_for_bit() {
+        let plan = FaultPlan::poison_storm(42);
+        let run = || {
+            let m = FaultyMetric::new(cube_metric(), plan.clone());
+            let n = m.len();
+            let mut out = vec![0.0; 4 * n];
+            let mut guard = vec![0.0; 4];
+            let mut guard_sum = vec![0.0; 4];
+            let mut scratch = FastScratch::default();
+            let oks: Vec<bool> = (0..6)
+                .map(|q| {
+                    m.many_to_all_fast(
+                        &[q, q + 1, q + 2, q + 3],
+                        &mut out,
+                        &mut guard,
+                        &mut guard_sum,
+                        &mut scratch,
+                        Precision::F64,
+                    )
+                })
+                .collect();
+            (oks, out.iter().map(|v| v.to_bits()).collect::<Vec<u64>>(), m.stats())
+        };
+        let (oks_a, bits_a, stats_a) = run();
+        let (oks_b, bits_b, stats_b) = run();
+        assert_eq!(oks_a, oks_b);
+        assert_eq!(bits_a, bits_b);
+        assert_eq!(stats_a, stats_b);
+        // The storm plan must actually have misbehaved.
+        assert!(stats_a.poisoned + stats_a.declined > 0, "no faults fired: {stats_a:?}");
+    }
+
+    #[test]
+    fn transient_failures_are_retried_and_results_stay_canonical() {
+        let inner = cube_metric();
+        let m = FaultyMetric::new(cube_metric(), FaultPlan::flaky_backend(3, 2));
+        let n = inner.len();
+        let mut want = vec![0.0; n];
+        let mut got = vec![0.0; n];
+        inner.one_to_all(5, &mut want);
+        m.one_to_all(5, &mut got);
+        assert_eq!(want, got);
+        let s = m.stats();
+        assert_eq!(s.injected_errors, 2);
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.fallbacks, 0, "budget of {} absorbs 2 failures", m.policy.max_retries);
+        assert!(!m.degraded());
+        // Exponential schedule, recorded rather than served.
+        assert_eq!(m.recorded_sleeps(), vec![m.policy.delay(0), m.policy.delay(1)]);
+    }
+
+    #[test]
+    fn dead_backend_trips_the_breaker_into_permanent_fallback() {
+        let inner = cube_metric();
+        let m = FaultyMetric::new(cube_metric(), FaultPlan::flaky_backend(9, 1000));
+        let n = inner.len();
+        let mut want = vec![0.0; n];
+        let mut got = vec![0.0; n];
+        // Threshold consecutive exhausted calls trip the breaker; every
+        // call still serves the canonical row.
+        for call in 0..5 {
+            inner.one_to_all(call, &mut want);
+            m.one_to_all(call, &mut got);
+            assert_eq!(want, got, "call {call} diverged");
+        }
+        assert!(m.degraded());
+        let s = m.stats();
+        assert_eq!(s.fallbacks, 5);
+        // Once open, no attempts are made: 3 exhausted calls × (1 + 3
+        // retries) attempts consumed the error budget, then silence.
+        let attempts = 3 * (1 + m.policy.max_retries as u64);
+        assert_eq!(s.injected_errors, attempts);
+        m.one_to_all(0, &mut got);
+        assert_eq!(m.stats().injected_errors, attempts);
+    }
+
+    #[test]
+    fn declined_fast_call_reports_false_and_scribbles() {
+        // decline = 1.0: every fast call refuses, and the scribble makes
+        // any caller that wrongly reads the buffer fail loudly.
+        let plan = FaultPlan { seed: 5, poison: 0.0, decline: 1.0, dispatch_failures: 0 };
+        let m = FaultyMetric::new(cube_metric(), plan);
+        let n = m.len();
+        let mut out = vec![0.0; n];
+        let mut guard = vec![0.0; 1];
+        let mut guard_sum = vec![0.0; 1];
+        let mut scratch = FastScratch::default();
+        assert!(!m.many_to_all_fast(
+            &[2],
+            &mut out,
+            &mut guard,
+            &mut guard_sum,
+            &mut scratch,
+            Precision::F32
+        ));
+        assert!(out[0].is_nan());
+        assert_eq!(m.stats().declined, 1);
+    }
+}

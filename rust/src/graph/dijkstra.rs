@@ -8,9 +8,12 @@ use super::CsrGraph;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-/// Min-heap entry ordered by distance. f64 weights are non-negative and
-/// never NaN here, so a total order by bits-after-flip is safe; we use
-/// `partial_cmp` with a NaN debug check.
+/// Min-heap entry ordered by distance. Frontier distances are sums of
+/// arc weights, and [`CsrGraph::from_edges`] validates every weight
+/// finite and non-negative at construction — so NaN cannot reach this
+/// heap and `partial_cmp` with an `Equal` fallback is a total order
+/// here. The debug assert pins that construction-validated invariant at
+/// the point of use.
 #[derive(Copy, Clone)]
 struct HeapEntry {
     dist: f64,

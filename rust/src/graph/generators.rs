@@ -180,7 +180,7 @@ pub fn rail_network(hubs: usize, stations_per_hub: usize, seed: u64) -> SpatialG
             .filter(|&j| j != i)
             .map(|j| (pts.dist(i, j), j))
             .collect();
-        by_dist.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        by_dist.sort_by(|a, b| a.0.total_cmp(&b.0));
         for &(w, j) in by_dist.iter().take(3) {
             if i < j {
                 edges.push((i, j, w));

@@ -26,11 +26,27 @@ pub struct CsrGraph {
 impl CsrGraph {
     /// Build from an arc list `(from, to, weight)`. If `undirected`, each
     /// edge is inserted in both directions.
+    ///
+    /// # Panics
+    ///
+    /// On out-of-range endpoints or weights that are not finite and
+    /// non-negative. Weight validity is a *construction* invariant: every
+    /// downstream consumer (Dijkstra's monotone frontier, the
+    /// shortest-path metric axioms, Floyd-Warshall's relaxation) assumes
+    /// finite non-negative arc weights, so the one constructor is where a
+    /// poisoned weight — NaN parses cleanly from text — must stop, not
+    /// deep inside a priority-queue invariant it would silently corrupt.
     pub fn from_edges(n: usize, edges: &[(usize, usize, f64)], undirected: bool) -> Self {
         let mut degree = vec![0usize; n];
         for &(u, v, w) in edges {
+            // PANICS: documented contract (# Panics above) — malformed
+            // edge lists are a caller bug, checked at the single
+            // construction boundary.
             assert!(u < n && v < n, "edge ({u},{v}) out of range n={n}");
-            assert!(w >= 0.0, "negative weight {w}");
+            assert!(
+                w.is_finite() && w >= 0.0,
+                "edge ({u},{v}) weight {w} must be finite and non-negative"
+            );
             degree[u] += 1;
             if undirected {
                 degree[v] += 1;
@@ -164,6 +180,10 @@ impl CsrGraph {
                     }
                     if lowlink[v] == index[v] {
                         loop {
+                            // PANICS: unreachable — Tarjan's invariant:
+                            // `v` was pushed when first visited and is
+                            // still on the stack, so the pop loop
+                            // terminates at `w == v` before emptying it.
                             let w = stack.pop().unwrap();
                             on_stack[w] = false;
                             comp[w] = ncomp;
@@ -364,6 +384,33 @@ mod tests {
     fn path_graph(n: usize) -> CsrGraph {
         let edges: Vec<(usize, usize, f64)> = (0..n - 1).map(|i| (i, i + 1, 1.0)).collect();
         CsrGraph::from_edges(n, &edges, true)
+    }
+
+    #[test]
+    #[should_panic(expected = "must be finite and non-negative")]
+    fn nan_edge_weight_rejected_at_construction() {
+        // "NaN" parses cleanly from text, so the constructor is the only
+        // gate between a poisoned edge list and Dijkstra's frontier.
+        CsrGraph::from_edges(2, &[(0, 1, f64::NAN)], true);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be finite and non-negative")]
+    fn infinite_edge_weight_rejected_at_construction() {
+        CsrGraph::from_edges(2, &[(0, 1, f64::INFINITY)], false);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be finite and non-negative")]
+    fn negative_edge_weight_rejected_at_construction() {
+        CsrGraph::from_edges(2, &[(0, 1, -1.0)], true);
+    }
+
+    #[test]
+    fn zero_weight_edges_are_valid() {
+        // The boundary case: 0 is a legal shortest-path weight.
+        let g = CsrGraph::from_edges(2, &[(0, 1, 0.0)], true);
+        assert_eq!(dijkstra::dijkstra_pair(&g, 0, 1), 0.0);
     }
 
     #[test]

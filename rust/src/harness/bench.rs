@@ -57,11 +57,11 @@ pub fn time_block<T, F: FnMut() -> T>(warmup: usize, iters: usize, mut f: F) -> 
         std::hint::black_box(f());
         samples.push(t0.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let median = samples[samples.len() / 2];
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
-    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    devs.sort_by(|a, b| a.total_cmp(b));
     BenchStats {
         median_ns: median,
         mean_ns: mean,

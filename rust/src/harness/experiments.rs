@@ -410,6 +410,7 @@ pub fn fig7(scale: Scale, seed: u64) -> Table {
         &m,
         &TrimedOpts { record_trace: true, ..paper_trimed(seed) },
     );
+    // PANICS: unreachable — `record_trace: true` was set two lines up.
     let trace = r.trace.expect("trace requested");
     let mut t = Table::new(
         "Figure 7 (SM-L): computed elements per loop-position decade",
@@ -497,8 +498,10 @@ pub fn ablation_rand_quality(scale: Scale, seed: u64) -> Table {
             .est_energies
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
+            // PANICS: unreachable — est_energies has one entry per point
+            // and n ≥ 1 here, so min_by always yields a winner.
             .unwrap();
         let s = scan_medoid(&m);
         let rel_err = (s.energies[est_best] - s.energy) / s.energy;
@@ -558,7 +561,7 @@ pub fn ablation_order(scale: Scale, seed: u64) -> Table {
     let m = VectorMetric::new(pts);
     let s = scan_medoid(&m);
     let mut by_energy: Vec<usize> = (0..n).collect();
-    by_energy.sort_by(|&a, &b| s.energies[a].partial_cmp(&s.energies[b]).unwrap());
+    by_energy.sort_by(|&a, &b| s.energies[a].total_cmp(&s.energies[b]));
     let mut t = Table::new(
         "Ablation (§3): trimed visiting-order sensitivity",
         &["order", "computed n̂"],

@@ -40,7 +40,8 @@ pub fn park_jun_init<M: MetricSpace>(metric: &M, k: usize) -> Vec<usize> {
             (fi, i)
         })
         .collect();
-    f.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a poisoned score must rank (worst), not panic the init.
+    f.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
     f[..k].iter().map(|&(_, i)| i).collect()
 }
 

@@ -64,7 +64,7 @@ pub fn kmeds<M: MetricSpace>(metric: &M, opts: &KmedsOpts) -> ClusteringResult {
             let mut f: Vec<(f64, usize)> = (0..n)
                 .map(|i| ((0..n).map(|j| if s[j] > 0.0 { d(j, i) / s[j] } else { 0.0 }).sum(), i))
                 .collect();
-            f.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            f.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
             f[..k].iter().map(|&(_, i)| i).collect()
         }
     };

@@ -50,6 +50,7 @@ pub mod algo;
 pub mod cli;
 pub mod data;
 pub mod engine;
+pub mod faults;
 pub mod graph;
 pub mod harness;
 pub mod kmedoids;

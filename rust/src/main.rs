@@ -52,6 +52,12 @@ USAGE:
 DATA SPECS (--data):
   uniform (default) | ball | shell | birch | border | mnist | file:<path.tsv>
 
+BAD DATA (--on-bad-data, file:<path> only):
+  Rows with non-finite coordinates — \"NaN\"/\"inf\" parse cleanly as f64,
+  so a poisoned TSV is not a parse error — are quarantined at load:
+  `reject` (default) fails with a typed error naming the offending line,
+  `drop` skips the rows and reports how many were dropped
+
 ALGORITHMS (--algo for medoid):
   trimed (default) | toprank | toprank2 | rand | scan
 
@@ -135,7 +141,22 @@ fn load_data(args: &Args) -> Result<Points> {
         "mnist" => syn::mnist_like(n, seed),
         other => {
             if let Some(path) = other.strip_prefix("file:") {
-                data_io::load_points(std::path::Path::new(path))?
+                let policy = match args.get("on-bad-data") {
+                    None => data_io::OnBadData::Reject,
+                    Some(v) => match data_io::OnBadData::parse(v) {
+                        Some(p) => p,
+                        None => bail!("--on-bad-data expects `reject` or `drop`, got {v:?}"),
+                    },
+                };
+                let (pts, dropped) =
+                    data_io::load_points_with(std::path::Path::new(path), policy)?;
+                if dropped > 0 {
+                    eprintln!(
+                        "warning: dropped {dropped} row(s) with non-finite coordinates \
+                         from {path}"
+                    );
+                }
+                pts
             } else {
                 bail!("unknown --data spec {other:?} (see --help)");
             }
@@ -289,12 +310,14 @@ fn cmd_medoid(args: &Args) -> Result<()> {
                 m.set_threads(exec.threads);
                 let l = ((n as f64).ln() / 0.05f64.powi(2)).ceil() as usize;
                 let r = rand_energies_batched(&m, l.min(n), seed, exec.batch);
+                // total_cmp: a poisoned estimate must rank, not panic
+                // (NaN sorts above every real energy, so it never wins).
                 let best = r
                     .est_energies
                     .iter()
                     .enumerate()
-                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap();
+                    .min_by(|a, b| a.1.total_cmp(b.1))
+                    .context("rand produced no energy estimates (empty dataset?)")?;
                 (best.0, *best.1)
             }
             "scan" => {
@@ -310,6 +333,19 @@ fn cmd_medoid(args: &Args) -> Result<()> {
         let rt = Runtime::open_default().context("XLA runtime (run `make artifacts`)")?;
         let m = Counted::new(XlaVectorMetric::new(&rt, pts)?);
         let (medoid, energy) = run(&&m)?;
+        // Degraded-serving report (DESIGN.md §Fault tolerance): how many
+        // dispatches were retried and how many passes the native
+        // fallback served. degraded=true means the breaker tripped and
+        // the rest of the run was native — results are identical either
+        // way, only the serving path differs.
+        let x = m.inner();
+        println!(
+            "xla: dispatches={} retries={} fallbacks={} degraded={}",
+            x.dispatches(),
+            x.retries(),
+            x.fallbacks(),
+            x.degraded()
+        );
         (medoid, energy, m.counts())
     } else {
         let m = Counted::new(VectorMetric::new(pts));
@@ -566,7 +602,7 @@ fn main() {
     }
     let keys = [
         "data", "n", "d", "seed", "algo", "eps", "k", "id", "scale", "save", "dir", "threads",
-        "batch", "kernel", "precision", "center", "updates", "queries", "swap",
+        "batch", "kernel", "precision", "center", "updates", "queries", "swap", "on-bad-data",
     ];
     let flags = ["xla"];
     let result = Args::parse(argv, &keys, &flags).and_then(|args| {

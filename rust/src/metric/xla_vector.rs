@@ -15,28 +15,60 @@
 //! falls back to looping the single-query artifact — values identical,
 //! only the dispatch count differs.
 //!
+//! **Fault tolerance.** Dispatch errors never panic. Each failing execute
+//! is retried under a bounded exponential-backoff schedule
+//! ([`RetryPolicy`], injectable sleep — no wall time in tests); a call
+//! that exhausts its budget is served by the native SIMD scan over the
+//! same owned [`super::VectorMetric`] instead, and a [`CircuitBreaker`]
+//! counts such exhausted calls — after enough consecutive failures it
+//! opens permanently and every later pass goes straight to the native
+//! path. Retry and fallback totals are surfaced ([`XlaVectorMetric::retries`],
+//! [`XlaVectorMetric::fallbacks`]) so the CLI dataset line and the
+//! benches can report degraded serving. See DESIGN.md §Fault tolerance
+//! and degradation ladder.
+//!
 //! Numerics: the artifacts compute in f32 with the MXU norm-decomposition,
 //! so distances carry ~1e-3·scale absolute error (see
 //! `python/compile/kernels/distance.py`). Algorithms that need exact
 //! triangle-inequality soundness on top of this metric should use a small
 //! `slack` (see `TrimedOpts::slack`); the self-distance is clamped to 0.
+//! The native fallback rows are *canonical* (exactly what
+//! [`super::VectorMetric`] serves), so degraded serving is never less
+//! accurate than healthy serving.
 
-use super::MetricSpace;
+use super::{MetricSpace, VectorMetric};
 use crate::data::Points;
-use crate::runtime::{ManyToAllExec, OneToAllExec, Runtime};
+use crate::runtime::{
+    with_retry, CircuitBreaker, ManyToAllExec, OneToAllExec, RetryPolicy, Runtime,
+};
 use anyhow::Result;
 use std::cell::Cell;
+use std::time::Duration;
 
-/// Vector metric backed by the `one_to_all` / `many_to_all` XLA artifacts.
+/// Vector metric backed by the `one_to_all` / `many_to_all` XLA artifacts,
+/// with bounded-retry dispatch and a circuit-broken native fallback.
 pub struct XlaVectorMetric {
-    points: Points,
+    /// The canonical fallback: owns the point set and serves any pass the
+    /// XLA path cannot (breaker open, or a call beyond its retry budget).
+    native: VectorMetric,
     exec: OneToAllExec,
     /// Batched executor; `None` when the artifact set has no
     /// `many_to_all` variant for this `(n, d)` (pre-PR-9 artifacts).
     many: Option<ManyToAllExec>,
-    /// Executions performed (for the hot-path benches). A batched
-    /// dispatch counts once — the point of the multi-query artifact.
+    /// Executions attempted (for the hot-path benches). A batched
+    /// dispatch counts once — the point of the multi-query artifact —
+    /// and each retry counts as its own execute.
     dispatches: Cell<u64>,
+    /// Backoff retries performed across all calls.
+    retries: Cell<u64>,
+    /// Calls (or batched blocks) served by the native path instead of
+    /// the artifact — retry-budget exhaustions plus everything routed
+    /// around an open breaker.
+    fallbacks: Cell<u64>,
+    policy: RetryPolicy,
+    breaker: CircuitBreaker,
+    /// Injectable backoff clock; defaults to a real sleep.
+    sleep: fn(Duration),
 }
 
 impl XlaVectorMetric {
@@ -60,17 +92,42 @@ impl XlaVectorMetric {
             }
             Err(_) => None,
         };
-        Ok(XlaVectorMetric { points, exec, many, dispatches: Cell::new(0) })
+        Ok(XlaVectorMetric {
+            native: VectorMetric::new(points),
+            exec,
+            many,
+            dispatches: Cell::new(0),
+            retries: Cell::new(0),
+            fallbacks: Cell::new(0),
+            policy: RetryPolicy::default(),
+            breaker: CircuitBreaker::default(),
+            sleep: std::thread::sleep,
+        })
     }
 
     /// Underlying point set.
     pub fn points(&self) -> &Points {
-        &self.points
+        self.native.points()
     }
 
-    /// Number of artifact executions so far.
+    /// Number of artifact executions attempted so far (retries included).
     pub fn dispatches(&self) -> u64 {
         self.dispatches.get()
+    }
+
+    /// Backoff retries performed so far.
+    pub fn retries(&self) -> u64 {
+        self.retries.get()
+    }
+
+    /// Passes served by the native fallback so far.
+    pub fn fallbacks(&self) -> u64 {
+        self.fallbacks.get()
+    }
+
+    /// Whether the circuit breaker has tripped permanent native serving.
+    pub fn degraded(&self) -> bool {
+        self.breaker.is_open()
     }
 
     /// Whether batched passes run on the multi-query artifact (as opposed
@@ -78,65 +135,128 @@ impl XlaVectorMetric {
     pub fn batched(&self) -> bool {
         self.many.is_some()
     }
+
+    /// Override the retry/backoff schedule (e.g. zero delays in tests).
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy) {
+        self.policy = policy;
+    }
+
+    /// Inject the backoff clock (tests capture delays instead of
+    /// serving them; production keeps the default real sleep).
+    pub fn set_sleep(&mut self, sleep: fn(Duration)) {
+        self.sleep = sleep;
+    }
+
+    /// One retried artifact execute: counts dispatches and retries, and
+    /// keeps the breaker's consecutive-failure streak. `Ok` means the
+    /// artifact produced the pass; `Err` means the budget is exhausted
+    /// and the caller must serve natively.
+    fn dispatch(&self, mut attempt: impl FnMut() -> Result<()>) -> Result<()> {
+        let attempted = with_retry(&self.policy, self.sleep, || {
+            self.dispatches.set(self.dispatches.get() + 1);
+            attempt()
+        });
+        self.retries.set(self.retries.get() + u64::from(attempted.retries));
+        match &attempted.result {
+            Ok(()) => self.breaker.record_success(),
+            Err(_) => {
+                self.breaker.record_failure();
+                self.fallbacks.set(self.fallbacks.get() + 1);
+            }
+        }
+        attempted.result
+    }
 }
 
 impl MetricSpace for XlaVectorMetric {
     fn len(&self) -> usize {
-        self.points.len()
+        self.native.len()
     }
 
     /// Native pair distance (off the hot path; keeps counting semantics
     /// identical to [`super::VectorMetric`]).
     fn dist(&self, i: usize, j: usize) -> f64 {
-        self.points.dist(i, j)
+        self.native.dist(i, j)
     }
 
     fn one_to_all(&self, i: usize, out: &mut [f64]) {
-        let d = self.points.dim();
-        let query: Vec<f32> = self.points.row(i).iter().map(|&v| v as f32).collect();
-        self.dispatches.set(self.dispatches.get() + 1);
-        self.exec
-            .run(&query, out)
-            .unwrap_or_else(|e| panic!("XLA one_to_all({i}) failed (d={d}): {e:#}"));
+        if self.breaker.is_open() {
+            self.fallbacks.set(self.fallbacks.get() + 1);
+            self.native.one_to_all(i, out);
+            return;
+        }
+        let query: Vec<f32> = self.points().row(i).iter().map(|&v| v as f32).collect();
+        if self.dispatch(|| self.exec.run(&query, out).map(|_| ())).is_err() {
+            // Budget exhausted: canonical native row (overwrites any
+            // partial artifact output, exact self-distance included).
+            self.native.one_to_all(i, out);
+            return;
+        }
         // The f32 norm-decomposition can leave a tiny positive residue at
         // the self-distance; clamp it for metric hygiene.
         out[i] = 0.0;
     }
 
     fn many_to_all(&self, ids: &[usize], out: &mut [f64]) {
-        let n = self.points.len();
+        let n = self.native.len();
         assert_eq!(out.len(), ids.len() * n, "out must be ids.len() × len()");
+        if self.breaker.is_open() {
+            self.fallbacks.set(self.fallbacks.get() + 1);
+            self.native.many_to_all(ids, out);
+            return;
+        }
         let Some(many) = &self.many else {
-            // Pre-PR-9 artifact set: loop the single-query artifact.
+            // Pre-PR-9 artifact set: loop the single-query artifact
+            // (each query carries its own retry/fallback handling).
             for (&i, row) in ids.iter().zip(out.chunks_mut(n.max(1))) {
                 self.one_to_all(i, row);
             }
             return;
         };
-        let d = self.points.dim();
+        let d = self.points().dim();
         let b = many.batch();
         let mut start = 0usize;
         while start < ids.len() {
             let end = (start + b).min(ids.len());
+            let block_out = &mut out[start * n..end * n];
+            if self.breaker.is_open() {
+                // Tripped mid-call: the remaining blocks serve natively.
+                self.fallbacks.set(self.fallbacks.get() + 1);
+                self.native.many_to_all(&ids[start..end], block_out);
+                start = end;
+                continue;
+            }
             let mut queries = Vec::with_capacity((end - start) * d);
             for &i in &ids[start..end] {
-                queries.extend(self.points.row(i).iter().map(|&v| v as f32));
+                queries.extend(self.points().row(i).iter().map(|&v| v as f32));
             }
-            self.dispatches.set(self.dispatches.get() + 1);
-            many.run(&queries, &mut out[start * n..end * n]).unwrap_or_else(|e| {
-                panic!("XLA many_to_all({:?}) failed (d={d}): {e:#}", &ids[start..end])
-            });
+            if self.dispatch(|| many.run(&queries, block_out).map(|_| ())).is_err() {
+                self.native.many_to_all(&ids[start..end], block_out);
+            }
             start = end;
         }
-        // Self-distance clamp, as in one_to_all.
+        // Self-distance clamp, as in one_to_all (a no-op on natively
+        // served rows, whose self-distance is exactly 0 already).
         for (qi, &i) in ids.iter().enumerate() {
             out[qi * n + i] = 0.0;
         }
+    }
+
+    fn set_threads(&self, threads: usize) {
+        // Threading only affects the native scans — artifact dispatches
+        // are whole-pass — but the fallback path must honour the CLI's
+        // --threads like any other backend.
+        self.native.set_threads(threads);
     }
 }
 
 #[cfg(test)]
 mod tests {
     // End-to-end coverage lives in rust/tests/runtime_integration.rs (it
-    // needs `make artifacts`); unit tests here would only re-test stubs.
+    // needs `make artifacts`); the retry/backoff/breaker state machine is
+    // unit-tested in crate::runtime::resilience, and the degradation
+    // contract (fault-injected dispatches keep serving bit-identical
+    // results via the canonical path) in tests/chaos_property.rs via
+    // crate::faults::FaultyMetric — unit tests here would only re-test
+    // stubs.
 }

@@ -19,11 +19,14 @@
 //! `xla` cargo feature. Default builds use [`stub`], an API-compatible
 //! stand-in whose constructors fail and whose [`artifacts_available`]
 //! returns `false` — the graceful-skip path every caller already has. The
-//! manifest [`registry`] is pure Rust and is always compiled.
+//! manifest [`registry`] and the dispatch retry/circuit-breaker policy
+//! ([`resilience`]) are pure Rust and are always compiled.
 
 pub mod registry;
+pub mod resilience;
 
 pub use registry::{ArtifactInfo, Registry};
+pub use resilience::{with_retry, Attempted, CircuitBreaker, RetryPolicy};
 
 // The gated modules reference the external `xla` crate: building with
 // `--features xla` but without the vendored dependency wired into

@@ -1,0 +1,220 @@
+//! Retry, backoff and circuit-breaker policy for fallible dispatch
+//! backends (the XLA/PJRT executors today; any future RPC shard
+//! tomorrow).
+//!
+//! This is the pure state-machine half of the backend-resilience ladder
+//! (DESIGN.md §Fault tolerance and degradation ladder): a bounded
+//! retry loop with exponential backoff around each dispatch, and a
+//! consecutive-failure circuit breaker that trips the caller into its
+//! canonical fallback path permanently once the backend is evidently
+//! down. Time is injected — callers pass the sleep function — so every
+//! test here and in the chaos suite runs without wall-clock sleeps and
+//! stays deterministic under Miri.
+
+use anyhow::Result;
+use std::cell::Cell;
+use std::time::Duration;
+
+/// Default per-call retry budget (retries, not attempts: a call makes at
+/// most `1 + MAX_RETRIES` dispatch attempts).
+pub const MAX_RETRIES: u32 = 3;
+
+/// Default consecutive retry-exhausted calls before the breaker opens.
+pub const BREAKER_THRESHOLD: u32 = 3;
+
+/// Bounded-retry schedule with exponential backoff.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Retries per call after the first attempt.
+    pub max_retries: u32,
+    /// Delay before the first retry; doubles per retry.
+    pub base_delay: Duration,
+    /// Ceiling on any single delay.
+    pub max_delay: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: MAX_RETRIES,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(100),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff delay before retry number `retry` (0-based):
+    /// `base · 2^retry`, capped at [`RetryPolicy::max_delay`].
+    pub fn delay(&self, retry: u32) -> Duration {
+        // Shift amount capped well below u32 overflow; the Duration
+        // multiply itself saturates.
+        self.base_delay.saturating_mul(1u32 << retry.min(20)).min(self.max_delay)
+    }
+}
+
+/// Outcome of [`with_retry`]: the final result plus how many retries the
+/// call consumed (0 when the first attempt succeeded).
+pub struct Attempted<T> {
+    /// `Ok` from the first succeeding attempt, or the *last* error once
+    /// the budget is exhausted.
+    pub result: Result<T>,
+    /// Retries performed (≤ `policy.max_retries`).
+    pub retries: u32,
+}
+
+/// Run `op` under `policy`, sleeping via the injected `sleep` between
+/// attempts. Deterministic: no clock is read — the only time effect is
+/// the delays handed to `sleep`, which tests capture instead of serving.
+pub fn with_retry<T>(
+    policy: &RetryPolicy,
+    mut sleep: impl FnMut(Duration),
+    mut op: impl FnMut() -> Result<T>,
+) -> Attempted<T> {
+    let mut retries = 0u32;
+    loop {
+        match op() {
+            Ok(v) => return Attempted { result: Ok(v), retries },
+            Err(e) => {
+                if retries >= policy.max_retries {
+                    return Attempted { result: Err(e), retries };
+                }
+                sleep(policy.delay(retries));
+                retries += 1;
+            }
+        }
+    }
+}
+
+/// Consecutive-failure circuit breaker.
+///
+/// Counts calls whose whole retry budget was exhausted; at
+/// `threshold` consecutive exhaustions it opens permanently and the
+/// owner routes every subsequent call to its canonical fallback. A
+/// success while still closed resets the streak. Interior mutability
+/// (`Cell`) lets it live behind the `&self` metric trait surface.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    consecutive: Cell<u32>,
+    open: Cell<bool>,
+}
+
+impl CircuitBreaker {
+    /// Breaker opening after `threshold` consecutive failures
+    /// (`threshold ≥ 1`; 1 means the first exhausted call trips it).
+    pub fn new(threshold: u32) -> Self {
+        CircuitBreaker { threshold: threshold.max(1), consecutive: Cell::new(0), open: Cell::new(false) }
+    }
+
+    /// Whether the breaker has tripped (permanent until rebuilt).
+    pub fn is_open(&self) -> bool {
+        self.open.get()
+    }
+
+    /// Record a successful call: closes nothing (opening is permanent)
+    /// but resets the consecutive-failure streak.
+    pub fn record_success(&self) {
+        self.consecutive.set(0);
+    }
+
+    /// Record a retry-exhausted call; returns whether the breaker is now
+    /// open.
+    pub fn record_failure(&self) -> bool {
+        let c = self.consecutive.get().saturating_add(1);
+        self.consecutive.set(c);
+        if c >= self.threshold {
+            self.open.set(true);
+        }
+        self.open.get()
+    }
+}
+
+impl Default for CircuitBreaker {
+    fn default() -> Self {
+        CircuitBreaker::new(BREAKER_THRESHOLD)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    #[test]
+    fn delay_doubles_and_caps() {
+        let p = RetryPolicy {
+            max_retries: 10,
+            base_delay: Duration::from_millis(2),
+            max_delay: Duration::from_millis(9),
+        };
+        assert_eq!(p.delay(0), Duration::from_millis(2));
+        assert_eq!(p.delay(1), Duration::from_millis(4));
+        assert_eq!(p.delay(2), Duration::from_millis(8));
+        assert_eq!(p.delay(3), Duration::from_millis(9)); // capped
+        assert_eq!(p.delay(40), Duration::from_millis(9)); // shift capped too
+    }
+
+    #[test]
+    fn with_retry_succeeds_after_transient_failures_no_wall_time() {
+        let p = RetryPolicy::default();
+        let mut slept = Vec::new();
+        let mut failures_left = 2;
+        let a = with_retry(
+            &p,
+            |d| slept.push(d),
+            || {
+                if failures_left > 0 {
+                    failures_left -= 1;
+                    Err(anyhow!("transient"))
+                } else {
+                    Ok(42)
+                }
+            },
+        );
+        assert_eq!(a.result.unwrap(), 42);
+        assert_eq!(a.retries, 2);
+        // Exponential schedule, captured rather than served.
+        assert_eq!(slept, vec![p.delay(0), p.delay(1)]);
+    }
+
+    #[test]
+    fn with_retry_exhausts_budget_and_returns_last_error() {
+        let p = RetryPolicy { max_retries: 2, ..RetryPolicy::default() };
+        let mut attempts = 0;
+        let a: Attempted<()> = with_retry(
+            &p,
+            |_| {},
+            || {
+                attempts += 1;
+                Err(anyhow!("down ({attempts})"))
+            },
+        );
+        assert_eq!(attempts, 3); // 1 attempt + 2 retries
+        assert_eq!(a.retries, 2);
+        assert!(a.result.unwrap_err().to_string().contains("down (3)"));
+    }
+
+    #[test]
+    fn breaker_trips_after_threshold_consecutive_exhaustions() {
+        let b = CircuitBreaker::new(3);
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        b.record_success(); // streak resets
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        assert!(b.record_failure()); // third consecutive: open
+        assert!(b.is_open());
+        // Opening is permanent: success no longer closes it.
+        b.record_success();
+        assert!(b.is_open());
+    }
+
+    #[test]
+    fn breaker_threshold_one_trips_immediately() {
+        let b = CircuitBreaker::new(1);
+        assert!(!b.is_open());
+        assert!(b.record_failure());
+        assert!(b.is_open());
+    }
+}

@@ -51,7 +51,7 @@
 use std::collections::HashMap;
 
 use crate::algo::sum_to_energy;
-use crate::data::Points;
+use crate::data::{DataError, Points};
 use crate::engine::{
     run_elimination, BestSumRule, EngineOpts, FullSpace, Kernel, Precision,
 };
@@ -301,6 +301,24 @@ impl<M: StreamStore> StreamingMedoid<M> {
         self.incumbent.as_ref().map(|inc| (self.ids[inc.slot], inc.sum))
     }
 
+    /// Validating counterpart of [`StreamingMedoid::insert`]: rejects a
+    /// wrong-length or non-finite point with a typed [`DataError`],
+    /// leaving the stream untouched. This is the boundary gate for
+    /// untrusted churn — a single NaN/inf coordinate admitted here would
+    /// poison the incumbent row and every flux-decayed bound, and the
+    /// elimination engine's poison defense only covers its own scans,
+    /// not the streaming bound algebra.
+    pub fn try_insert(&mut self, p: &[f64]) -> Result<u64, DataError> {
+        let d = self.metric.points().dim();
+        if p.len() != d {
+            return Err(DataError::DimMismatch { expected: d, got: p.len() });
+        }
+        if let Some(coord) = p.iter().position(|v| !v.is_finite()) {
+            return Err(DataError::NonFinite { row: self.ids.len(), coord, value: p[coord] });
+        }
+        Ok(self.insert(p))
+    }
+
     /// Insert a point; returns its stable id. Costs one counted
     /// distance (new point to the incumbent) when an incumbent anchor
     /// is live, zero otherwise.
@@ -315,9 +333,13 @@ impl<M: StreamStore> StreamingMedoid<M> {
     ///
     /// # Panics
     ///
-    /// If `p.len()` differs from the store's dimension.
+    /// If `p.len()` differs from the store's dimension. Trusted-producer
+    /// API: coordinates are not validated — untrusted churn goes through
+    /// [`StreamingMedoid::try_insert`].
     pub fn insert(&mut self, p: &[f64]) -> u64 {
         let d = self.metric.points().dim();
+        // PANICS: documented trusted-producer contract (`# Panics` above);
+        // the validating boundary is `try_insert`.
         assert_eq!(p.len(), d, "insert dimension {} does not match store dimension {d}", p.len());
         let new_slot = self.ids.len();
         self.metric.points_mut().push(p);
@@ -372,6 +394,8 @@ impl<M: StreamStore> StreamingMedoid<M> {
     /// If `id` is unknown — never issued, or already removed.
     pub fn remove(&mut self, id: u64) {
         let Some(slot) = self.slot_of.remove(&id) else {
+            // PANICS: documented contract (`# Panics` above) — removing
+            // an unknown/tombstoned id is a caller bug, not a data fault.
             panic!("remove of unknown id {id}");
         };
         let n = self.ids.len();
@@ -565,6 +589,32 @@ mod tests {
                 assert!(ub[j] >= truth * (1.0 - 1e-12) - 1e-9, "step {step} slot {j}: ub");
             }
         }
+    }
+
+    #[test]
+    fn try_insert_quarantines_poison_and_wrong_dims() {
+        let mut s = StreamingMedoid::new(uniform_cube(12, 3, 4), opts(1));
+        let before = s.medoid();
+        assert_eq!(
+            s.try_insert(&[1.0, 2.0]),
+            Err(DataError::DimMismatch { expected: 3, got: 2 })
+        );
+        let err = s.try_insert(&[0.5, f64::NAN, 0.5]).unwrap_err();
+        assert!(matches!(err, DataError::NonFinite { row: 12, coord: 1, value } if value.is_nan()));
+        assert_eq!(
+            s.try_insert(&[0.5, 0.5, f64::INFINITY]),
+            Err(DataError::NonFinite { row: 12, coord: 2, value: f64::INFINITY })
+        );
+        // The rejected inserts left the stream untouched: same live set,
+        // same bounds, bit-identical repeat query.
+        assert_eq!(s.len(), 12);
+        let again = s.medoid();
+        assert_eq!(again.slot, before.slot);
+        assert!(again.energy == before.energy);
+        // A clean insert still goes through and draws the next id.
+        let id = s.try_insert(&[0.5, 0.5, 0.5]).unwrap();
+        assert_eq!(id, 12);
+        assert_eq!(s.len(), 13);
     }
 
     #[test]

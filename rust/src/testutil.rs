@@ -24,6 +24,8 @@ pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(base_seed: u64, cases: us
             .wrapping_add(case as u64);
         let mut rng = Rng::new(derived);
         if let Err(msg) = prop(&mut rng) {
+            // PANICS: by design — this IS the property harness's failure
+            // report; the derived seed makes it reproducible.
             panic!(
                 "property failed (base_seed={base_seed}, case={case}, \
                  derived_seed={derived}): {msg}"
@@ -36,6 +38,7 @@ pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(base_seed: u64, cases: us
 pub fn check_one<F: FnMut(&mut Rng) -> Result<(), String>>(derived_seed: u64, mut prop: F) {
     let mut rng = Rng::new(derived_seed);
     if let Err(msg) = prop(&mut rng) {
+        // PANICS: by design — the harness's failure report (see `check`).
         panic!("property failed (derived_seed={derived_seed}): {msg}");
     }
 }

@@ -1,0 +1,212 @@
+//! Deterministic chaos-injection suite — the fault-tolerance headline
+//! property (DESIGN.md §Fault tolerance and degradation ladder):
+//!
+//! Under **every** seeded fault plan — NaN/±inf-poisoned fast-path rows,
+//! refused (truncated) fast batches, transient dispatch errors up to and
+//! beyond the retry budget — every query returns either the
+//! **bit-identical** medoid/energy of a clean run or a **typed error**,
+//! never a panic, across kernel {exact, fast} × precision {f64, f32} ×
+//! batch {1, 64, auto} × threads {1, 4} over the shared dataset zoo.
+//!
+//! The clean reference is the exact kernel (which PR 6's guard-band
+//! contract already pins bit-identical to every fast configuration, see
+//! `kernel_property.rs`), so one reference per dataset covers the whole
+//! faulted matrix. Fault schedules are pure functions of the plan seed
+//! and backoff delays are recorded rather than served
+//! (`trimed::faults`), so the suite is deterministic and spends no wall
+//! time — it runs unchanged under Miri at the zoo's reduced sizes.
+
+use std::time::Duration;
+
+use trimed::algo::{trimed_topk_with_opts, trimed_with_opts, TrimedOpts};
+use trimed::data::synthetic::uniform_cube;
+use trimed::data::{DataError, Points};
+use trimed::engine::{Kernel, Precision};
+use trimed::faults::{FaultPlan, FaultStats, FaultyMetric};
+use trimed::metric::{MetricSpace, VectorMetric};
+use trimed::runtime::RetryPolicy;
+use trimed::testutil::dataset_zoo;
+
+/// The fault plans the matrix runs under: heavy fast-path corruption,
+/// a flaky-then-recovering dispatcher, and everything at once.
+fn fault_plans() -> Vec<(&'static str, FaultPlan)> {
+    if cfg!(miri) {
+        // Interpreted execution: one plan that exercises every fault
+        // class (poison + decline + transient dispatch errors).
+        return vec![("chaos", FaultPlan::chaos(31))];
+    }
+    vec![
+        ("poison-storm", FaultPlan::poison_storm(101)),
+        ("flaky-backend", FaultPlan::flaky_backend(59, 7)),
+        ("chaos", FaultPlan::chaos(31)),
+    ]
+}
+
+fn accumulate(total: &mut FaultStats, s: FaultStats) {
+    total.poisoned += s.poisoned;
+    total.declined += s.declined;
+    total.injected_errors += s.injected_errors;
+    total.retries += s.retries;
+    total.fallbacks += s.fallbacks;
+}
+
+#[test]
+fn chaos_matrix_bit_identical_medoid_or_typed_error_never_a_panic() {
+    let configs: Vec<(usize, bool, usize)> = if cfg!(miri) {
+        vec![(8, false, 1)]
+    } else {
+        vec![(1, false, 1), (64, false, 4), (32, true, 1)]
+    };
+    let mut total = FaultStats::default();
+    for (name, pts) in dataset_zoo() {
+        let clean = VectorMetric::new(pts.clone());
+        let reference = trimed_with_opts(
+            &clean,
+            &TrimedOpts { seed: 0, batch: 16, kernel: Kernel::Exact, ..Default::default() },
+        );
+        for (plan_name, plan) in fault_plans() {
+            for kernel in [Kernel::Exact, Kernel::Fast] {
+                for precision in [Precision::F64, Precision::F32] {
+                    for &(batch, batch_auto, threads) in &configs {
+                        let m = FaultyMetric::new(
+                            VectorMetric::new(pts.clone()),
+                            plan.clone(),
+                        );
+                        let r = trimed_with_opts(
+                            &m,
+                            &TrimedOpts {
+                                seed: 0,
+                                batch,
+                                batch_auto,
+                                threads,
+                                kernel,
+                                precision,
+                                ..Default::default()
+                            },
+                        );
+                        let ctx = format!(
+                            "{name} plan={plan_name} kernel={} {} B={batch} auto={batch_auto} \
+                             t={threads}",
+                            kernel.name(),
+                            precision.name(),
+                        );
+                        assert_eq!(r.medoid, reference.medoid, "{ctx}: medoid diverged");
+                        assert!(
+                            r.energy == reference.energy,
+                            "{ctx}: energy bits diverged: {} vs {}",
+                            r.energy,
+                            reference.energy
+                        );
+                        let s = m.stats();
+                        if plan.dispatch_failures > 0 {
+                            // Round 1 always dispatches at least one
+                            // canonical pass, so the flaky plans must
+                            // actually have injected and recovered.
+                            assert!(
+                                s.injected_errors > 0 && s.retries > 0,
+                                "{ctx}: dispatch faults never fired: {s:?}"
+                            );
+                        }
+                        accumulate(&mut total, s);
+                    }
+                }
+            }
+        }
+    }
+    // The matrix as a whole must have exercised every fault class —
+    // a silent no-fault pass would prove nothing.
+    assert!(total.poisoned > 0, "no fast row was ever poisoned: {total:?}");
+    assert!(total.declined > 0, "no fast call was ever refused: {total:?}");
+    assert!(total.injected_errors > 0 && total.retries > 0, "no dispatch faults: {total:?}");
+    assert!(total.fallbacks > 0, "no retry budget was ever exhausted: {total:?}");
+}
+
+#[test]
+fn chaos_topk_keeps_the_ranked_set_bit_identical() {
+    for (name, pts) in dataset_zoo() {
+        let clean = VectorMetric::new(pts.clone());
+        let k = 5.min(clean.len());
+        let reference = trimed_topk_with_opts(
+            &clean,
+            k,
+            &TrimedOpts { seed: 2, batch: 8, kernel: Kernel::Exact, ..Default::default() },
+        );
+        for (plan_name, plan) in fault_plans() {
+            for precision in [Precision::F64, Precision::F32] {
+                let m = FaultyMetric::new(VectorMetric::new(pts.clone()), plan.clone());
+                let f = trimed_topk_with_opts(
+                    &m,
+                    k,
+                    &TrimedOpts {
+                        seed: 2,
+                        batch: 8,
+                        kernel: Kernel::Fast,
+                        precision,
+                        ..Default::default()
+                    },
+                );
+                let p = precision.name();
+                assert_eq!(
+                    f.elements, reference.elements,
+                    "{name} plan={plan_name} {p}: top-k set diverged"
+                );
+                assert!(
+                    f.energies.iter().zip(&reference.energies).all(|(a, b)| a == b),
+                    "{name} plan={plan_name} {p}: top-k energy bits diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn retry_exhaustion_trips_the_breaker_and_native_serving_stays_identical() {
+    // The acceptance demonstration: a backend that fails every dispatch
+    // forever. The resilience ladder retries with bounded backoff,
+    // exhausts each call's budget, trips the breaker after the
+    // consecutive-failure threshold — and the run still returns the
+    // clean run's exact bits because every pass was served by the
+    // canonical native path.
+    let n = if cfg!(miri) { 60 } else { 500 };
+    let pts = uniform_cube(n, 3, 21);
+    let clean = VectorMetric::new(pts.clone());
+    let reference = trimed_with_opts(
+        &clean,
+        &TrimedOpts { seed: 4, batch: 8, ..Default::default() },
+    );
+
+    let m = FaultyMetric::new(
+        VectorMetric::new(pts),
+        FaultPlan::flaky_backend(7, u32::MAX),
+    );
+    let r = trimed_with_opts(&m, &TrimedOpts { seed: 4, batch: 8, ..Default::default() });
+    assert_eq!(r.medoid, reference.medoid, "degraded serving moved the medoid");
+    assert!(r.energy == reference.energy, "degraded serving changed energy bits");
+
+    let s = m.stats();
+    assert!(m.degraded(), "breaker never opened: {s:?}");
+    assert!(s.fallbacks > 0 && s.retries > 0);
+    // Backoff discipline: one recorded delay per retry, every delay
+    // within the policy ceiling, none actually slept (the suite has no
+    // wall-time dependence — also what keeps it Miri-clean).
+    let policy = RetryPolicy::default();
+    let sleeps = m.recorded_sleeps();
+    assert_eq!(sleeps.len() as u64, s.retries);
+    assert!(!sleeps.is_empty());
+    assert!(sleeps.iter().all(|d| *d > Duration::ZERO && *d <= policy.max_delay));
+}
+
+#[test]
+fn textual_poison_stops_at_the_typed_boundary() {
+    // "NaN" / "inf" parse cleanly as f64, so the quarantine gate is the
+    // only thing between a poisoned input file and the engine — this is
+    // the "typed error" arm of the headline property.
+    let err = Points::try_new(3, vec![1.0, f64::NAN, 0.5]).unwrap_err();
+    assert!(matches!(err, DataError::NonFinite { row: 0, coord: 1, value: _ }));
+    let err = Points::try_new(2, vec![0.0, 1.0, f64::NEG_INFINITY, 2.0]).unwrap_err();
+    assert!(matches!(err, DataError::NonFinite { row: 1, coord: 0, value: _ }));
+    // The typed gate composes with growth: a clean set stays clean.
+    let mut pts = Points::try_new(2, vec![0.0, 1.0, 2.0, 3.0]).unwrap();
+    assert!(pts.try_push(&[4.0, f64::INFINITY]).is_err());
+    assert_eq!(pts.len(), 2);
+}

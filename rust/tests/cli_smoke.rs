@@ -1,0 +1,121 @@
+//! Process-level CLI smoke: user-facing failures must exit nonzero with
+//! a one-line `error:` message (never a panic/backtrace), and the
+//! `--on-bad-data` quarantine policies must behave end to end on a
+//! poisoned TSV — the boundary half of the fault-tolerance ladder
+//! (DESIGN.md §Fault tolerance and degradation ladder) as the user
+//! actually hits it.
+#![cfg(not(miri))] // spawns the compiled binary
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_trimed"))
+}
+
+fn write_tsv(name: &str, body: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("trimed_cli_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    std::fs::write(&path, body).unwrap();
+    path
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn stdout_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// A failure must be a single `error:` line on stderr — no panic
+/// message, no backtrace — and a nonzero exit code.
+fn assert_clean_failure(out: &Output, needle: &str) {
+    let err = stderr_of(out);
+    assert!(!out.status.success(), "expected failure, got success\nstderr: {err}");
+    assert_eq!(out.status.code(), Some(1), "stderr: {err}");
+    assert!(err.starts_with("error: "), "stderr not an error line: {err}");
+    assert_eq!(err.trim_end().lines().count(), 1, "multi-line error: {err}");
+    assert!(!err.contains("panicked"), "panic leaked to the user: {err}");
+    assert!(err.contains(needle), "missing {needle:?} in: {err}");
+}
+
+#[test]
+fn poisoned_tsv_is_rejected_with_the_offending_line() {
+    let path = write_tsv(
+        "poison.tsv",
+        "# d=2\n0.0\t0.0\n1.0\t0.0\nNaN\t2.0\n0.0\t1.0\n2.0\t2.0\n",
+    );
+    let out = bin()
+        .args(["medoid", "--data", &format!("file:{}", path.display())])
+        .output()
+        .unwrap();
+    assert_clean_failure(&out, "non-finite");
+    assert!(stderr_of(&out).contains("line 4"), "stderr: {}", stderr_of(&out));
+}
+
+#[test]
+fn drop_policy_serves_past_the_poison_and_reports_the_count() {
+    let path = write_tsv(
+        "poison_drop.tsv",
+        "# d=2\n0.0\t0.0\n1.0\t0.0\nNaN\t2.0\n0.0\t1.0\ninf\t-1.0\n2.0\t2.0\n",
+    );
+    let out = bin()
+        .args([
+            "medoid",
+            "--data",
+            &format!("file:{}", path.display()),
+            "--on-bad-data",
+            "drop",
+        ])
+        .output()
+        .unwrap();
+    let (o, e) = (stdout_of(&out), stderr_of(&out));
+    assert!(out.status.success(), "stdout: {o}\nstderr: {e}");
+    assert!(e.contains("dropped 2 row(s)"), "stderr: {e}");
+    assert!(o.contains("N=4"), "dropped rows still counted: {o}");
+    assert!(o.contains("medoid="), "no result line: {o}");
+}
+
+#[test]
+fn ragged_tsv_is_a_hard_error_under_both_policies() {
+    let path = write_tsv("ragged.tsv", "1.0\t2.0\n3.0\t4.0\t5.0\n");
+    for policy in ["reject", "drop"] {
+        let out = bin()
+            .args([
+                "medoid",
+                "--data",
+                &format!("file:{}", path.display()),
+                "--on-bad-data",
+                policy,
+            ])
+            .output()
+            .unwrap();
+        assert_clean_failure(&out, "expected 2 columns");
+    }
+}
+
+#[test]
+fn bad_option_values_fail_with_usage_hints_not_panics() {
+    let path = write_tsv("ok.tsv", "1.0\t2.0\n3.0\t4.0\n");
+    let data = format!("file:{}", path.display());
+    let out = bin()
+        .args(["medoid", "--data", &data, "--on-bad-data", "ignore"])
+        .output()
+        .unwrap();
+    assert_clean_failure(&out, "reject");
+    let out = bin().args(["medoid", "--data", &data, "--batch", "zero"]).output().unwrap();
+    assert_clean_failure(&out, "--batch");
+    let out = bin().args(["medoid", "--bogus-option", "1"]).output().unwrap();
+    assert_clean_failure(&out, "unknown option");
+}
+
+#[test]
+fn missing_file_fails_cleanly() {
+    let out = bin()
+        .args(["medoid", "--data", "file:/nonexistent/nope.tsv"])
+        .output()
+        .unwrap();
+    assert_clean_failure(&out, "nope.tsv");
+}

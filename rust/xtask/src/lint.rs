@@ -28,6 +28,14 @@
 //! - **R7 soundness-config-present** — `#![deny(unsafe_op_in_unsafe_fn)]`
 //!   stays in `lib.rs` and the workspace lint table keeps the unsafe
 //!   hygiene denies; guards against a quiet revert of the hardening.
+//! - **R8 no-unaudited-panics** — non-test code contains no `.unwrap()`,
+//!   `.expect(` or `panic!` without a `// PANICS:` audit comment on the
+//!   same line or within the six lines above. Every surviving panic site
+//!   must be a documented caller contract or a proven invariant; data
+//!   faults take the typed-error / degradation paths instead (DESIGN.md
+//!   §Fault tolerance and degradation ladder). `assert!` family macros
+//!   are out of scope (invariant checks are their job), as is
+//!   `.expect_err(`, a test-only idiom.
 //!
 //! All rules are lexical over the [`crate::scan`] channels; see that
 //! module for why this is deliberate (offline, dependency-free builds).
@@ -267,6 +275,27 @@ fn squared_difference_product(code: &str) -> bool {
     false
 }
 
+/// R8: the panicking construct on this code line, if any. Lexical by
+/// design: `.unwrap()` and `.expect(` are plain substring checks (the
+/// string channel is blanked, and `.expect_err(` / `.unwrap_or(` do not
+/// contain either needle), `panic!` is a word-boundary match so
+/// `should_panic` attributes and `std::panic::` paths don't fire.
+fn panic_site(code: &str) -> Option<&'static str> {
+    if code.contains(".unwrap()") {
+        return Some(".unwrap()");
+    }
+    if code.contains(".expect(") {
+        return Some(".expect(");
+    }
+    let chars: Vec<char> = code.chars().collect();
+    for pos in word_positions(code, "panic") {
+        if chars.get(pos + "panic".len()) == Some(&'!') {
+            return Some("panic!");
+        }
+    }
+    None
+}
+
 /// R6 pattern (b): self-square via FMA, `x.mul_add(x, ..)` with the
 /// same identifier on both sides.
 fn self_square_mul_add(code: &str) -> bool {
@@ -371,6 +400,25 @@ pub fn lint_source(relpath: &str, text: &str) -> Vec<Violation> {
                             .to_string(),
                     );
                     break;
+                }
+            }
+        }
+        // R8
+        if !s.scopes[i].mods.iter().any(|m| m == "tests") {
+            if let Some(what) = panic_site(code) {
+                let lo = i.saturating_sub(6);
+                let audited = s.comment[lo..=i].iter().any(|c| c.contains("PANICS:"));
+                if !audited {
+                    push(
+                        i + 1,
+                        "R8-no-unaudited-panics",
+                        format!(
+                            "`{what}` in non-test code without a `// PANICS:` \
+                             audit comment on the same line or within 6 lines \
+                             above — document the invariant/contract or \
+                             return a typed error"
+                        ),
+                    );
                 }
             }
         }
@@ -586,6 +634,50 @@ mod tests {
         assert!(!rules("harness/x.rs", var).contains(&"R6-no-handrolled-distance"));
         let fma_mixed = "let y = a.mul_add(b, c);\n";
         assert!(!rules("harness/x.rs", fma_mixed).contains(&"R6-no-handrolled-distance"));
+    }
+
+    #[test]
+    fn r8_flags_unaudited_panics_in_non_test_code() {
+        let unwrap = "fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n";
+        assert!(rules("m.rs", unwrap).contains(&"R8-no-unaudited-panics"));
+        let expect = "fn f(x: Option<u8>) -> u8 {\n    x.expect(\"set by caller\")\n}\n";
+        assert!(rules("m.rs", expect).contains(&"R8-no-unaudited-panics"));
+        let bang = "fn f() {\n    panic!(\"boom\");\n}\n";
+        assert!(rules("m.rs", bang).contains(&"R8-no-unaudited-panics"));
+    }
+
+    #[test]
+    fn r8_accepts_audited_sites_and_test_code() {
+        let above = concat!(
+            "fn f(x: Option<u8>) -> u8 {\n",
+            "    // PANICS: unreachable — x was checked by the caller.\n",
+            "    x.unwrap()\n}\n"
+        );
+        assert!(!rules("m.rs", above).contains(&"R8-no-unaudited-panics"));
+        let same_line =
+            "fn f(x: Option<u8>) -> u8 {\n    x.unwrap() // PANICS: checked above.\n}\n";
+        assert!(!rules("m.rs", same_line).contains(&"R8-no-unaudited-panics"));
+        let tests = concat!(
+            "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n",
+            "        Some(1u8).unwrap();\n        panic!(\"test-only\");\n    }\n}\n"
+        );
+        assert!(!rules("m.rs", tests).contains(&"R8-no-unaudited-panics"));
+        let far = "fn f() {\n    // PANICS: too far away.\n\n\n\n\n\n\n    g.unwrap()\n}\n";
+        assert!(rules("m.rs", far).contains(&"R8-no-unaudited-panics"));
+    }
+
+    #[test]
+    fn r8_is_not_fooled_by_lookalikes() {
+        let t = concat!(
+            "fn f() {\n",
+            "    let a = x.unwrap_or(0);\n",
+            "    let b = r.expect_err(\"negative test idiom\");\n",
+            "    let c = std::panic::catch_unwind(g);\n",
+            "    let s = \"strings are blanked: .unwrap() .expect( panic!\";\n",
+            "    let _ = (a, b, c, s); // mention of panic! in a comment\n",
+            "}\n"
+        );
+        assert!(!rules("m.rs", t).contains(&"R8-no-unaudited-panics"));
     }
 
     #[test]

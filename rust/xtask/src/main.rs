@@ -1,7 +1,8 @@
 //! `cargo run -p xtask -- lint` — the repo-specific soundness lint.
 //!
 //! Walks `src/**/*.rs` of the `trimed` crate and enforces the audited
-//! unsafe-kernel contracts (rules R1–R7, documented in [`lint`]).
+//! unsafe-kernel contracts and panic hygiene (rules R1–R8, documented
+//! in [`lint`]).
 //! Exit status is non-zero on any violation; CI runs this blocking in
 //! the `lint` job. `--root <dir>` points at an alternative crate root
 //! (a directory containing `Cargo.toml` and `src/`), which the fixture

@@ -1,0 +1,16 @@
+// Seeded violation: the `.unwrap()` and `panic!` below sit in non-test
+// code with no panic-audit comment anywhere near them. xtask lint must
+// fail this tree with R8-no-unaudited-panics.
+
+/// Returns the first element.
+pub fn first(xs: &[u64]) -> u64 {
+    *xs.first().unwrap()
+}
+
+/// Parses a header line.
+pub fn header(line: &str) -> usize {
+    match line.strip_prefix("# d=") {
+        Some(d) => d.parse().expect("well-formed header"),
+        None => panic!("missing header"),
+    }
+}

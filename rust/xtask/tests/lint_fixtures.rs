@@ -59,6 +59,11 @@ fn seeded_handrolled_distance_trips_r6() {
 }
 
 #[test]
+fn seeded_unaudited_panic_trips_r8() {
+    assert_trips("unaudited_panic", "R8-no-unaudited-panics");
+}
+
+#[test]
 fn fixture_roots_without_soundness_config_trip_r7() {
     // Fixture trees ship no Cargo.toml / lib.rs, so the configuration
     // presence checks must fire as well.
